@@ -1,0 +1,177 @@
+"""Shared benchmark harness: tiny-model reproductions of paper tables.
+
+Every table benchmark trains/calibrates small same-family models on the
+synthetic Zipf-Markov corpus and reports log-pplx (the paper's quality
+metric; absolute Gemma/Mistral numbers need the original checkpoints +
+C4 -- DESIGN.md §5). Trained variants are cached on disk keyed by their
+QuantConfig so the full suite re-runs quickly.
+
+CSV contract (benchmarks.run): name,us_per_call,derived
+  us_per_call -- wall time of one jitted eval forward
+  derived     -- log pplx (NLL) of the row's served precision
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.matquant import cross_entropy
+from repro.core.quant import QuantConfig
+from repro.data import DataConfig, SyntheticCorpus
+from repro.models import api
+from repro.optim import OptConfig
+from repro.train import init_train_state, make_train_step, omniquant_calib
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench_cache")
+ARCH = "gemma2_2b"          # paper family; reduced() for CPU
+PRETRAIN_STEPS = 250
+QAT_STEPS = 120
+BATCH, SEQ = 8, 64
+DATA_SEED, EVAL_SEED = 11, 999
+
+
+def tiny_cfg(qcfg: QuantConfig | None = None):
+    cfg = get_config(ARCH).reduced().replace(num_layers=2)
+    if qcfg is not None:
+        cfg = cfg.replace(quant=qcfg)
+    return cfg
+
+
+def _corpus(cfg):
+    return SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=SEQ, seed=DATA_SEED))
+
+
+def _key_of(tag: str, qcfg: QuantConfig) -> str:
+    blob = json.dumps([tag, qcfg.bitwidths, qcfg.parent_bits, qcfg.mode,
+                       qcfg.scope, qcfg.extra_precision, qcfg.weights,
+                       qcfg.codistill], default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def _cache_load(key: str, like):
+    from repro.runtime import checkpoint as ck
+    path = os.path.join(CACHE_DIR, key)
+    step = ck.latest_step(path)
+    if step is None:
+        return None
+    try:
+        return ck.restore(path, step, like)
+    except Exception:
+        return None
+
+
+def _cache_save(key: str, tree):
+    from repro.runtime import checkpoint as ck
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    ck.save(os.path.join(CACHE_DIR, key), 0, tree)
+
+
+def train_qat(qcfg: QuantConfig, steps: int = QAT_STEPS, *, from_pretrained=True,
+              tag: str = "qat", lr: float = 5e-3, seed: int = 0):
+    """Train (or load cached) a tiny model with the given quant config."""
+    cfg = tiny_cfg(qcfg)
+    key = _key_of(f"{tag}-{steps}-{from_pretrained}-{lr}-{seed}", qcfg)
+    opt = OptConfig(lr=lr, total_steps=steps, warmup_steps=5)
+    params, opt_state = init_train_state(jax.random.PRNGKey(seed), cfg, opt)
+    cached = _cache_load(key, params)
+    if cached is not None:
+        return cached, cfg
+    if from_pretrained:
+        params = pretrained_base()[0]
+    step = jax.jit(make_train_step(cfg, opt))
+    corpus = _corpus(cfg)
+    for i in range(steps):
+        b = corpus.batch(i, BATCH, SEQ)
+        params, opt_state, _ = step(params, opt_state,
+                                    {k: jnp.asarray(v) for k, v in b.items()})
+    _cache_save(key, params)
+    return params, cfg
+
+
+def pretrained_base():
+    """One fp32 base model all methods start from (paper: a trained LLM)."""
+    qcfg = QuantConfig(mode="bf16")
+    cfg = tiny_cfg(qcfg)
+    key = _key_of(f"pretrain-{PRETRAIN_STEPS}", qcfg)
+    opt = OptConfig(lr=1e-2, total_steps=PRETRAIN_STEPS, warmup_steps=10)
+    params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    cached = _cache_load(key, params)
+    if cached is not None:
+        return cached, cfg
+    step = jax.jit(make_train_step(cfg, opt))
+    corpus = _corpus(cfg)
+    for i in range(PRETRAIN_STEPS):
+        b = corpus.batch(i, BATCH, SEQ)
+        params, opt_state, _ = step(params, opt_state,
+                                    {k: jnp.asarray(v) for k, v in b.items()})
+    _cache_save(key, params)
+    return params, cfg
+
+
+def calibrate_omniquant(qcfg: QuantConfig, steps_per_layer: int = 60):
+    """OmniQuant-calibrate the pretrained base under the given config."""
+    assert qcfg.mode == "omniquant"
+    cfg = tiny_cfg(qcfg)
+    base, _ = pretrained_base()
+    params = api.init(jax.random.PRNGKey(0), cfg)  # structure w/ aux
+    # copy base weights into the omniquant-structured params
+    params = _merge_weights(params, base)
+    key = _key_of(f"omni-{steps_per_layer}", qcfg)
+    cached = _cache_load(key, params)
+    if cached is not None:
+        return cached, cfg
+    corpus = _corpus(cfg)
+    calib = jnp.asarray(corpus.batch(90_000, 8, SEQ)["tokens"])
+    params, _ = omniquant_calib.calibrate(params, cfg, calib,
+                                          steps_per_layer=steps_per_layer,
+                                          lr=5e-3)
+    _cache_save(key, params)
+    return params, cfg
+
+
+def _merge_weights(dst, src):
+    """Copy every leaf of src into dst where key-paths match."""
+    flat_src, _ = jax.tree_util.tree_flatten_with_path(src)
+    src_map = {jax.tree_util.keystr(p): v for p, v in flat_src}
+    flat_dst, treedef = jax.tree_util.tree_flatten_with_path(dst)
+    merged = [src_map.get(jax.tree_util.keystr(p), v) for p, v in flat_dst]
+    return jax.tree_util.tree_unflatten(treedef, merged)
+
+
+def eval_nll(params, cfg, bits, n_batches: int = 4) -> tuple[float, float]:
+    """(log pplx, us/call) on held-out data at the given precision.
+
+    Same corpus (same Markov structure), disjoint step range -- the
+    held-out set is fresh samples of the SAME language."""
+    corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=SEQ, seed=DATA_SEED))
+    fwd = jax.jit(lambda p, t: api.forward(p, {"tokens": t}, cfg, bits=bits)[0])
+    tot, n = 0.0, 0
+    t_us = None
+    for i in range(n_batches):
+        b = corpus.batch(EVAL_SEED + i, 16, SEQ)
+        toks, labels = jnp.asarray(b["tokens"]), jnp.asarray(b["labels"])
+        logits = fwd(params, toks)
+        if i == 1:  # time a warm call
+            t0 = time.perf_counter()
+            jax.block_until_ready(fwd(params, toks))
+            t_us = (time.perf_counter() - t0) * 1e6
+        tot += float(cross_entropy(logits, labels))
+        n += 1
+    return tot / n, t_us or 0.0
+
+
+def fmt_rows(rows):
+    out = []
+    for name, us, derived in rows:
+        out.append(f"{name},{us:.1f},{derived:.4f}")
+    return "\n".join(out)

@@ -1,0 +1,27 @@
+"""Figure 2/3: layer-wise Mix'n'Match Pareto sweep on the MatQuant model.
+
+derived = log pplx at each effective-bits point (pyramid strategy, the
+paper's winner), demonstrating the dense accuracy-vs-cost trade-off."""
+
+from repro.core import mixnmatch
+from repro.core.quant import QuantConfig
+from repro.models import api
+
+import jax.numpy as jnp
+
+from benchmarks.common import eval_nll, train_qat
+
+
+def run():
+    mat, cfg = train_qat(QuantConfig(mode="qat", bitwidths=(8, 4, 2),
+                                     weights=(0.1, 0.1, 1.0)), tag="t2mat")
+    rows = []
+    for eff, assignment in mixnmatch.sweep(cfg.num_layers, points=7):
+        nll, us = eval_nll(mat, cfg, list(assignment))
+        rows.append((f"fig2/mixnmatch/bits_{eff:.2f}", us, nll))
+    # strategy comparison at a fixed budget (Appendix B)
+    for strat in mixnmatch.STRATEGIES:
+        a = mixnmatch.assign(cfg.num_layers, 5.0, strat)
+        nll, us = eval_nll(mat, cfg, a)
+        rows.append((f"fig2/strategy_{strat}/bits_5.0", us, nll))
+    return rows

@@ -1,0 +1,44 @@
+"""Benchmark runner: one function per paper table. Prints
+``name,us_per_call,derived`` CSV (derived = log pplx unless noted)."""
+
+import sys
+import time
+
+
+TABLES = [
+    "table1_omniquant",
+    "table2_qat",
+    "table3_weightings",
+    "table4_codistill",
+    "table5_single_precision",
+    "table6_ffn_attn",
+    "table7_extra_precision",
+    "table8_ep_codistill",
+    "fig2_mixnmatch",
+    "fig1c_distribution",
+]
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1:] or TABLES
+    print("name,us_per_call,derived")
+    for name in TABLES:
+        if name not in only:
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(f"benchmarks.{name}")
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the suite running
+            print(f"{name}/ERROR,0.0,nan  # {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            continue
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]:.4f}")
+        print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

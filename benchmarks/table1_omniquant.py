@@ -1,0 +1,28 @@
+"""Table 1: MatQuant with OmniQuant vs per-precision baselines vs sliced
+int8, across int8/6/4/3/2 (int6/int3 interpolated, never trained)."""
+
+from repro.core.quant import QuantConfig
+
+from benchmarks.common import calibrate_omniquant, eval_nll
+
+
+def run():
+    mat_q = QuantConfig(mode="omniquant", bitwidths=(8, 4, 2),
+                        weights=(0.1, 0.1, 1.0))
+    mat, cfg_m = calibrate_omniquant(mat_q)
+    rows = []
+    # per-precision baselines (explicitly calibrated for one bit-width)
+    for b in (8, 6, 4, 3, 2):
+        base_q = QuantConfig(mode="omniquant", bitwidths=(b,), weights=(1.0,))
+        base, cfg_b = calibrate_omniquant(base_q)
+        nll_b, us = eval_nll(base, cfg_b, b)
+        rows.append((f"table1/omniquant/int{b}/baseline", us, nll_b))
+        nll_m, us = eval_nll(mat, cfg_m, b)
+        rows.append((f"table1/omniquant/int{b}/matquant", us, nll_m))
+    # sliced int8 baseline (no matquant training) at lower precisions
+    base8, cfg8 = calibrate_omniquant(
+        QuantConfig(mode="omniquant", bitwidths=(8,), weights=(1.0,)))
+    for b in (4, 2):
+        nll_s, us = eval_nll(base8, cfg8, b)
+        rows.append((f"table1/omniquant/int{b}/sliced_int8", us, nll_s))
+    return rows

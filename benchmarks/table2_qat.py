@@ -1,0 +1,23 @@
+"""Table 2: MatQuant with QAT vs per-precision QAT baselines vs sliced."""
+
+from repro.core.quant import QuantConfig
+
+from benchmarks.common import eval_nll, train_qat
+
+
+def run():
+    mat_q = QuantConfig(mode="qat", bitwidths=(8, 4, 2), weights=(0.1, 0.1, 1.0))
+    mat, cfg_m = train_qat(mat_q, tag="t2mat")
+    base8, cfg8 = train_qat(QuantConfig(mode="qat", bitwidths=(8,),
+                                        weights=(1.0,)), tag="t2b8")
+    rows = []
+    for b in (8, 6, 4, 3, 2):
+        base_q = QuantConfig(mode="qat", bitwidths=(b,), weights=(1.0,))
+        base, cfg_b = train_qat(base_q, tag=f"t2b{b}")
+        nll_b, us = eval_nll(base, cfg_b, b)
+        rows.append((f"table2/qat/int{b}/baseline", us, nll_b))
+        nll_m, us = eval_nll(mat, cfg_m, b)
+        rows.append((f"table2/qat/int{b}/matquant", us, nll_m))
+        nll_s, us = eval_nll(base8, cfg8, b)
+        rows.append((f"table2/qat/int{b}/sliced_int8", us, nll_s))
+    return rows

@@ -1,0 +1,19 @@
+"""Table 3: loss re-weighting (lambda_8, lambda_4, lambda_2) ablation."""
+
+from repro.core.quant import QuantConfig
+
+from benchmarks.common import eval_nll, train_qat
+
+WEIGHTINGS = [(0.1, 0.1, 1.0), (0.3, 0.3, 1.0), (0.5, 0.5, 1.0)]
+
+
+def run():
+    rows = []
+    for w in WEIGHTINGS:
+        q = QuantConfig(mode="qat", bitwidths=(8, 4, 2), weights=w)
+        params, cfg = train_qat(q, tag=f"t3w{w}")
+        for b in (8, 4, 2):
+            nll, us = eval_nll(params, cfg, b)
+            tag = f"{w[0]:g}_{w[1]:g}_{w[2]:g}"
+            rows.append((f"table3/weights_{tag}/int{b}", us, nll))
+    return rows

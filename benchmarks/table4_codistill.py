@@ -1,0 +1,24 @@
+"""Table 4: co-distillation ablation -- [8,4,2], [8,4,8->2], [8,4,2,8->2]."""
+
+from repro.core.quant import QuantConfig
+
+from benchmarks.common import eval_nll, train_qat
+
+CONFIGS = {
+    "8_4_2": QuantConfig(mode="qat", bitwidths=(8, 4, 2),
+                         weights=(0.1, 0.1, 1.0)),
+    "8_4_8to2": QuantConfig(mode="qat", bitwidths=(8, 4),
+                            weights=(0.1, 0.1), codistill=((8, 2),)),
+    "8_4_2_8to2": QuantConfig(mode="qat", bitwidths=(8, 4, 2),
+                              weights=(0.1, 0.1, 1.0), codistill=((8, 2),)),
+}
+
+
+def run():
+    rows = []
+    for name, q in CONFIGS.items():
+        params, cfg = train_qat(q, tag=f"t4{name}")
+        for b in (8, 4, 2):
+            nll, us = eval_nll(params, cfg, b)
+            rows.append((f"table4/{name}/int{b}", us, nll))
+    return rows

@@ -1,0 +1,29 @@
+"""Table 5: Single-Precision MatQuant (R={2}, int8 parent) vs MatQuant
+vs explicitly-int2 baseline."""
+
+from repro.core.quant import QuantConfig
+
+from benchmarks.common import eval_nll, train_qat
+
+
+def run():
+    rows = []
+    sp, cfg_sp = train_qat(QuantConfig(mode="qat", bitwidths=(2,),
+                                       weights=(1.0,), parent_bits=8),
+                           tag="t5sp")
+    mat, cfg_m = train_qat(QuantConfig(mode="qat", bitwidths=(8, 4, 2),
+                                       weights=(0.1, 0.1, 1.0)), tag="t2mat")
+    base2, cfg_b = train_qat(QuantConfig(mode="qat", bitwidths=(2,),
+                                         weights=(1.0,), parent_bits=2),
+                             tag="t5b2")
+    nll, us = eval_nll(sp, cfg_sp, 2)
+    rows.append(("table5/int2/sp_matquant", us, nll))
+    nll, us = eval_nll(mat, cfg_m, 2)
+    rows.append(("table5/int2/matquant", us, nll))
+    nll, us = eval_nll(base2, cfg_b, 2)
+    rows.append(("table5/int2/baseline", us, nll))
+    # Tables 23/24: the S.P. parent evaluated at int8/int4 (sliced post hoc)
+    for b in (8, 4):
+        nll, us = eval_nll(sp, cfg_sp, b)
+        rows.append((f"table5/int{b}/sp_matquant_sliced", us, nll))
+    return rows

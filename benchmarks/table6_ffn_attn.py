@@ -1,0 +1,27 @@
+"""Table 6: FFN + Attention quantization with QAT (scope='ffn+attn');
+the paper finds baseline int2 destabilizes while MatQuant trains."""
+
+from repro.core.quant import QuantConfig
+
+from benchmarks.common import eval_nll, train_qat
+
+
+def run():
+    rows = []
+    mat, cfg_m = train_qat(
+        QuantConfig(mode="qat", bitwidths=(8, 4, 2), weights=(0.1, 0.1, 1.0),
+                    scope="ffn+attn"), tag="t6mat")
+    base2, cfg_b = train_qat(
+        QuantConfig(mode="qat", bitwidths=(2,), weights=(1.0,),
+                    parent_bits=2, scope="ffn+attn"), tag="t6b2")
+    sp, cfg_sp = train_qat(
+        QuantConfig(mode="qat", bitwidths=(2,), weights=(1.0,),
+                    parent_bits=8, scope="ffn+attn"), tag="t6sp")
+    for b in (8, 4, 2):
+        nll, us = eval_nll(mat, cfg_m, b)
+        rows.append((f"table6/ffn_attn/int{b}/matquant", us, nll))
+    nll, us = eval_nll(base2, cfg_b, 2)
+    rows.append(("table6/ffn_attn/int2/baseline", us, nll))
+    nll, us = eval_nll(sp, cfg_sp, 2)
+    rows.append(("table6/ffn_attn/int2/sp_matquant", us, nll))
+    return rows

@@ -1,0 +1,18 @@
+"""Table 8: co-distillation within Extra-Precision MatQuant."""
+
+from repro.core.quant import QuantConfig
+
+from benchmarks.common import eval_nll, train_qat
+
+
+def run():
+    rows = []
+    for name, codistill in [("8_4_2", ()), ("8_4_2_8to2", ((8, 2),))]:
+        q = QuantConfig(mode="qat", bitwidths=(8, 4, 2),
+                        weights=(1.0, 1.0, 1.0), extra_precision=True,
+                        codistill=codistill)
+        params, cfg = train_qat(q, tag=f"t8{name}")
+        for b in (8, 4, 2):
+            nll, us = eval_nll(params, cfg, b)
+            rows.append((f"table8/ep_{name}/int{b}", us, nll))
+    return rows

@@ -1,0 +1,60 @@
+"""Quickstart: MatQuant in ~60 lines.
+
+Trains a tiny LM with the paper's multi-precision objective (R={8,4,2}),
+then shows the Matryoshka property: int8/int6/int4/int3/int2 models all
+sliced out of the SAME weights, plus a Mix'n'Match assignment.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import mixnmatch
+from repro.core.matquant import cross_entropy
+from repro.core.quant import QuantConfig
+from repro.data import DataConfig, SyntheticCorpus
+from repro.models import api
+from repro.optim import OptConfig
+from repro.serve import Engine, ServeConfig
+from repro.train import init_train_state, make_train_step
+
+STEPS, BATCH, SEQ = 60, 8, 64
+
+# 1. a tiny Qwen3-family model with MatQuant QAT on the FFN weights
+cfg = get_config("qwen3_1_7b").reduced().replace(
+    quant=QuantConfig(mode="qat", bitwidths=(8, 4, 2), weights=(0.1, 0.1, 1.0)))
+opt = OptConfig(lr=3e-3, total_steps=STEPS, warmup_steps=5)
+params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+train_step = jax.jit(make_train_step(cfg, opt))
+
+corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ))
+print("training with joint int8+int4+int2 loss ...")
+for i in range(STEPS):
+    raw = corpus.batch(i, BATCH, SEQ)
+    batch = {k: jnp.asarray(v) for k, v in raw.items()}
+    params, opt_state, m = train_step(params, opt_state, batch)
+    if i % 20 == 0 or i == STEPS - 1:
+        print(f"  step {i:3d}  loss={float(m['loss']):.3f} "
+              f"int8={float(m['ce_int8']):.3f} int2={float(m['ce_int2']):.3f}")
+
+# 2. ONE set of weights, five serving precisions (int6/int3 interpolated)
+held = corpus.batch(10_000, 16, SEQ)
+toks, labels = jnp.asarray(held["tokens"]), jnp.asarray(held["labels"])
+print("\nnested precisions sliced from the same int8 parent:")
+for bits in (8, 6, 4, 3, 2):
+    logits, _ = api.forward(params, {"tokens": toks}, cfg, bits=bits)
+    print(f"  int{bits}: log pplx = {float(cross_entropy(logits, labels)):.3f}")
+
+# 3. layer-wise Mix'n'Match at a 5.0-bit budget (pyramid strategy)
+assignment = mixnmatch.assign(cfg.num_layers, 5.0, "pyramid")
+logits, _ = api.forward(params, {"tokens": toks}, cfg, bits=assignment)
+print(f"\nmix'n'match {assignment} "
+      f"({mixnmatch.effective_bits(assignment):.2f} eff bits): "
+      f"log pplx = {float(cross_entropy(logits, labels)):.3f}")
+
+# 4. deployment: materialize served weights and generate
+engine = Engine(params, cfg, ServeConfig(bits=2, max_len=SEQ + 8))
+gen = engine.generate(toks[:2, :16], 8)
+print(f"\nint2-served greedy continuations: {gen.tolist()}")

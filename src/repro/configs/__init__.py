@@ -1,0 +1,10 @@
+"""Architecture registry: 10 assigned archs + the paper's own models."""
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    shape_skips,
+)
+from repro.configs.specs import input_specs  # noqa: F401

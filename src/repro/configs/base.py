@@ -1,0 +1,221 @@
+"""Model / shape / run configuration dataclasses and the arch registry.
+
+Every assigned architecture ships as `src/repro/configs/<id>.py` exposing
+`CONFIG: ModelConfig` with the exact published dimensions; reduced
+smoke-test variants come from `ModelConfig.reduced()`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Sequence
+
+from repro.core.quant import QuantConfig
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    m_rope: bool = False
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM / recurrent
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_heads: int = 0
+    ssm_conv: int = 4
+    attn_period: int = 0              # hybrid: shared attn after every N ssm layers
+    block_pattern: str = ""           # 'mamba' | 'mlstm_slstm' | '' (attention)
+
+    # enc-dec
+    encoder_layers: int = 0
+    encoder_len: int = 1500           # whisper: fixed frame count (stub frontend)
+
+    # numerics / padding
+    param_dtype: str = "bfloat16"
+    vocab_pad_to: int = 512
+    remat: str = "block"              # '' | 'block' | 'dots'
+    attn_chunk: int = 1024
+    ssm_chunk: int = 128
+    unroll_layers: bool = False       # cost-analysis mode (see scan_layers)
+
+    # quantization (the paper's knob set)
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, self.vocab_pad_to)
+
+    @property
+    def resolved_ssm_heads(self) -> int:
+        if self.ssm_heads:
+            return self.ssm_heads
+        return max((self.ssm_expand * self.d_model) // 64, 1)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        half = 16  # reduced head_dim 32 -> 16 rotary channels
+        w = 3 * half // 8
+        return self.replace(
+            mrope_sections=(half - 2 * w, w, w),
+            num_layers=min(self.num_layers, 2),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads < self.num_heads else 4,
+            head_dim=32,
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab_size=512,
+            vocab_pad_to=64,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            # tiny models: no expert capacity drops, so prefill/decode are
+            # bit-consistent with the teacher-forced forward in tests
+            capacity_factor=8.0 if self.num_experts else self.capacity_factor,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_heads=4 if self.family in ("ssm", "hybrid") and self.block_pattern != "mlstm_slstm" else self.ssm_heads,
+            encoder_layers=min(self.encoder_layers, 2) if self.encoder_layers else 0,
+            encoder_len=16 if self.encoder_layers else self.encoder_len,
+            attn_period=min(self.attn_period, 2) if self.attn_period else 0,
+            param_dtype="float32",
+            attn_chunk=64,
+            ssm_chunk=16,
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives MODEL_FLOPS = 6*N*D)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        h, kh = self.num_heads, self.num_kv_heads
+        V = self.padded_vocab
+        n = V * d  # embedding
+        if not self.tie_embeddings:
+            n += V * d
+
+        def attn():
+            return d * h * hd + 2 * d * kh * hd + h * hd * d
+
+        def dense_ffn(ff):
+            return 3 * d * ff
+
+        def moe_ffn():
+            return self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+
+        def mamba():
+            d_in = self.ssm_expand * d
+            return 2 * d * d_in + 2 * d * self.ssm_state + d * self.resolved_ssm_heads + d_in * d
+
+        def mlstm():
+            return 4 * d * d  # q,k,v,o
+
+        def slstm():
+            dh = d // h
+            return 4 * d * d + h * dh * 4 * dh + d * d
+
+        L = self.num_layers
+        if self.family in ("dense", "vlm"):
+            n += L * (attn() + dense_ffn(self.d_ff))
+        elif self.family == "moe":
+            n += L * (attn() + moe_ffn())
+        elif self.family == "ssm" and self.block_pattern == "mlstm_slstm":
+            n += (L // 2 + L % 2) * mlstm() + (L // 2) * slstm()
+        elif self.family == "hybrid":
+            n += L * mamba() + (attn() + dense_ffn(self.d_ff))  # shared attn block
+        elif self.family == "encdec":
+            ffn_ungated = 2 * d * self.d_ff  # whisper MLP has no gate
+            enc = self.encoder_layers * (attn() + ffn_ungated)
+            dec = L * (2 * attn() + ffn_ungated)
+            n += enc + dec
+        else:
+            raise ValueError(self.family)
+        # norms are negligible but cheap to add
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE uses top_k of num_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        full = self.param_count()
+        inactive = L * (self.num_experts - self.top_k) * 3 * d * self.d_ff
+        return full - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str           # 'train' | 'prefill' | 'decode'
+    microbatches: int = 1
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "qwen3_1_7b",
+    "granite_3_8b",
+    "qwen3_8b",
+    "qwen3_32b",
+    "qwen2_vl_72b",
+    "granite_moe_3b_a800m",
+    "granite_moe_1b_a400m",
+    "xlstm_125m",
+    "whisper_small",
+    "zamba2_1_2b",
+    # the paper's own models
+    "gemma2_2b",
+    "gemma2_9b",
+    "mistral_7b",
+)
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def shape_skips(cfg: ModelConfig) -> dict[str, str]:
+    """Shape cells skipped for this arch, with reasons (DESIGN.md §4)."""
+    skips = {}
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        skips["long_500k"] = (
+            "full quadratic attention; 500k decode requires sub-quadratic "
+            "attention (run only for ssm/hybrid archs)"
+        )
+    return skips

@@ -1,0 +1,9 @@
+"""Gemma-2 2B -- one of the paper's own evaluation models."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b", family="dense",
+    num_layers=26, d_model=2304, num_heads=8, num_kv_heads=4,
+    head_dim=256, d_ff=9216, vocab_size=256128,
+    rope_theta=1e4, tie_embeddings=True,
+)

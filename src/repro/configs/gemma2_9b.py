@@ -1,0 +1,9 @@
+"""Gemma-2 9B -- one of the paper's own evaluation models."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b", family="dense",
+    num_layers=42, d_model=3584, num_heads=16, num_kv_heads=8,
+    head_dim=256, d_ff=14336, vocab_size=256128,
+    rope_theta=1e4, tie_embeddings=True,
+)

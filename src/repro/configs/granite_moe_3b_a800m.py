@@ -1,0 +1,10 @@
+"""Granite MoE 3B-a800m [moe] -- 40 experts top-8.
+[hf:ibm-granite/granite-3.0 moe family; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    num_layers=32, d_model=1536, num_heads=24, num_kv_heads=8,
+    head_dim=64, d_ff=512, vocab_size=49155,
+    num_experts=40, top_k=8, tie_embeddings=True,
+)

@@ -1,0 +1,9 @@
+"""Mistral 7B -- one of the paper's own evaluation models."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-7b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=32000,
+    rope_theta=1e6, tie_embeddings=False,
+)

@@ -1,0 +1,12 @@
+"""Qwen2-VL 72B [vlm] -- M-RoPE, dynamic-resolution vision frontend
+STUBBED per assignment (input_specs supplies patch embeddings).
+[arXiv:2409.12191; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    head_dim=128, d_ff=29568, vocab_size=152064,
+    m_rope=True, mrope_sections=(16, 24, 24), rope_theta=1e6,
+    tie_embeddings=False,
+)

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+`input_specs(cfg, shape)` returns the *batch* pytree the corresponding
+step function consumes -- weak-type-correct, shardable, zero allocation.
+Params and decode-state specs are derived in the dry-run via
+jax.eval_shape over the init functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+VLM_PATCHES = 1024  # stub: precomputed image patch embeddings per sample
+
+
+def _s(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": _s((B, S), jnp.int32),
+            "labels": _s((B, S), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = _s((B, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _s((B, VLM_PATCHES, cfg.d_model), jnp.bfloat16)
+            batch["positions"] = _s((B, S, 3), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _s((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _s((B, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _s((B, VLM_PATCHES, cfg.d_model), jnp.bfloat16)
+            batch["positions"] = _s((B, S, 3), jnp.int32)
+        return batch
+    if shape.kind == "decode":
+        return {
+            "token": _s((B, 1), jnp.int32),
+            "pos": _s((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key=None) -> dict:
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        if spec.dtype == jnp.int32 and name in ("tokens", "labels", "token"):
+            out[name] = jax.random.randint(sub, spec.shape, 0, cfg.vocab_size, jnp.int32)
+        elif name == "pos":
+            out[name] = jnp.asarray(0, jnp.int32)
+        elif name == "positions":
+            pos = jnp.arange(spec.shape[1], dtype=jnp.int32)
+            out[name] = jnp.broadcast_to(pos[None, :, None], spec.shape)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, jnp.float32).astype(spec.dtype)
+    return out

@@ -1,0 +1,11 @@
+"""Whisper small [audio] -- enc-dec backbone; conv frontend STUB
+(input_specs supplies precomputed frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="encdec",
+    num_layers=12, encoder_layers=12, encoder_len=1500,
+    d_model=768, num_heads=12, num_kv_heads=12,
+    d_ff=3072, vocab_size=51865, tie_embeddings=True,
+)

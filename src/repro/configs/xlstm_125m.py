@@ -1,0 +1,9 @@
+"""xLSTM 125M [ssm] -- alternating mLSTM / sLSTM blocks, d_ff=0 (the
+blocks carry their own projections). [arXiv:2405.04517; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m", family="ssm", block_pattern="mlstm_slstm",
+    num_layers=12, d_model=768, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304, tie_embeddings=True,
+)

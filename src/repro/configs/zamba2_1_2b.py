@@ -1,0 +1,11 @@
+"""Zamba2 1.2B [hybrid] -- Mamba2 backbone + shared attention block
+applied every 6 layers. [arXiv:2411.15242; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    head_dim=64, d_ff=8192, vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_heads=64, ssm_conv=4,
+    attn_period=6, tie_embeddings=True,
+)

@@ -1,0 +1,29 @@
+"""MatQuant core: quantization math, slicing, packing, objectives."""
+
+from repro.core.quant import (  # noqa: F401
+    BF16,
+    QuantConfig,
+    dequantize,
+    effective_bits,
+    fake_quant,
+    fake_quant_omni,
+    minmax_scale_zero,
+    quant_dequant,
+    quantize,
+    right_shift_stat,
+    slice_bits,
+    sliced_codes,
+)
+from repro.core.matquant import (  # noqa: F401
+    cross_entropy,
+    matquant_loss,
+    recon_loss_multi,
+    soft_ce,
+)
+from repro.core.packing import (  # noqa: F401
+    PackedLinear,
+    pack_codes,
+    packed_nbytes,
+    unpack_codes,
+)
+from repro.core import mixnmatch, omniquant  # noqa: F401

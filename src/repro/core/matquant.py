@@ -1,0 +1,117 @@
+"""MatQuant's multi-precision joint objective (Eq. 7) + co-distillation.
+
+The framework-level contract: a model exposes
+    forward(params, batch, *, bits) -> logits
+where `bits` selects the per-layer precision at which every
+QuantizedLinear fake-quantizes its weights (int = uniform precision,
+or a per-layer vector for Mix'n'Match). MatQuant then sums the base
+algorithm's loss over R = config.bitwidths, weighted by lambda_r, and
+optionally adds co-distillation edges (Section 5.2).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    """Token-level CE, fp32 accumulation. labels: int ids, -1 = pad."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def soft_ce(student_logits: jax.Array, teacher_logits: jax.Array, mask=None):
+    """Distillation loss: CE against the teacher's softmax (stop-grad)."""
+    t = jax.lax.stop_gradient(
+        jax.nn.log_softmax(teacher_logits.astype(jnp.float32), axis=-1)
+    )
+    s = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    per_tok = -jnp.sum(jnp.exp(t) * s, axis=-1)
+    if mask is None:
+        mask = jnp.ones(per_tok.shape, jnp.float32)
+    return jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def matquant_loss(
+    forward: Callable[..., jax.Array],
+    params,
+    batch,
+    qcfg: QuantConfig,
+) -> tuple[jax.Array, dict]:
+    """Eq. 7: sum_r lambda_r * L(F(S(Q(theta, c), r)), y)  [+ distill].
+
+    Returns (total_loss, metrics) where metrics carries the per-precision
+    losses for logging/EXPERIMENTS tables.
+    """
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+
+    logits_by_bits: dict[int, jax.Array] = {}
+    needed = set(qcfg.bitwidths)
+    for t, s in qcfg.codistill:
+        needed.add(t)
+        needed.add(s)
+    for r in sorted(needed, reverse=True):
+        logits_by_bits[r] = forward(params, batch, bits=r)
+
+    total = jnp.float32(0.0)
+    metrics = {}
+    for r, lam in zip(qcfg.bitwidths, qcfg.weights):
+        l_r = cross_entropy(logits_by_bits[r], labels, mask)
+        metrics[f"ce_int{r}"] = l_r
+        total = total + lam * l_r
+    for t, s in qcfg.codistill:
+        l_d = soft_ce(logits_by_bits[s], logits_by_bits[t], mask)
+        metrics[f"distill_{t}to{s}"] = l_d
+        total = total + qcfg.codistill_alpha * qcfg.lambdas.get(s, 1.0) * l_d
+    metrics["loss"] = total
+    return total, metrics
+
+
+def recon_loss_multi(
+    block_fp: Callable[..., jax.Array],
+    block_q: Callable[..., jax.Array],
+    qparams,
+    x: jax.Array,
+    qcfg: QuantConfig,
+) -> tuple[jax.Array, dict]:
+    """OmniQuant's Eq. 5 under MatQuant: layer-wise L2 recon, summed over R.
+
+    block_fp: x -> y with full-precision weights (the target, Eq. 7's
+    y_i' = F_l(W_F, X_l)); block_q: (qparams, x, bits) -> y with
+    fake-quantized weights and learnable (gamma, beta, shift, scale).
+    """
+    y_fp = jax.lax.stop_gradient(block_fp(x))
+    total = jnp.float32(0.0)
+    metrics = {}
+    outs = {}
+    for r in sorted(set(qcfg.bitwidths), reverse=True):
+        outs[r] = block_q(qparams, x, bits=r)
+    for r, lam in zip(qcfg.bitwidths, qcfg.weights):
+        diff = (outs[r] - y_fp).astype(jnp.float32)
+        l_r = jnp.mean(diff * diff)
+        metrics[f"recon_int{r}"] = l_r
+        total = total + lam * l_r
+    for t, s in qcfg.codistill:
+        if t not in outs:
+            outs[t] = block_q(qparams, x, bits=t)
+        if s not in outs:
+            outs[s] = block_q(qparams, x, bits=s)
+        diff = (outs[s] - jax.lax.stop_gradient(outs[t])).astype(jnp.float32)
+        l_d = jnp.mean(diff * diff)
+        metrics[f"distill_{t}to{s}"] = l_d
+        total = total + qcfg.codistill_alpha * qcfg.lambdas.get(s, 1.0) * l_d
+    metrics["loss"] = total
+    return total, metrics

@@ -1,0 +1,98 @@
+"""Layer-wise Mix'n'Match (Section 4.3, Appendix B).
+
+Assign a precision from the trained set {2, 4, 8} to every layer and
+serve the resulting heterogeneous model for free. The paper finds the
+*Pyramid* strategy (low bits at the ends, int8 in the middle) dominates;
+we implement all four strategies from Appendix B plus an exhaustive
+budgeted search for small L.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+STRATEGIES = ("pyramid", "reverse_pyramid", "increasing", "decreasing")
+
+
+def effective_bits(assignment) -> float:
+    return float(np.mean(np.asarray(assignment, dtype=np.float64)))
+
+
+def _budget_counts(num_layers: int, target_bits: float):
+    """Split layers into n2/n4/n8 matching a mean-bit budget greedily."""
+    best, best_err = None, float("inf")
+    for n8 in range(num_layers + 1):
+        for n4 in range(num_layers - n8 + 1):
+            n2 = num_layers - n8 - n4
+            eff = (8 * n8 + 4 * n4 + 2 * n2) / num_layers
+            err = abs(eff - target_bits)
+            if err < best_err:
+                best, best_err = (n2, n4, n8), err
+    return best
+
+
+def assign(num_layers: int, target_bits: float, strategy: str = "pyramid"):
+    """Per-layer bit assignment hitting `target_bits` on average.
+
+    pyramid: int2 at both ends, int8 in the middle, int4 between --
+    the paper's winning strategy (higher precision where the residual
+    stream carries the most consolidated information).
+    """
+    n2, n4, n8 = _budget_counts(num_layers, target_bits)
+    if strategy == "increasing":
+        return [2] * n2 + [4] * n4 + [8] * n8
+    if strategy == "decreasing":
+        return [8] * n8 + [4] * n4 + [2] * n2
+    if strategy == "pyramid":
+        # ends get the lowest bits, middle the highest
+        order = _center_out_order(num_layers)
+    elif strategy == "reverse_pyramid":
+        order = _center_out_order(num_layers)[::-1]
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    bits = [0] * num_layers
+    ranked = [8] * n8 + [4] * n4 + [2] * n2  # center-first gets 8s
+    for pos, b in zip(order, ranked):
+        bits[pos] = b
+    return bits
+
+
+def _center_out_order(n: int):
+    """Layer indices ordered center-outwards: [mid, mid±1, ...]."""
+    mid = n // 2
+    order = [mid]
+    for d in range(1, n):
+        if mid - d >= 0:
+            order.append(mid - d)
+        if mid + d < n:
+            order.append(mid + d)
+        if len(order) >= n:
+            break
+    return order[:n]
+
+
+def sweep(num_layers: int, points: int = 13, strategy: str = "pyramid"):
+    """Budget sweep 2.0 -> 8.0 bits; returns [(eff_bits, assignment)]."""
+    out = []
+    for t in np.linspace(2.0, 8.0, points):
+        a = assign(num_layers, float(t), strategy)
+        out.append((effective_bits(a), a))
+    return out
+
+
+def exhaustive_pareto(num_layers: int, eval_fn, bit_choices=(2, 4, 8)):
+    """Exhaustive search over assignments for small L; returns the
+    Pareto frontier of (effective_bits, quality). eval_fn(assignment)
+    must return a scalar where LOWER is better (e.g. log pplx)."""
+    results = []
+    for combo in itertools.product(bit_choices, repeat=num_layers):
+        results.append((effective_bits(combo), float(eval_fn(list(combo))), combo))
+    results.sort()
+    pareto, best = [], float("inf")
+    for eff, q, combo in results:
+        if q < best:
+            best = q
+            pareto.append((eff, q, combo))
+    return pareto

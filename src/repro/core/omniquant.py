@@ -1,0 +1,71 @@
+"""OmniQuant auxiliary parameters (Shao et al. 2023), Eqs. 3-4.
+
+OmniQuant freezes the model weights W and learns, per quantized linear:
+  * clipping strengths gamma, beta  (Learnable Weight Clipping)  -- Eq. 3
+  * activation shift delta and scale s (Learnable Equivalent
+    Transformation):  XW + b -> ((X - delta) / s) Q(W * s) + b + delta.W
+                                                                 -- Eq. 4
+optimized with gradient descent on the block-wise L2 reconstruction
+error (Eq. 5), under MatQuant summed over R (Eq. 7).
+
+Parameterization follows the OmniQuant reference: gamma/beta are stored
+as logits and mapped through a sigmoid scaled to (0, 1+eps) so the
+clipping strength stays positive and initialized at exactly 1.0.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+_SIG_MAX = 1.5  # sigmoid ceiling; init logit chosen so sigmoid == 1/1.5
+
+
+def init_aux(d_in: int, d_out: int, dtype=jnp.float32):
+    """Fresh OmniQuant aux params for a (d_in, d_out) linear."""
+    # sigmoid(x) * 1.5 == 1.0  =>  sigmoid(x) = 2/3  =>  x = log(2)
+    logit_1 = float(jnp.log(2.0))
+    return {
+        "gamma_logit": jnp.full((1, d_out), logit_1, dtype),
+        "beta_logit": jnp.full((1, d_out), logit_1, dtype),
+        "shift": jnp.zeros((d_in,), dtype),
+        "log_scale": jnp.zeros((d_in,), dtype),
+    }
+
+
+def clip_strengths(aux):
+    gamma = jax.nn.sigmoid(aux["gamma_logit"]) * _SIG_MAX
+    beta = jax.nn.sigmoid(aux["beta_logit"]) * _SIG_MAX
+    return gamma, beta
+
+
+def apply_linear(
+    w: jax.Array,
+    aux,
+    x: jax.Array,
+    bits: int,
+    parent_bits: int = 8,
+    extra_precision: bool = False,
+    bias: jax.Array | None = None,
+):
+    """Eq. 4 forward with fake-quantized, MSB-sliced weights.
+
+    x: (..., d_in), w: (d_in, d_out). Gradients flow to aux only
+    (callers stop_gradient w, which OmniQuant freezes).
+    """
+    gamma, beta = clip_strengths(aux)
+    s = jnp.exp(aux["log_scale"])  # positive scale, init 1
+    delta = aux["shift"]
+    w_scaled = w * s[:, None]
+    w_q = quant.fake_quant_omni(
+        w_scaled, parent_bits, bits, gamma, beta, axis=0,
+        extra_precision=extra_precision,
+    )
+    y = ((x - delta) / s) @ w_q
+    # the delta.W correction uses the *unquantized* weights (Eq. 4)
+    y = y + delta @ w
+    if bias is not None:
+        y = y + bias
+    return y.astype(x.dtype)

@@ -1,0 +1,123 @@
+"""Bit-packing of quantized weight planes for the serving path.
+
+Layout: codes are packed little-endian into int32 words along the
+*input* (reduction) dimension so the Pallas dequant-matmul kernel can
+unpack a (block_k, block_n) tile with pure vector ops after one DMA.
+
+For Extra-Precision MatQuant (Errata Eq. 8) codes occupy [0, 2^r]; the
+overflow bucket (code == 2^r) is stored out-of-band as a bitmap plane
+(1 bit/weight) added back at dequant time -- the TPU-friendly analogue
+of the paper's proposed sparse CUDA additions. Effective bits =
+r + 1/32-word bitmap only for blocks containing overflow; we store the
+bitmap densely here for simplicity and report effective bits separately
+(`core.quant.effective_bits`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def codes_per_word(bits: int) -> int:
+    if bits not in (1, 2, 4, 8):
+        raise ValueError(f"unsupported pack width {bits}")
+    return 32 // bits
+
+
+def pack_codes(codes: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Pack integer codes in [0, 2^bits) into int32 words along `axis`.
+
+    The packed axis length becomes ceil(n / (32//bits)); codes are
+    zero-padded to a whole word.
+    """
+    cpw = codes_per_word(bits)
+    codes = jnp.moveaxis(codes, axis, 0).astype(jnp.uint32)
+    n = codes.shape[0]
+    pad = (-n) % cpw
+    if pad:
+        codes = jnp.concatenate(
+            [codes, jnp.zeros((pad,) + codes.shape[1:], jnp.uint32)], axis=0
+        )
+    codes = codes.reshape((-1, cpw) + codes.shape[1:])
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * bits).reshape(
+        (1, cpw) + (1,) * (codes.ndim - 2)
+    )
+    words = jnp.sum(codes << shifts, axis=1).astype(jnp.uint32)
+    return jnp.moveaxis(words.view(jnp.int32), 0, axis)
+
+
+def unpack_codes(words: jax.Array, bits: int, n: int, axis: int = 0) -> jax.Array:
+    """Inverse of `pack_codes`; returns int32 codes, trimmed to n."""
+    cpw = codes_per_word(bits)
+    w = jnp.moveaxis(words, axis, 0).view(jnp.uint32)
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * bits).reshape(
+        (1, cpw) + (1,) * (w.ndim - 1)
+    )
+    mask = jnp.uint32(2**bits - 1)
+    codes = (w[:, None] >> shifts) & mask
+    codes = codes.reshape((-1,) + w.shape[1:])[:n]
+    return jnp.moveaxis(codes.astype(jnp.int32), 0, axis)
+
+
+@dataclasses.dataclass
+class PackedLinear:
+    """A packed c-bit parent from which any r <= c model can be served.
+
+    Stores the *parent* (int8 by default) codes packed, plus the shared
+    (alpha, z). Slicing to a lower precision happens at load time
+    (`materialize`) producing the r-bit packed plane the kernel consumes;
+    this is exactly the deployment flow of Section 5.4.
+    """
+
+    words: jax.Array        # packed parent codes, int32, packed along k
+    alpha: jax.Array        # (1, n) scale
+    zero: jax.Array         # (1, n) zero point
+    k: int                  # logical reduction dim
+    n: int                  # output dim
+    parent_bits: int = 8
+
+    @classmethod
+    def from_weights(cls, w: jax.Array, parent_bits: int = 8):
+        from repro.core import quant
+
+        q, alpha, z = quant.quantize(w, parent_bits, axis=0)
+        words = pack_codes(q, parent_bits, axis=0)
+        return cls(words=words, alpha=alpha, zero=z,
+                   k=w.shape[0], n=w.shape[1], parent_bits=parent_bits)
+
+    def materialize(self, bits: int, extra_precision: bool = False):
+        """Slice the parent to `bits` and re-pack for serving.
+
+        Returns (packed_words, alpha_r, zero_r[, overflow_bitmap]) where
+        dequant is w_hat = alpha_r * (codes * 2^(c-r) - z)  -- we fold
+        the 2^(c-r) grid re-scale into alpha_r so the kernel's dequant
+        is always `alpha * code - beta` regardless of r.
+        """
+        from repro.core import quant
+
+        c = self.parent_bits
+        parent = unpack_codes(self.words, c, self.k, axis=0)
+        codes = quant.sliced_codes(parent, c, bits, extra_precision=extra_precision)
+        scale = jnp.asarray(2 ** (c - bits), self.alpha.dtype)
+        alpha_r = self.alpha * scale
+        beta_r = self.alpha * self.zero
+        if extra_precision:
+            overflow = (codes >= 2**bits).astype(jnp.int32)
+            base = jnp.minimum(codes, 2**bits - 1)
+            return (
+                pack_codes(base, bits, axis=0),
+                alpha_r,
+                beta_r,
+                pack_codes(overflow, 1, axis=0),
+            )
+        return pack_codes(codes, bits, axis=0), alpha_r, beta_r
+
+
+def packed_nbytes(k: int, n: int, bits: int) -> int:
+    """HBM bytes of one packed (k, n) plane -- roofline accounting."""
+    words_k = int(np.ceil(k / codes_per_word(bits)))
+    return words_k * n * 4

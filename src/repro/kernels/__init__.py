@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for MatQuant's compute hot-spots.
+
+quant_matmul  -- packed r-bit dequant matmul (serving/decode path)
+fused_quantize -- one-pass minmax + multi-precision slice (QAT path)
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper + dispatch), ref.py (pure-jnp oracle).
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused MinMax-quantize + multi-precision slice.
+
+QAT's forward fake-quantizes every weight tensor once per target
+precision: naively that is |R| reads of W from HBM plus |R| minmax
+reductions. This kernel performs ONE HBM read of a (K, block_n) stripe
+into VMEM, ONE minmax reduction, and emits all |R| sliced-dequantized
+planes -- exactly the fused op MatQuant training wants. (XLA often
+cannot fuse across the three forward passes because each consumer sits
+in a different layer invocation.)
+
+Grid: 1-D over N stripes; the full K column must fit VMEM, which holds
+for every assigned arch (K <= 29568 at fp32 * 128 cols = 15.1 MB; the
+ops.py wrapper drops block_n to keep stripe bytes under the cap).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, *o_refs, bitwidths, parent_bits, extra_precision):
+    w = w_ref[...].astype(jnp.float32)               # (K, bn)
+    c = parent_bits
+    levels = (1 << c) - 1
+    w_max = jnp.max(w, axis=0, keepdims=True)
+    w_min = jnp.min(w, axis=0, keepdims=True)
+    alpha = (w_max - w_min) / levels
+    alpha = jnp.where(jnp.abs(alpha) < 1e-8, 1e-8, alpha)
+    z = -w_min / alpha
+    q = jnp.clip(jnp.round(w / alpha + z), 0, levels).astype(jnp.int32)
+    for o_ref, r in zip(o_refs, bitwidths):
+        if r == c:
+            q_r = q
+        else:
+            shift = 1 << (c - r)
+            q_r = (2 * q + shift) // (2 * shift)
+            if not extra_precision:
+                q_r = jnp.clip(q_r, 0, (1 << r) - 1)
+            q_r = q_r * shift
+        o_ref[...] = (alpha * (q_r.astype(jnp.float32) - z)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bitwidths", "parent_bits", "extra_precision",
+                     "block_n", "interpret"),
+)
+def fused_quantize_pallas(
+    w: jax.Array,                 # (K, N)
+    *,
+    bitwidths: tuple[int, ...],
+    parent_bits: int = 8,
+    extra_precision: bool = False,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    K, N = w.shape
+    assert N % block_n == 0, (N, block_n)
+    outs = pl.pallas_call(
+        functools.partial(_kernel, bitwidths=bitwidths,
+                          parent_bits=parent_bits,
+                          extra_precision=extra_precision),
+        grid=(N // block_n,),
+        in_specs=[pl.BlockSpec((K, block_n), lambda j: (0, j))],
+        out_specs=[pl.BlockSpec((K, block_n), lambda j: (0, j))
+                   for _ in bitwidths],
+        out_shape=[jax.ShapeDtypeStruct((K, N), w.dtype) for _ in bitwidths],
+        interpret=interpret,
+    )(w)
+    return tuple(outs)

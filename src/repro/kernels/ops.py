@@ -1,0 +1,111 @@
+"""Jit'd public wrappers around the Pallas kernels with backend dispatch.
+
+* On TPU: compiled pallas_call.
+* On CPU (this container): interpret=True executes the kernel body in
+  Python for correctness tests; the serving engine's jnp path (identical
+  math) is what the dry-run lowers, keeping XLA cost analysis honest.
+
+Wrappers also handle padding to block multiples and the Extra-Precision
+composition (base plane + 1-bit overflow plane through the same kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels import ref
+from repro.kernels.fused_quantize import fused_quantize_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def quant_matmul(x, words, alpha, beta, *, bits, overflow_words=None,
+                 interpret: bool | None = None,
+                 block_m=128, block_n=128, block_k=512):
+    """y = x @ dequant(words). Extra precision adds the overflow plane.
+
+    x: (..., K); words: (ceil(K/cpw), N). Returns (..., N).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = words.shape[1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+
+    cpw = packing.codes_per_word(bits)
+    bm = min(block_m, max(8, M))
+    x2, pad_m = _pad_to(x2, bm, 0)
+    bk = min(block_k, K)
+    # block_k must divide K and be a multiple of cpw
+    while K % bk or bk % cpw:
+        bk -= 1
+    bn = min(block_n, N)
+    while N % bn:
+        bn -= 1
+
+    y = quant_matmul_pallas(
+        x2, words, alpha.astype(jnp.float32), beta.astype(jnp.float32),
+        bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    if overflow_words is not None:
+        cpw1 = packing.codes_per_word(1)
+        bk1 = min(block_k, K)
+        while K % bk1 or bk1 % cpw1:
+            bk1 -= 1
+        y_over = quant_matmul_pallas(
+            x2, overflow_words, alpha.astype(jnp.float32),
+            jnp.zeros_like(beta, jnp.float32),
+            bits=1, block_m=bm, block_n=bn, block_k=bk1, interpret=interpret)
+        y = y + y_over
+    if pad_m:
+        y = y[:M]
+    return y.reshape(lead + (N,)).astype(x.dtype)
+
+
+def fused_quantize(w, *, bitwidths, parent_bits=8, extra_precision=False,
+                   interpret: bool | None = None, vmem_budget=12 * 2**20):
+    """All-precision fake-quantized planes of w: tuple, one per r."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    K, N = w.shape
+    # choose block_n so the fp32 stripe fits the VMEM budget
+    bn = 128
+    while K * bn * 4 * (1 + len(bitwidths)) > vmem_budget and bn > 8:
+        bn //= 2
+    w_p, pad_n = _pad_to(w, bn, 1)
+    outs = fused_quantize_pallas(
+        w_p, bitwidths=tuple(bitwidths), parent_bits=parent_bits,
+        extra_precision=extra_precision, block_n=bn, interpret=interpret)
+    if pad_n:
+        outs = tuple(o[:, :N] for o in outs)
+    return outs
+
+
+def serve_linear(x, packed: packing.PackedLinear, bits: int,
+                 extra_precision: bool = False, interpret: bool | None = None):
+    """End-to-end packed serving linear: slice parent -> kernel matmul."""
+    mat = packed.materialize(bits, extra_precision=extra_precision)
+    if extra_precision:
+        words, alpha, beta, over = mat
+        return quant_matmul(x, words, alpha, beta, bits=bits,
+                            overflow_words=over, interpret=interpret)
+    words, alpha, beta = mat
+    return quant_matmul(x, words, alpha, beta, bits=bits, interpret=interpret)
+
+
+__all__ = ["quant_matmul", "fused_quantize", "serve_linear", "ref"]

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: packed-integer dequant matmul.
+
+The serving hot-spot of MatQuant: decode-time FFN matmuls are HBM-
+bandwidth-bound, so weights live in HBM as packed r-bit planes (int32
+words, r in {1, 2, 4, 8}) and are expanded to bf16 only *after* the
+HBM->VMEM DMA. Per (block_k, block_n) tile the kernel:
+
+  1. DMAs the packed words (block_k / (32//bits), block_n) -- this is
+     the 4x/8x/16x/32x byte saving vs bf16 weights,
+  2. unpacks with vector shifts/masks (VPU),
+  3. dequantizes  w = alpha * code - beta  (per-output-channel scales),
+  4. feeds the MXU:  acc += x_tile @ w_tile  at fp32 accumulation.
+
+Block shapes default to MXU-aligned (128, 128) tiles with K-innermost
+grid order; the fp32 accumulator lives in the revisited output block.
+Extra-Precision MatQuant (Errata) composes this same kernel at bits=1
+for the overflow bitmap plane (see ops.quant_matmul with overflow=).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    words = w_ref[...]                              # (bk // cpw, bn) int32
+    cpw = 32 // bits
+    mask = (1 << bits) - 1
+    # unpack: (bkw, bn) -> (bkw, cpw, bn) -> (bk, bn)
+    shifts = (jnp.arange(cpw, dtype=jnp.int32) * bits)[None, :, None]
+    codes = jax.lax.shift_right_logical(
+        jnp.broadcast_to(words[:, None, :], (words.shape[0], cpw, words.shape[1])),
+        jnp.broadcast_to(shifts, (words.shape[0], cpw, words.shape[1])),
+    ) & mask
+    codes = codes.reshape(words.shape[0] * cpw, words.shape[1])
+    w = alpha_ref[...] * codes.astype(jnp.float32) - beta_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_m", "block_n", "block_k", "interpret"),
+)
+def quant_matmul_pallas(
+    x: jax.Array,            # (M, K) float
+    words: jax.Array,        # (K // cpw, N) int32 packed codes
+    alpha: jax.Array,        # (1, N) f32
+    beta: jax.Array,         # (1, N) f32   (beta = alpha * zero_point)
+    *,
+    bits: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = x.shape
+    cpw = 32 // bits
+    Kw, N = words.shape
+    assert Kw * cpw == K, (Kw, cpw, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        M, N, K, block_m, block_n, block_k)
+    assert block_k % cpw == 0
+    k_steps = K // block_k
+    grid = (M // block_m, N // block_n, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k // cpw, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, words, alpha, beta)
+    return out.astype(x.dtype)

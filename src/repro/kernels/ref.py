@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every kernel (the correctness ground truth).
+
+Each ref mirrors the kernel contract bit-for-bit; kernel tests sweep
+shapes/dtypes/bits and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, quant
+
+
+def quant_matmul_ref(x, words, alpha, beta, *, bits: int):
+    """x: (M, K); words: (K//cpw, N) int32; alpha,beta: (1, N)."""
+    K = x.shape[1]
+    codes = packing.unpack_codes(words, bits, K, axis=0)      # (K, N)
+    w = alpha * codes.astype(jnp.float32) - beta
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def quant_matmul_ep_ref(x, words, alpha, beta, overflow_words, *, bits: int):
+    """Extra-Precision variant: codes may carry a 2^bits overflow stored
+    as a 1-bit plane; value = alpha * (base + overflow) - beta."""
+    K = x.shape[1]
+    codes = packing.unpack_codes(words, bits, K, axis=0).astype(jnp.float32)
+    over = packing.unpack_codes(overflow_words, 1, K, axis=0).astype(jnp.float32)
+    w = alpha * (codes + over) - beta
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def fused_quantize_ref(w, *, bitwidths, parent_bits: int = 8,
+                       extra_precision: bool = False):
+    """Per-output-channel (axis=0 groups) quantize + slice for all r."""
+    return tuple(
+        quant.quant_dequant(w, parent_bits, r, axis=0,
+                            extra_precision=extra_precision).astype(w.dtype)
+        for r in bitwidths
+    )

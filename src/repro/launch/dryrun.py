@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). 512 placeholder host devices back the
+# 16x16 single-pod and 2x16x16 multi-pod production meshes.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 or 2x16x16),
+  2. constructs the real step function (MatQuant QAT train_step for
+     train shapes; prefill / decode serve steps otherwise),
+  3. resolves NamedShardings for params / optimizer / batch / caches
+     from the logical-axis rules,
+  4. jit-lowers with ShapeDtypeStructs (zero allocation), compiles,
+  5. records memory_analysis(), cost_analysis(), and the collective
+     schedule parsed from the compiled HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+      [--multi-pod] [--layers N] [--unroll] [--microbatches M]
+      [--json out.json] [--print-hlo]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, input_specs, shape_skips
+from repro.launch.mesh import make_production_mesh
+from repro.models import api, common as cm
+from repro.optim import OptConfig, adamw_init
+from repro.runtime import sharding as shard
+from repro.train import make_train_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO."""
+    totals = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)", stripped)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        if kind + "-start" in stripped or kind + "-done" in stripped:
+            pass  # shapes identical; count once via the -start form
+        nbytes = 0
+        for dt, dims in shape_re.findall(shapes_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        totals[kind]["count"] += 1
+        totals[kind]["bytes"] += nbytes
+    totals["total_bytes"] = sum(v["bytes"] for k, v in totals.items()
+                                if isinstance(v, dict))
+    return totals
+
+
+def microbatch_count(cfg, shape, mesh) -> int:
+    """Pick grad-accum microbatches so the remat stash fits ~4 GB/dev."""
+    sizes = shard.mesh_axis_sizes(mesh)
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    per_dev = max(shape.global_batch // dp, 1)
+    n_prec = max(len(cfg.quant.bitwidths), 1)
+    stash = cfg.num_layers * per_dev * shape.seq_len * cfg.d_model * 2 * n_prec
+    budget = 4 * 2**30
+    need = max(1, -(-stash // budget))
+    mb = 1
+    while mb < need and mb < shape.global_batch:
+        mb *= 2
+    while shape.global_batch % mb:
+        mb //= 2
+    return max(mb, 1)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, layers=None,
+               unroll=False, microbatches=None, serve_bits=None,
+               packed_bits: int = 0, remat: str = '', vmap_precisions=False):
+    """Returns (lowered, meta) for one (arch x shape) cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = shape_skips(cfg).get(shape_name)
+    if skip:
+        raise SystemExit(f"SKIP {arch} x {shape_name}: {skip}")
+    if layers:
+        repl = {"num_layers": layers}
+        if cfg.encoder_layers:
+            repl["encoder_layers"] = layers
+        cfg = cfg.replace(**repl)
+    if unroll:
+        cfg = cfg.replace(unroll_layers=True)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    if packed_bits:
+        import dataclasses as _dc
+        cfg = cfg.replace(quant=_dc.replace(cfg.quant, packed_bits=packed_bits))
+
+    cm.set_act_resolver(shard.make_act_resolver(mesh))
+    key = jax.random.PRNGKey(0)
+    # serve cells use TP-only weight rules (no per-step FSDP gathers)
+    rules = shard.RULES if shape.kind == "train" else shard.serving_rules()
+    if packed_bits and shape.kind != "train":
+        from repro.serve.engine import materialize_packed_params, packed_axes
+        params_spec = jax.eval_shape(
+            lambda k: materialize_packed_params(api.init(k, cfg), cfg,
+                                                packed_bits), key)
+        p_axes = packed_axes(api.axes(cfg), params_spec, cfg)
+    else:
+        params_spec = jax.eval_shape(partial(api.init, cfg=cfg), key)
+        p_axes = api.axes(cfg)
+    params_sh = shard.tree_shardings(p_axes, params_spec, mesh, rules)
+    batch_spec = input_specs(cfg, shape)
+    batch_sh = shard.batch_shardings(batch_spec, mesh)
+
+    if shape.kind == "train":
+        mb = microbatches or microbatch_count(cfg, shape, mesh)
+        opt_cfg = OptConfig()
+        step = make_train_step(cfg, opt_cfg, microbatches=mb,
+                               vmap_precisions=vmap_precisions)
+        opt_spec = jax.eval_shape(adamw_init, params_spec)
+        opt_sh = {"m": params_sh, "v": params_sh,
+                  "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+        lowered = jax.jit(
+            step,
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        ).lower(params_spec, opt_spec, batch_spec)
+        meta = {"kind": "train", "microbatches": mb}
+    elif shape.kind == "prefill":
+        fn = lambda params, batch: api.prefill(
+            params, batch, cfg, bits=serve_bits, max_len=shape.seq_len)
+        state_spec = jax.eval_shape(
+            partial(api.init_state, cfg, shape.global_batch, shape.seq_len))
+        state_sh = shard.tree_shardings(api.state_axes(cfg), state_spec, mesh, rules)
+        lowered = jax.jit(
+            fn, in_shardings=(params_sh, batch_sh),
+            out_shardings=(None, state_sh),
+        ).lower(params_spec, batch_spec)
+        meta = {"kind": "prefill"}
+    else:  # decode
+        state_spec = jax.eval_shape(
+            partial(api.init_state, cfg, shape.global_batch, shape.seq_len))
+        state_sh = shard.tree_shardings(api.state_axes(cfg), state_spec, mesh, rules)
+        fn = lambda params, state, token, pos: api.decode_step(
+            params, state, token, pos, cfg, bits=serve_bits)
+        lowered = jax.jit(
+            fn,
+            in_shardings=(params_sh, state_sh, batch_sh["token"], batch_sh["pos"]),
+            out_shardings=(None, state_sh),
+            donate_argnums=(1,),
+        ).lower(params_spec, state_spec,
+                batch_spec["token"], batch_spec["pos"])
+        meta = {"kind": "decode"}
+    meta.update(arch=arch, shape=shape_name, layers=cfg.num_layers,
+                family=cfg.family, params=cfg.param_count(),
+                active_params=cfg.active_param_count())
+    return lowered, meta
+
+
+def run_cell(arch, shape_name, *, multi_pod=False, layers=None, unroll=False,
+             microbatches=None, serve_bits=None, packed_bits=0, remat='',
+             vmap_precisions=False, print_hlo=False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, meta = build_cell(arch, shape_name, mesh, layers=layers,
+                               unroll=unroll, microbatches=microbatches,
+                               serve_bits=serve_bits, packed_bits=packed_bits,
+                               remat=remat, vmap_precisions=vmap_precisions)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    result = {
+        **meta,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(jax.device_count()) if multi_pod else 256,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+            "transcendentals": ca.get("transcendentals"),
+        },
+        "collectives": colls,
+    }
+    if print_hlo:
+        print(hlo)
+    return result
+
+
+def _extrap_depths(cfg) -> tuple[int, int]:
+    """Depths for the two shallow unrolled cost runs. Hybrid archs use
+    multiples of attn_period so the per-layer slope amortizes exactly
+    one shared-attention application per period."""
+    if cfg.family == "hybrid" and cfg.attn_period:
+        return cfg.attn_period, 2 * cfg.attn_period
+    return 2, 4
+
+
+def run_cell_extrapolated(arch, shape_name, *, multi_pod=False,
+                          serve_bits=None, microbatches=None, packed_bits=0,
+                          remat='', vmap_precisions=False):
+    """Full-depth compile (memory + collective schedule + proof) plus two
+    shallow *unrolled* compiles to recover per-layer FLOPs/bytes that
+    XLA's cost_analysis hides inside while-loop bodies (counted once).
+
+    corrected(L) = shallow(l1) + (L - l1) * [shallow(l2)-shallow(l1)]/(l2-l1)
+    Shallow runs use microbatches=1 (the grad-accum scan body is also
+    counted once), so corrected terms are per-full-batch; see §Roofline
+    notes in EXPERIMENTS.md.
+    """
+    cfg = get_config(arch)
+    full = run_cell(arch, shape_name, multi_pod=multi_pod, serve_bits=serve_bits,
+                    microbatches=microbatches, packed_bits=packed_bits, remat=remat,
+                    vmap_precisions=vmap_precisions)
+    l1, l2 = _extrap_depths(cfg)
+    lo = run_cell(arch, shape_name, multi_pod=multi_pod, layers=l1, unroll=True,
+                  microbatches=1, serve_bits=serve_bits, packed_bits=packed_bits,
+                  remat=remat, vmap_precisions=vmap_precisions)
+    hi = run_cell(arch, shape_name, multi_pod=multi_pod, layers=l2, unroll=True,
+                  microbatches=1, serve_bits=serve_bits, packed_bits=packed_bits,
+                  remat=remat, vmap_precisions=vmap_precisions)
+    L = cfg.num_layers
+
+    def lin(a, b):
+        if a is None or b is None:
+            return None
+        slope = (b - a) / (l2 - l1)
+        return a + (L - l1) * slope
+
+    corrected = {
+        "flops": lin(lo["cost"]["flops"], hi["cost"]["flops"]),
+        "bytes_accessed": lin(lo["cost"]["bytes_accessed"],
+                              hi["cost"]["bytes_accessed"]),
+        "collective_bytes": lin(lo["collectives"]["total_bytes"],
+                                hi["collectives"]["total_bytes"]),
+        "per_layer_flops": (hi["cost"]["flops"] - lo["cost"]["flops"]) / (l2 - l1),
+        "depths": [l1, l2, L],
+    }
+    full["corrected"] = corrected
+    full["shallow"] = {"lo": lo, "hi": hi}
+    return full
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override depth (roofline extrapolation runs)")
+    ap.add_argument("--unroll", action="store_true",
+                    help="python-unroll layers so cost_analysis counts them")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--serve-bits", type=int, default=None)
+    ap.add_argument("--packed-bits", type=int, default=0,
+                    help="serve weights as packed r-bit planes")
+    ap.add_argument("--remat", default="", choices=["", "block", "dots"])
+    ap.add_argument("--vmap-precisions", action="store_true")
+    ap.add_argument("--extrapolate", action="store_true",
+                    help="full compile + 2 shallow unrolled cost runs")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--print-hlo", action="store_true")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, jax.device_count()
+    if args.extrapolate:
+        result = run_cell_extrapolated(
+            args.arch, args.shape, multi_pod=args.multi_pod,
+            serve_bits=args.serve_bits, microbatches=args.microbatches,
+            packed_bits=args.packed_bits, remat=args.remat,
+            vmap_precisions=args.vmap_precisions)
+    else:
+        result = run_cell(
+            args.arch, args.shape, multi_pod=args.multi_pod, layers=args.layers,
+            unroll=args.unroll, microbatches=args.microbatches,
+            serve_bits=args.serve_bits, packed_bits=args.packed_bits,
+            remat=args.remat, print_hlo=args.print_hlo)
+    print(json.dumps({k: v for k, v in result.items() if k != "shallow"},
+                     indent=1))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,150 @@
+"""Roofline aggregation: dry-run JSONs -> per-cell terms + markdown.
+
+Terms (per the methodology; all PER-DEVICE, matching the SPMD module
+that cost_analysis reports on):
+
+  compute term    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16)
+  memory term     = HLO_bytes / HBM_bw                (819 GB/s)
+  collective term = collective_bytes / link_bw        (50 GB/s/link)
+
+HLO_FLOPs / HLO_bytes / collective_bytes use the depth-extrapolated
+values (XLA counts while-loop bodies once; see dryrun.run_cell_extrapolated).
+HLO_bytes is an UNFUSED upper bound (every op's operands+outputs); the
+table also reports an analytic HBM floor (weights + boundary
+activations + optimizer streams) for the bottleneck discussion.
+
+MODEL_FLOPS = 6*N*D (train; x len(R) for MatQuant's multi-precision
+objective) or 2*N*D (serve), N = active params, D = tokens.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+N_PRECISIONS = 3  # MatQuant default R = {8, 4, 2}
+
+
+def model_flops(rec) -> tuple[float, float]:
+    """(one-precision, matquant) global model FLOPs for the cell."""
+    n = rec["active_params"]
+    shape = rec["shape"]
+    kind = rec["kind"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768,
+           "decode_32k": 1, "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32,
+             "decode_32k": 128, "long_500k": 1}[shape]
+    tokens = seq * batch
+    if kind == "train":
+        one = 6.0 * n * tokens
+        return one, one * N_PRECISIONS
+    return 2.0 * n * tokens, 2.0 * n * tokens
+
+
+def analytic_hbm_bytes(rec) -> float:
+    """Per-device HBM floor: params stream + optimizer + boundary acts."""
+    chips = rec.get("chips", 256)
+    n = rec["params"]
+    kind = rec["kind"]
+    mb = rec.get("microbatches", 1)
+    shape = rec["shape"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768,
+           "decode_32k": 1, "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32,
+             "decode_32k": 128, "long_500k": 1}[shape]
+    d_bytes = 2
+    if kind == "train":
+        # per microbatch: read w (x3 precisions fwd + bwd recompute), write grads
+        w_stream = n * d_bytes * mb * (N_PRECISIONS * 2 + 1) / chips
+        opt = n * (4 * 4) / chips          # m, v read+write fp32
+        acts = rec["layers"] * batch * seq * 2048 * d_bytes * 4 / chips
+        return w_stream + opt + acts
+    if kind == "prefill":
+        return (n * d_bytes + rec["layers"] * batch * seq * 2048 * d_bytes) / chips
+    # decode: weights + KV/state read dominate
+    mem = rec.get("memory") or {}
+    cache = (mem.get("argument_bytes") or 0)
+    return n * d_bytes / chips + cache
+
+
+def terms(rec) -> dict:
+    cor = rec.get("corrected") or {}
+    flops = cor.get("flops") or (rec.get("cost") or {}).get("flops") or 0
+    byts = cor.get("bytes_accessed") or (rec.get("cost") or {}).get("bytes_accessed") or 0
+    coll = cor.get("collective_bytes")
+    if coll is None:
+        coll = (rec.get("collectives") or {}).get("total_bytes", 0)
+    chips = rec.get("chips", 256)
+    one_mf, mat_mf = model_flops(rec)
+    t = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": byts / HBM_BW,
+        "collective_s": coll / LINK_BW,
+        "analytic_mem_s": analytic_hbm_bytes(rec) / HBM_BW,
+        "model_flops_1p": one_mf,
+        "model_flops_mq": mat_mf,
+        "useful_ratio_1p": (one_mf / chips) / flops if flops else 0.0,
+        "useful_ratio_mq": (mat_mf / chips) / flops if flops else 0.0,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])
+    t["dominant"] = dom.replace("_s", "")
+    # roofline fraction: useful compute time / the binding term
+    binding = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    t["roofline_fraction"] = ((mat_mf / chips) / PEAK_FLOPS) / binding if binding else 0.0
+    return t
+
+
+def load(dirpath: str, mesh: str = "single"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def markdown(recs) -> str:
+    lines = [
+        "| arch | shape | kind | compute s | memory s (HLO ub) | mem s (analytic) | collective s | dominant | useful/HLO (MQ) | roofline frac | mem/dev GB | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | SKIP | — | — | — | — |")
+            continue
+        t = terms(r)
+        mem = r.get("memory") or {}
+        dev_gb = ((mem.get("argument_bytes") or 0) +
+                  (mem.get("temp_bytes") or 0)) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+            f"| {t['analytic_mem_s']:.3g} | {t['collective_s']:.3g} "
+            f"| **{t['dominant']}** | {t['useful_ratio_mq']:.2f} "
+            f"| {t['roofline_fraction']:.3f} | {dev_gb:.1f} "
+            f"| {r.get('compile_s', 0):.0f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh)
+    md = markdown(recs)
+    print(md)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

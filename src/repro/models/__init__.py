@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo; see repro.models.api for the unified interface."""
+from repro.models import api  # noqa: F401

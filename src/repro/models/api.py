@@ -1,0 +1,71 @@
+"""Unified model API: family dispatch for init / forward / serve steps.
+
+The rest of the framework (train loop, serving engine, dry-run) talks
+only to this module, so adding an architecture family touches exactly
+one dispatch table.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ed
+from repro.models import lm
+
+
+def init(key, cfg):
+    if cfg.family == "encdec":
+        return ed.init_encdec(key, cfg)
+    return lm.init_lm(key, cfg)
+
+
+def axes(cfg):
+    if cfg.family == "encdec":
+        return ed.encdec_axes(cfg)
+    return lm.lm_axes(cfg)
+
+
+def forward(params, batch, cfg, *, bits=None):
+    """batch: dict with 'tokens' (+ family extras). Returns (logits, aux)."""
+    if cfg.family == "encdec":
+        return ed.forward_encdec(params, batch["frames"], batch["tokens"],
+                                 cfg, bits=bits)
+    return lm.forward_lm(
+        params, batch["tokens"], cfg, bits=bits,
+        positions=batch.get("positions"),
+        vision_embeds=batch.get("vision_embeds"),
+    )
+
+
+def init_state(cfg, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return ed.init_encdec_state(cfg, batch, max_len)
+    return lm.init_decode_state(cfg, batch, max_len)
+
+
+def state_axes(cfg):
+    if cfg.family == "encdec":
+        return ed.encdec_state_axes(cfg)
+    return lm.decode_state_axes(cfg)
+
+
+def prefill(params, batch, cfg, *, bits=None, max_len=None):
+    if cfg.family == "encdec":
+        return ed.prefill_encdec(params, batch["frames"], batch["tokens"],
+                                 cfg, bits=bits, max_len=max_len)
+    return lm.prefill(
+        params, batch["tokens"], cfg, bits=bits, max_len=max_len,
+        positions=batch.get("positions"),
+        vision_embeds=batch.get("vision_embeds"),
+    )
+
+
+def decode_step(params, state, token, pos, cfg, *, bits=None):
+    if cfg.family == "encdec":
+        return ed.decode_step_encdec(params, state, token, pos, cfg, bits=bits)
+    return lm.decode_step(params, state, token, pos, cfg, bits=bits)
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))

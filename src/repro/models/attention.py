@@ -1,0 +1,189 @@
+"""GQA attention: training (chunked causal), prefill, and decode paths.
+
+Long sequences use *triangular block attention*: the query sequence is
+split into static chunks and each chunk attends to the key prefix up to
+its own end -- static slice bounds (Python unroll), so no wasted upper-
+triangle FLOPs and no O(S^2) live score tensor. This is the jnp analogue
+of a flash kernel; on TPU the same blocking maps onto VMEM tiles.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.core.quant import QuantConfig
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, qcfg: QuantConfig, dtype=jnp.float32):
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": cm.init_linear(ks[0], d, h * hd, qcfg, kind="attn", dtype=dtype),
+        "wk": cm.init_linear(ks[1], d, kh * hd, qcfg, kind="attn", dtype=dtype),
+        "wv": cm.init_linear(ks[2], d, kh * hd, qcfg, kind="attn", dtype=dtype),
+        "wo": cm.init_linear(ks[3], h * hd, d, qcfg, kind="attn", dtype=dtype,
+                             scale=(h * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attention_axes(cfg, omn: bool = False):
+    ax = {
+        "wq": cm.linear_axes("embed", "q_heads", omn=omn),
+        "wk": cm.linear_axes("embed", "kv_heads", omn=omn),
+        "wv": cm.linear_axes("embed", "kv_heads", omn=omn),
+        "wo": cm.linear_axes("q_heads", "embed", omn=omn),
+    }
+    if cfg.qk_norm:
+        ax["q_norm"] = (None,)
+        ax["k_norm"] = (None,)
+    return ax
+
+
+def _project_qkv(p, x, cfg, *, bits, qcfg, positions=None):
+    B, S, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = cm.qlinear(p["wq"], x, bits=bits, qcfg=qcfg, kind="attn").reshape(B, S, h, hd)
+    k = cm.qlinear(p["wk"], x, bits=bits, qcfg=qcfg, kind="attn").reshape(B, S, kh, hd)
+    v = cm.qlinear(p["wv"], x, bits=bits, qcfg=qcfg, kind="attn").reshape(B, S, kh, hd)
+    if cfg.qk_norm:
+        q = cm.rmsnorm_1d(p["q_norm"], q)
+        k = cm.rmsnorm_1d(p["k_norm"], k)
+    if positions is not None:
+        if cfg.m_rope:
+            q = cm.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = cm.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = cm.apply_rope(q, positions, cfg.rope_theta)
+            k = cm.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Attention on one (q-block, kv-prefix) pair, GROUPED einsum form.
+
+    K/V are never repeated across query groups: q is viewed as
+    (B, Sq, KH, G, D) and contracted against k (B, Sk, KH, D) directly.
+    This matters under tensor parallelism -- repeating the KV tensor
+    forces GSPMD to reshard (all-gather) the cache; the grouped einsum
+    keeps the cache in its stored sharding and only psums the small
+    partial logits when D is model-sharded. fp32 accumulation via
+    preferred_element_type (inputs stay bf16 on the wire).
+    """
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = D**-0.5
+    qg = q.reshape(B, Sq, KH, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(ki[None, None, None] <= qi[None, None, None],
+                           logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, D).astype(v.dtype)
+
+
+def causal_attention(q, k, v, chunk: int = 1024):
+    """Triangular block attention. q: (B,S,H,D); k,v: (B,S,KH,D)."""
+    B, S, H, D = q.shape
+    if S <= chunk:
+        return _sdpa(q, k, v, causal=True)
+    n = math.ceil(S / chunk)
+    outs = []
+    for i in range(n):
+        lo, hi = i * chunk, min((i + 1) * chunk, S)
+        outs.append(
+            _sdpa(q[:, lo:hi], k[:, :hi], v[:, :hi], causal=True, q_offset=lo)
+        )
+    return jnp.concatenate(outs, axis=1)
+
+
+def full_attention(q, k, v):
+    """Bidirectional attention (encoder / cross)."""
+    return _sdpa(q, k, v, causal=False)
+
+
+def apply_attention(
+    p, x, cfg, *, bits, qcfg: QuantConfig, positions, causal: bool = True,
+    chunk: int = 1024,
+):
+    """Training/prefill forward. x: (B, S, d) -> (B, S, d)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, bits=bits, qcfg=qcfg, positions=positions)
+    if causal:
+        o = causal_attention(q, k, v, chunk=chunk)
+    else:
+        o = full_attention(q, k, v)
+    o = o.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim)
+    return cm.qlinear(p["wo"], o, bits=bits, qcfg=qcfg, kind="attn")
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, layers: int | None = None):
+    kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (batch, max_len, kh, hd)
+    if layers is not None:
+        shape = (layers,) + shape
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_axes(layers: bool = True):
+    base = ("batch", "kv_seq", "kv_heads_cache", "head_dim_cache")
+    if layers:
+        base = ("layer",) + base
+    return {"k": base, "v": base}
+
+
+def decode_attention(
+    p, x, cache, pos, cfg, *, bits, qcfg: QuantConfig,
+):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 current index.
+
+    Returns (out (B, 1, d), updated cache). The cache holds max_len
+    entries; positions > pos are masked out.
+    """
+    B = x.shape[0]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(pos, (B, 1, 3)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, bits=bits, qcfg=qcfg, positions=positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1
+    )
+    # grouped einsum: the cache is consumed in its stored sharding; no
+    # head-repeat, no resharding, fp32 accumulation only.
+    G = h // kh
+    qg = q.reshape(B, 1, kh, G, hd)
+    scale = hd**-0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    mask = (jnp.arange(k_cache.shape[1]) <= pos)[None, None, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, h * hd)
+    out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg, kind="attn")
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,266 @@
+"""Shared model building blocks (pure JAX, pytree params).
+
+Conventions
+-----------
+* A "module" is an `init_*(key, cfg) -> params` function plus an
+  `apply`-style pure function. Params are plain nested dicts.
+* Every parameter has a parallel *logical axes* entry (same tree
+  structure, leaves = tuple of logical axis names) produced by the
+  matching `*_axes` function; `repro.runtime.sharding` maps logical
+  axes onto the device mesh.
+* Quantized projections route through `qlinear`, the single integration
+  point of MatQuant with every architecture. `bits` may be None (bf16),
+  a Python int, or a traced scalar (dynamic per-layer Mix'n'Match).
+"""
+
+from __future__ import annotations
+
+import contextvars
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import omniquant as omni
+from repro.core.quant import QuantConfig, fake_quant
+
+# ---------------------------------------------------------------------------
+# Activation-sharding hook. The launcher installs a resolver mapping
+# logical activation axes -> PartitionSpec; inside plain tests it is a
+# no-op so models stay mesh-agnostic.
+# ---------------------------------------------------------------------------
+
+_ACT_RESOLVER: contextvars.ContextVar[Callable | None] = contextvars.ContextVar(
+    "act_resolver", default=None
+)
+
+
+def set_act_resolver(fn: Callable | None):
+    return _ACT_RESOLVER.set(fn)
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint via installed logical-axis resolver."""
+    resolver = _ACT_RESOLVER.get()
+    if resolver is None:
+        return x
+    spec = resolver((logical_axes, x.shape))
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def scan_layers(body, carry, xs, unroll: bool = False):
+    """lax.scan over stacked layer params, or a Python unroll.
+
+    The unrolled form exists for *cost analysis*: XLA's cost_analysis
+    counts a while-loop body once regardless of trip count, so the
+    roofline harness compiles shallow unrolled variants and
+    extrapolates per-layer terms (launch/roofline.py).
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = (d_in**-0.5) if scale is None else scale
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear -- the paper's integration point.
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in, d_out, qcfg: QuantConfig, kind: str = "ffn",
+                dtype=jnp.float32, bias: bool = False, scale=None):
+    p = {"w": dense_init(key, d_in, d_out, dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    if qcfg.mode == "omniquant" and _in_scope(qcfg, kind):
+        p["omni"] = omni.init_aux(d_in, d_out, jnp.float32)
+    return p
+
+
+def linear_axes(a_in: str, a_out: str, bias: bool = False, omn: bool = False):
+    ax = {"w": (a_in, a_out)}
+    if bias:
+        ax["b"] = (a_out,)
+    if omn:
+        ax["omni"] = {
+            "gamma_logit": (None, a_out),
+            "beta_logit": (None, a_out),
+            "shift": (a_in,),
+            "log_scale": (a_in,),
+        }
+    return ax
+
+
+def _in_scope(qcfg: QuantConfig, kind: str) -> bool:
+    if kind == "ffn":
+        return True
+    return kind in qcfg.scope  # 'attn' in 'ffn+attn'
+
+
+def qlinear(p, x, *, bits, qcfg: QuantConfig, kind: str = "ffn"):
+    """x @ W with MatQuant fake-quantization applied per mode/scope.
+
+    x: (..., d_in); returns (..., d_out) in x.dtype. If `p` holds a
+    PACKED plane ({'words', 'alpha', 'beta'}, from
+    serve.engine.materialize_packed_params), the weights are expanded
+    from r-bit codes after the (much smaller) HBM read -- the jnp twin
+    of kernels/quant_matmul; on TPU the Pallas kernel takes this path.
+    """
+    pw = p.get("w")
+    if isinstance(pw, dict) and "words" in pw:
+        from repro.core import packing as _packing
+        r = qcfg.packed_bits
+        K, N = x.shape[-1], pw["alpha"].shape[-1]
+        if pw["words"].shape[-2] == K:       # packed along N (down-type)
+            codes = _packing.unpack_codes(pw["words"], r, N, axis=-1)
+        else:                                # packed along K
+            codes = _packing.unpack_codes(pw["words"], r, K, axis=-2)
+        w_hat = (pw["alpha"] * codes.astype(jnp.float32)
+                 - pw["beta"]).astype(x.dtype)
+        y = x @ w_hat
+        return y if p.get("b") is None else y + p["b"].astype(y.dtype)
+    w = pw
+    b = p.get("b")
+    if bits is None or qcfg.mode == "bf16" or not _in_scope(qcfg, kind):
+        y = x @ w.astype(x.dtype)
+        return y if b is None else y + b.astype(y.dtype)
+    if qcfg.mode == "qat":
+        w_q = fake_quant(
+            w, qcfg.parent_bits, bits, axis=0,
+            extra_precision=qcfg.extra_precision,
+        )
+        y = x @ w_q.astype(x.dtype)
+        return y if b is None else y + b.astype(y.dtype)
+    if qcfg.mode == "omniquant":
+        y = omni.apply_linear(
+            jax.lax.stop_gradient(w), p["omni"], x, bits,
+            parent_bits=qcfg.parent_bits,
+            extra_precision=qcfg.extra_precision,
+            bias=b,
+        )
+        return y
+    raise ValueError(f"unknown quant mode {qcfg.mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_1d(scale, x, eps: float = 1e-6):
+    """RMSNorm with a raw scale vector (used for per-head qk-norm)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings: standard RoPE and Qwen2-VL's multimodal M-RoPE.
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, D/2)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: tuple[int, int, int],
+    theta: float = 10000.0,
+):
+    """Qwen2-VL M-RoPE. positions: (B, S, 3) = (t, h, w) ids.
+
+    Frequency channels are partitioned into three contiguous sections
+    (temporal, height, width); each section rotates by its own position
+    stream. Text tokens carry t == h == w so M-RoPE degenerates to RoPE.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(d, theta)                       # (half,)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )                                                # (half,) in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :], positions.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )                                                # (B, S, half)
+    ang = pos * inv
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def remat(fn, policy: str = "block"):
+    """jax.checkpoint with a named policy.
+
+    'block' -- recompute everything (minimum memory, +1 forward of FLOPs)
+    'dots'  -- save matmul outputs without batch dims (recompute only the
+               cheap elementwise chain; trades stash bytes for ~25% fewer
+               backward FLOPs vs 'block')
+    """
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)

@@ -1,0 +1,165 @@
+"""FFN blocks: SwiGLU (LLM default) and GELU MLP (Whisper), plus the
+top-k routed MoE with capacity-based static-shape dispatch (TPU-native:
+sorted scatter into (E, C, d) buffers feeding one batched einsum on the
+MXU, instead of the GPU-style dynamic segment matmuls)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig, fake_quant
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, d: int, d_ff: int, qcfg: QuantConfig, dtype=jnp.float32,
+             gated: bool = True, bias: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": cm.init_linear(ks[0], d, d_ff, qcfg, kind="ffn", dtype=dtype, bias=bias),
+        "down": cm.init_linear(ks[1], d_ff, d, qcfg, kind="ffn", dtype=dtype,
+                               bias=bias, scale=d_ff**-0.5),
+    }
+    if gated:
+        p["gate"] = cm.init_linear(ks[2], d, d_ff, qcfg, kind="ffn", dtype=dtype)
+    return p
+
+
+def ffn_axes(gated: bool = True, omn: bool = False, bias: bool = False):
+    ax = {
+        "up": cm.linear_axes("embed", "mlp", omn=omn, bias=bias),
+        "down": cm.linear_axes("mlp", "embed", omn=omn, bias=bias),
+    }
+    if gated:
+        ax["gate"] = cm.linear_axes("embed", "mlp", omn=omn)
+    return ax
+
+
+def apply_ffn(p, x, *, bits, qcfg: QuantConfig, gated: bool = True):
+    up = cm.qlinear(p["up"], x, bits=bits, qcfg=qcfg, kind="ffn")
+    if gated:
+        gate = cm.qlinear(p["gate"], x, bits=bits, qcfg=qcfg, kind="ffn")
+        hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        hidden = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return cm.qlinear(p["down"], hidden, bits=bits, qcfg=qcfg, kind="ffn")
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, d: int, d_ff: int, num_experts: int, qcfg: QuantConfig,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    scale_in, scale_out = d**-0.5, d_ff**-0.5
+
+    def expert_stack(k, d_in, d_out, scale):
+        return (
+            jax.random.truncated_normal(k, -2.0, 2.0, (num_experts, d_in, d_out)) * scale
+        ).astype(dtype)
+
+    return {
+        "router": {"w": cm.dense_init(ks[0], d, num_experts, jnp.float32)},
+        "up": {"w": expert_stack(ks[1], d, d_ff, scale_in)},
+        "gate": {"w": expert_stack(ks[2], d, d_ff, scale_in)},
+        "down": {"w": expert_stack(ks[3], d_ff, d, scale_out)},
+    }
+
+
+def moe_axes():
+    return {
+        "router": {"w": ("embed", None)},  # router stays bf16/fp32 + replicated
+        "up": {"w": ("experts", "embed", "expert_mlp")},
+        "gate": {"w": ("experts", "embed", "expert_mlp")},
+        "down": {"w": ("experts", "expert_mlp", "embed")},
+    }
+
+
+def _expert_weights(p, *, bits, qcfg: QuantConfig):
+    """Fake-quantize the expert stacks (per-expert, per-out-channel groups)."""
+    if bits is None or qcfg.mode == "bf16":
+        return p["up"]["w"], p["gate"]["w"], p["down"]["w"]
+    def fq(w):
+        # minmax group = the reduction dim (axis 1 of (E, d_in, d_out))
+        return fake_quant(w, qcfg.parent_bits, bits, axis=1,
+                          extra_precision=qcfg.extra_precision)
+    return fq(p["up"]["w"]), fq(p["gate"]["w"]), fq(p["down"]["w"])
+
+
+def apply_moe(p, x, *, bits, qcfg: QuantConfig, top_k: int,
+              capacity_factor: float = 1.25):
+    """Top-k routed MoE. x: (B, S, d) -> (B, S, d), plus aux loss.
+
+    ROW-LOCAL sort-based dispatch: routing, sorting, and the capacity
+    scatter happen independently per batch row (vmap), so under data
+    parallelism no dispatch op ever crosses shards -- the only MoE
+    collectives left are the weight/grad reductions. Evolution, driven
+    by the roofline (EXPERIMENTS.md §Perf cell B):
+      B0 cumsum dispatch, unconstrained  -> einsums replicated (16x
+         FLOPs) + O(n^2)-cost reduce-window cumsum;
+      B3 global sort dispatch + sharding constraints -> FLOPs fixed but
+         the 8.4M-slot global argsort forced cross-shard collectives;
+      B4 (this) per-row sort -> dispatch local, capacity per (row,
+         expert), einsums batched over the sharded row dim.
+    """
+    B, S, d = x.shape
+    E = p["router"]["w"].shape[-1]
+    C = max(int(capacity_factor * top_k * S / E), 1)
+    w_up, w_gate, w_down = _expert_weights(p, bits=bits, qcfg=qcfg)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B, S, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)          # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    tok_idx = jnp.repeat(jnp.arange(S), top_k)
+
+    def dispatch_row(xr, eidr, gvr):
+        """xr: (S, d); eidr/gvr: (S, k) -> scatter into (E, C, d)."""
+        n = S * top_k
+        eid = eidr.reshape(n)
+        order = jnp.argsort(eid, stable=True)
+        sorted_eid = eid[order]
+        expert_start = jnp.searchsorted(sorted_eid, jnp.arange(E), side="left")
+        pos_sorted = jnp.arange(n) - expert_start[sorted_eid]
+        inv = jnp.argsort(order, stable=True)
+        pos = pos_sorted[inv]
+        keep = pos < C
+        gv = gvr.reshape(n) * keep.astype(jnp.float32)
+        pos_c = jnp.clip(pos, 0, C - 1)
+        buf = jnp.zeros((E, C, d), xr.dtype)
+        buf = buf.at[eid, pos_c].add(xr[tok_idx] * keep[:, None].astype(xr.dtype))
+        return buf, eid, pos_c, gv
+
+    def combine_row(out_buf, eid, pos_c, gv):
+        y = out_buf[eid, pos_c] * gv[:, None].astype(out_buf.dtype)
+        return jnp.zeros((S, d), out_buf.dtype).at[tok_idx].add(y)
+
+    # dispatch per row (vmap); einsums + sharding constraints OUTSIDE the
+    # vmap so the batched buffers keep their 'batch' sharding explicit
+    bufs, eids, poss, gvs = jax.vmap(dispatch_row)(x, expert_ids, gate_vals)
+    bufs = cm.constrain(bufs, "batch", "experts", None, None)
+    up = jnp.einsum("becd,edf->becf", bufs, w_up.astype(x.dtype))
+    gate = jnp.einsum("becd,edf->becf", bufs, w_gate.astype(x.dtype))
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out_bufs = jnp.einsum("becf,efd->becd", hidden, w_down.astype(x.dtype))
+    out_bufs = cm.constrain(out_bufs, "batch", "experts", None, None)
+    out = jax.vmap(combine_row)(out_bufs, eids, poss, gvs)
+    out = cm.constrain(out, "batch", "seq", "embed")
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))
+    fe = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+    return out, aux

@@ -1,0 +1,553 @@
+"""Decoder-only LM assembly: dense / VLM / MoE / xLSTM / Zamba2-hybrid.
+
+Homogeneous stacks (dense, vlm, moe, hybrid-mamba) use scan-over-layers
+with stacked params -- one traced block regardless of depth, which keeps
+HLO small and compile time flat for the 72B dry-runs. xLSTM (alternating
+mLSTM/sLSTM) uses a Python loop (12 layers, heterogeneous blocks).
+
+`bits` is None (bf16), an int, or a per-layer (L,) array (Mix'n'Match);
+inside scans it rides along as a scanned input so each layer can be
+fake-quantized at its own precision.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+
+
+# ---------------------------------------------------------------------------
+# init / axes
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def init_lm(key, cfg):
+    dtype = _dtype(cfg)
+    k_embed, k_layers, k_extra, k_head = jax.random.split(key, 4)
+    qcfg = cfg.quant
+    V = cfg.padded_vocab
+    params = {"embed": {"w": cm.embed_init(k_embed, V, cfg.d_model, dtype)},
+              "final_norm": cm.init_rmsnorm(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": cm.dense_init(k_head, cfg.d_model, V, dtype)}
+
+    L = cfg.num_layers
+    if cfg.family in ("dense", "vlm"):
+        def one(k):
+            ka, kf = jax.random.split(k)
+            return {
+                "norm1": cm.init_rmsnorm(cfg.d_model, dtype),
+                "attn": attn.init_attention(ka, cfg, qcfg, dtype),
+                "norm2": cm.init_rmsnorm(cfg.d_model, dtype),
+                "ffn": ffn_mod.init_ffn(kf, cfg.d_model, cfg.d_ff, qcfg, dtype),
+            }
+        params["layers"] = jax.vmap(one)(jax.random.split(k_layers, L))
+    elif cfg.family == "moe":
+        def one(k):
+            ka, kf = jax.random.split(k)
+            return {
+                "norm1": cm.init_rmsnorm(cfg.d_model, dtype),
+                "attn": attn.init_attention(ka, cfg, qcfg, dtype),
+                "norm2": cm.init_rmsnorm(cfg.d_model, dtype),
+                "moe": ffn_mod.init_moe(kf, cfg.d_model, cfg.d_ff,
+                                        cfg.num_experts, qcfg, dtype),
+            }
+        params["layers"] = jax.vmap(one)(jax.random.split(k_layers, L))
+    elif cfg.family == "hybrid":
+        def one(k):
+            return {
+                "norm1": cm.init_rmsnorm(cfg.d_model, dtype),
+                "mamba": ssm_mod.init_mamba2(k, cfg, qcfg, dtype),
+            }
+        params["layers"] = jax.vmap(one)(jax.random.split(k_layers, L))
+        ka, kf = jax.random.split(k_extra)
+        params["shared_attn"] = {
+            "norm1": cm.init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn.init_attention(ka, cfg, qcfg, dtype),
+            "norm2": cm.init_rmsnorm(cfg.d_model, dtype),
+            "ffn": ffn_mod.init_ffn(kf, cfg.d_model, cfg.d_ff, qcfg, dtype),
+        }
+    elif cfg.family == "ssm":  # xLSTM: alternating mLSTM / sLSTM
+        layers = []
+        for i, k in enumerate(jax.random.split(k_layers, L)):
+            if i % 2 == 0:
+                layers.append({
+                    "norm1": cm.init_rmsnorm(cfg.d_model, dtype),
+                    "mlstm": ssm_mod.init_mlstm(k, cfg, qcfg, dtype),
+                })
+            else:
+                layers.append({
+                    "norm1": cm.init_rmsnorm(cfg.d_model, dtype),
+                    "slstm": ssm_mod.init_slstm(k, cfg, qcfg, dtype),
+                })
+        params["layers"] = layers
+    else:
+        raise ValueError(f"init_lm does not handle family {cfg.family!r}")
+    return params
+
+
+def lm_axes(cfg):
+    omn = cfg.quant.mode == "omniquant"
+    axes = {"embed": {"w": ("vocab", None)},
+            "final_norm": {"scale": ("embed",)}}
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = {"w": (None, "vocab")}
+
+    def stack(block_axes):
+        return jax.tree.map(
+            lambda t: ("layer",) + t,
+            block_axes,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+    norm = {"scale": ("embed",)}
+    if cfg.family in ("dense", "vlm"):
+        block = {"norm1": norm, "attn": attn.attention_axes(cfg, omn),
+                 "norm2": norm, "ffn": ffn_mod.ffn_axes(True, omn)}
+        axes["layers"] = stack(block)
+    elif cfg.family == "moe":
+        block = {"norm1": norm, "attn": attn.attention_axes(cfg, omn),
+                 "norm2": norm, "moe": ffn_mod.moe_axes()}
+        axes["layers"] = stack(block)
+    elif cfg.family == "hybrid":
+        block = {"norm1": norm, "mamba": ssm_mod.mamba2_axes(omn)}
+        axes["layers"] = stack(block)
+        axes["shared_attn"] = {"norm1": norm, "attn": attn.attention_axes(cfg, omn),
+                               "norm2": norm, "ffn": ffn_mod.ffn_axes(True, omn)}
+    elif cfg.family == "ssm":
+        layers = []
+        for i in range(cfg.num_layers):
+            if i % 2 == 0:
+                layers.append({"norm1": norm, "mlstm": ssm_mod.mlstm_axes(omn)})
+            else:
+                layers.append({"norm1": norm, "slstm": ssm_mod.slstm_axes(omn)})
+        axes["layers"] = layers
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+
+def _bits_per_layer(bits, L):
+    """Normalize bits to a scanned (L,) array or None."""
+    if bits is None:
+        return None
+    if isinstance(bits, int):
+        return jnp.full((L,), bits, jnp.int32)
+    bits = jnp.asarray(bits, jnp.int32)
+    if bits.ndim == 0:
+        return jnp.broadcast_to(bits, (L,))
+    assert bits.shape == (L,), (bits.shape, L)
+    return bits
+
+
+def _embed(params, cfg, tokens, vision_embeds=None):
+    h = jnp.take(params["embed"]["w"], tokens, axis=0)
+    if vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        h = jnp.concatenate([vision_embeds.astype(h.dtype), h[:, nv:]], axis=1)
+    return cm.constrain(h, "batch", "seq", "embed")
+
+
+def _logits(params, cfg, h):
+    h = cm.rmsnorm(params["final_norm"], h)
+    if cfg.tie_embeddings:
+        w = params["embed"]["w"].astype(h.dtype).T
+    else:
+        w = params["lm_head"]["w"].astype(h.dtype)
+    return cm.constrain(h @ w, "batch", "seq", "vocab")
+
+
+def _dense_block(lp, x, cfg, bits, positions, qcfg, chunk):
+    h = x + attn.apply_attention(
+        lp["attn"], cm.rmsnorm(lp["norm1"], x), cfg,
+        bits=bits, qcfg=qcfg, positions=positions, causal=True, chunk=chunk)
+    h = cm.constrain(h, "batch", "seq", "embed")
+    out = h + ffn_mod.apply_ffn(lp["ffn"], cm.rmsnorm(lp["norm2"], h),
+                                bits=bits, qcfg=qcfg)
+    return cm.constrain(out, "batch", "seq", "embed")
+
+
+def _moe_block(lp, x, cfg, bits, positions, qcfg, chunk):
+    h = x + attn.apply_attention(
+        lp["attn"], cm.rmsnorm(lp["norm1"], x), cfg,
+        bits=bits, qcfg=qcfg, positions=positions, causal=True, chunk=chunk)
+    y, aux = ffn_mod.apply_moe(lp["moe"], cm.rmsnorm(lp["norm2"], h),
+                               bits=bits, qcfg=qcfg, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+    return cm.constrain(h + y, "batch", "seq", "embed"), aux
+
+
+def forward_lm(params, tokens, cfg, *, bits=None, positions=None,
+               vision_embeds=None):
+    """tokens: (B, S) int32 -> (logits (B, S, V), aux_loss scalar)."""
+    qcfg = cfg.quant
+    B, S = tokens.shape
+    L = cfg.num_layers
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.m_rope:
+            positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+    bits_l = _bits_per_layer(bits, L)
+    h = _embed(params, cfg, tokens, vision_embeds)
+    aux = jnp.float32(0.0)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def body(carry, xs):
+            x, aux_acc = carry
+            lp, b = xs
+            b = None if bits_l is None else b
+            if is_moe:
+                x, a = _moe_block(lp, x, cfg, b, positions, qcfg, cfg.attn_chunk)
+                aux_acc = aux_acc + a
+            else:
+                x = _dense_block(lp, x, cfg, b, positions, qcfg, cfg.attn_chunk)
+            return (x, aux_acc), None
+
+        if cfg.remat:
+            body = cm.remat(body, cfg.remat)
+        xs = (params["layers"],
+              bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32))
+        (h, aux), _ = cm.scan_layers(body, (h, aux), xs, cfg.unroll_layers)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        period = max(cfg.attn_period, 1)
+
+        def body(carry, xs):
+            x, aux_acc = carry
+            lp, b, idx = xs
+            b = None if bits_l is None else b
+            x = x + ssm_mod.apply_mamba2(
+                lp["mamba"], cm.rmsnorm(lp["norm1"], x), cfg,
+                bits=b, qcfg=qcfg, chunk=cfg.ssm_chunk)
+            x = cm.constrain(x, "batch", "seq", "embed")
+
+            def with_attn(x):
+                return _dense_block(shared, x, cfg, b, positions, qcfg,
+                                    cfg.attn_chunk)
+
+            x = jax.lax.cond((idx % period) == period - 1, with_attn,
+                             lambda x: x, x)
+            return (x, aux_acc), None
+
+        if cfg.remat:
+            body = cm.remat(body, cfg.remat)
+        xs = (params["layers"],
+              bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32),
+              jnp.arange(L, dtype=jnp.int32))
+        (h, aux), _ = cm.scan_layers(body, (h, aux), xs, cfg.unroll_layers)
+
+    elif cfg.family == "ssm":  # xLSTM, python loop
+        def xlstm_block(lp, h, b):
+            xin = cm.rmsnorm(lp["norm1"], h)
+            if "mlstm" in lp:
+                return h + ssm_mod.apply_mlstm(lp["mlstm"], xin, cfg, bits=b,
+                                               qcfg=qcfg, chunk=cfg.ssm_chunk)
+            y, _ = ssm_mod.apply_slstm(lp["slstm"], xin, cfg, bits=b, qcfg=qcfg)
+            return h + y
+
+        if cfg.remat:
+            xlstm_block = cm.remat(xlstm_block, cfg.remat)
+        for i, lp in enumerate(params["layers"]):
+            b = None if bits_l is None else bits_l[i]
+            h = xlstm_block(lp, h, b)
+    else:
+        raise ValueError(cfg.family)
+
+    return _logits(params, cfg, h), aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with stacked caches
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg, batch: int, max_len: int):
+    """Stacked per-layer decode state for the arch family."""
+    dtype = _dtype(cfg)
+    L = cfg.num_layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"kv": attn.init_cache(cfg, batch, max_len, dtype, layers=L)}
+    if cfg.family == "hybrid":
+        return {
+            "ssm": ssm_mod.init_mamba2_state(cfg, batch, dtype, layers=L),
+            "kv": attn.init_cache(cfg, batch, max_len, dtype, layers=None),
+        }
+    if cfg.family == "ssm":
+        states = {}
+        for i in range(L):
+            if i % 2 == 0:
+                states[f"mlstm_{i}"] = ssm_mod.init_mlstm_state(cfg, batch)
+            else:
+                states[f"slstm_{i}"] = ssm_mod.init_slstm_state(cfg, batch)
+        return states
+    raise ValueError(cfg.family)
+
+
+def decode_state_axes(cfg):
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"kv": attn.cache_axes(layers=True)}
+    if cfg.family == "hybrid":
+        return {"ssm": ssm_mod.mamba2_state_axes(layers=True),
+                "kv": attn.cache_axes(layers=False)}
+    if cfg.family == "ssm":
+        out = {}
+        for i in range(cfg.num_layers):
+            if i % 2 == 0:
+                out[f"mlstm_{i}"] = {"C": ("batch", None, None, None)}
+            else:
+                out[f"slstm_{i}"] = {k: ("batch", None, None)
+                                     for k in ("h", "c", "n", "m")}
+        return out
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, state, token, pos, cfg, *, bits=None):
+    """One decoding step. token: (B, 1) int32; pos: scalar int32 index.
+
+    Returns (logits (B, 1, V), new state). Lowered by the decode_32k /
+    long_500k dry-run cells.
+    """
+    qcfg = cfg.quant
+    B = token.shape[0]
+    L = cfg.num_layers
+    bits_l = _bits_per_layer(bits, L)
+    h = jnp.take(params["embed"]["w"], token, axis=0)
+    h = cm.constrain(h, "batch", None, "embed")
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def body(x, xs):
+            lp, cache_l, b = xs
+            b = None if bits_l is None else b
+            a, new_cache = attn.decode_attention(
+                lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, pos, cfg,
+                bits=b, qcfg=qcfg)
+            x = x + a
+            if is_moe:
+                y, _ = ffn_mod.apply_moe(lp["moe"], cm.rmsnorm(lp["norm2"], x),
+                                         bits=b, qcfg=qcfg, top_k=cfg.top_k,
+                                         capacity_factor=cfg.capacity_factor)
+            else:
+                y = ffn_mod.apply_ffn(lp["ffn"], cm.rmsnorm(lp["norm2"], x),
+                                      bits=b, qcfg=qcfg)
+            return x + y, new_cache
+
+        xs = (params["layers"], state["kv"],
+              bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32))
+        h, new_kv = cm.scan_layers(body, h, xs, cfg.unroll_layers)
+        return _logits(params, cfg, h), {"kv": new_kv}
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        period = max(cfg.attn_period, 1)
+        kv = state["kv"]
+
+        def body(carry, xs):
+            x, kv_c = carry
+            lp, st_l, b, idx = xs
+            b = None if bits_l is None else b
+            y, st_new = ssm_mod.decode_mamba2(
+                lp["mamba"], cm.rmsnorm(lp["norm1"], x), st_l, cfg,
+                bits=b, qcfg=qcfg)
+            x = x + y
+
+            def with_attn(args):
+                x, kv_c = args
+                a, kv_new = attn.decode_attention(
+                    shared["attn"], cm.rmsnorm(shared["norm1"], x), kv_c,
+                    pos, cfg, bits=b, qcfg=qcfg)
+                x = x + a
+                x = x + ffn_mod.apply_ffn(
+                    shared["ffn"], cm.rmsnorm(shared["norm2"], x),
+                    bits=b, qcfg=qcfg)
+                return x, kv_new
+
+            x, kv_c = jax.lax.cond(
+                (idx % period) == period - 1, with_attn, lambda a: a, (x, kv_c))
+            return (x, kv_c), st_new
+
+        xs = (params["layers"], state["ssm"],
+              bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32),
+              jnp.arange(L, dtype=jnp.int32))
+        (h, kv_new), ssm_new = cm.scan_layers(body, (h, kv), xs, cfg.unroll_layers)
+        return _logits(params, cfg, h), {"ssm": ssm_new, "kv": kv_new}
+
+    if cfg.family == "ssm":
+        new_state = {}
+        for i, lp in enumerate(params["layers"]):
+            b = None if bits_l is None else bits_l[i]
+            xin = cm.rmsnorm(lp["norm1"], h)
+            if "mlstm" in lp:
+                y, st = ssm_mod.decode_mlstm(lp["mlstm"], xin,
+                                             state[f"mlstm_{i}"], cfg,
+                                             bits=b, qcfg=qcfg)
+                new_state[f"mlstm_{i}"] = st
+            else:
+                y, st = ssm_mod.decode_slstm(lp["slstm"], xin,
+                                             state[f"slstm_{i}"], cfg,
+                                             bits=b, qcfg=qcfg)
+                new_state[f"slstm_{i}"] = st
+            h = h + y
+        return _logits(params, cfg, h), new_state
+
+    raise ValueError(cfg.family)
+
+
+def prefill(params, tokens, cfg, *, bits=None, max_len=None,
+            positions=None, vision_embeds=None):
+    """Process a full prompt; returns (last-position logits, decode state).
+
+    For attention families the KV cache is materialized from the
+    projected k/v of the forward pass (padded to max_len); for SSM
+    families the final recurrent state is returned.
+    """
+    qcfg = cfg.quant
+    B, S = tokens.shape
+    L = cfg.num_layers
+    max_len = max_len or S
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.m_rope:
+            positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+    bits_l = _bits_per_layer(bits, L)
+    h = _embed(params, cfg, tokens, vision_embeds)
+
+    def pad_cache(k):
+        if max_len == S:
+            return k
+        pad = jnp.zeros((B, max_len - S) + k.shape[2:], k.dtype)
+        return jnp.concatenate([k, pad], axis=1)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def body(x, xs):
+            lp, b = xs
+            b = None if bits_l is None else b
+            xin = cm.rmsnorm(lp["norm1"], x)
+            q, k, v = attn._project_qkv(lp["attn"], xin, cfg, bits=b,
+                                        qcfg=qcfg, positions=positions)
+            o = attn.causal_attention(q, k, v, chunk=cfg.attn_chunk)
+            o = o.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim)
+            x = x + cm.qlinear(lp["attn"]["wo"], o, bits=b, qcfg=qcfg, kind="attn")
+            if is_moe:
+                y, _ = ffn_mod.apply_moe(lp["moe"], cm.rmsnorm(lp["norm2"], x),
+                                         bits=b, qcfg=qcfg, top_k=cfg.top_k,
+                                         capacity_factor=cfg.capacity_factor)
+            else:
+                y = ffn_mod.apply_ffn(lp["ffn"], cm.rmsnorm(lp["norm2"], x),
+                                      bits=b, qcfg=qcfg)
+            dtype = _dtype(cfg)
+            return x + y, {"k": pad_cache(k).astype(dtype),
+                           "v": pad_cache(v).astype(dtype)}
+
+        if cfg.remat:
+            body = cm.remat(body, cfg.remat)
+        xs = (params["layers"],
+              bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32))
+        h, kv = cm.scan_layers(body, h, xs, cfg.unroll_layers)
+        return _logits(params, cfg, h[:, -1:]), {"kv": kv}
+
+    if cfg.family in ("hybrid", "ssm"):
+        # run the training forward but thread/collect final states
+        state = init_decode_state(cfg, B, max_len)
+        if cfg.family == "hybrid":
+            shared = params["shared_attn"]
+            period = max(cfg.attn_period, 1)
+            kv = state["kv"]
+
+            def body(carry, xs):
+                x, kv_c = carry
+                lp, b, idx = xs
+                b = None if bits_l is None else b
+                xin = cm.rmsnorm(lp["norm1"], x)
+                z, xi, bv, cv, dt, d_inner, N, H = ssm_mod._mamba2_proj(
+                    lp["mamba"], xin, cfg, bits=b, qcfg=qcfg)
+                xbc, conv_buf = ssm_mod._causal_conv(
+                    jnp.concatenate([xi, bv, cv], axis=-1), lp["mamba"]["conv_w"])
+                xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+                xi, bv, cv = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+                P = d_inner // H
+                xi = xi.reshape(B, S, H, P)
+                bh = jnp.broadcast_to(bv[:, :, None, :], (B, S, H, N))
+                ch = jnp.broadcast_to(cv[:, :, None, :], (B, S, H, N))
+                dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["mamba"]["dt_bias"])
+                dA = dt * (-jnp.exp(lp["mamba"]["A_log"]))
+                y, h_fin = ssm_mod.ssd_chunked(xi, bh, ch, dA, dt,
+                                               chunk=min(cfg.ssm_chunk, S))
+                y = y + lp["mamba"]["D"][None, None, :, None] * xi.astype(jnp.float32)
+                y = y.reshape(B, S, d_inner).astype(x.dtype)
+                y = cm.rmsnorm(lp["mamba"]["norm"],
+                               y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+                x = x + cm.qlinear(lp["mamba"]["wo"], y, bits=b, qcfg=qcfg, kind="ffn")
+
+                def with_attn(args):
+                    x, kv_c = args
+                    xin2 = cm.rmsnorm(shared["norm1"], x)
+                    q, k, v = attn._project_qkv(shared["attn"], xin2, cfg,
+                                                bits=b, qcfg=qcfg,
+                                                positions=positions)
+                    o = attn.causal_attention(q, k, v, chunk=cfg.attn_chunk)
+                    o = o.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim)
+                    x = x + cm.qlinear(shared["attn"]["wo"], o, bits=b,
+                                       qcfg=qcfg, kind="attn")
+                    x = x + ffn_mod.apply_ffn(
+                        shared["ffn"], cm.rmsnorm(shared["norm2"], x),
+                        bits=b, qcfg=qcfg)
+                    dtype = _dtype(cfg)
+                    return x, {"k": pad_cache(k).astype(dtype),
+                               "v": pad_cache(v).astype(dtype)}
+
+                x, kv_c = jax.lax.cond(
+                    (idx % period) == period - 1, with_attn, lambda a: a,
+                    (x, kv_c))
+                # conv_buf holds the last k-1 *pre-conv* inputs -- exactly
+                # what decode_mamba2 expects as its rolling buffer.
+                st = {"h": h_fin, "conv": conv_buf.astype(_dtype(cfg))}
+                return (x, kv_c), st
+
+            xs = (params["layers"],
+                  bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32),
+                  jnp.arange(L, dtype=jnp.int32))
+            (h, kv_new), ssm_new = cm.scan_layers(body, (h, kv), xs, cfg.unroll_layers)
+            return _logits(params, cfg, h[:, -1:]), {"ssm": ssm_new, "kv": kv_new}
+
+        # xLSTM prefill: python loop, collect states
+        new_state = {}
+        for i, lp in enumerate(params["layers"]):
+            b = None if bits_l is None else bits_l[i]
+            xin = cm.rmsnorm(lp["norm1"], h)
+            if "mlstm" in lp:
+                q, k, v, ig, f, H, dh = ssm_mod._mlstm_qkv(lp["mlstm"], xin, cfg,
+                                                           bits=b, qcfg=qcfg)
+                v_aug = jnp.concatenate(
+                    [v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+                y_aug, C_fin = ssm_mod.ssd_chunked(v_aug, k, q, f, ig,
+                                                   chunk=min(cfg.ssm_chunk, S))
+                y = ssm_mod._mlstm_norm_out(lp["mlstm"], y_aug, None, xin, dh,
+                                            bits=b, qcfg=qcfg)
+                new_state[f"mlstm_{i}"] = {"C": C_fin}
+            else:
+                y, st = ssm_mod.apply_slstm(lp["slstm"], xin, cfg, bits=b, qcfg=qcfg)
+                new_state[f"slstm_{i}"] = st
+            h = h + y
+        return _logits(params, cfg, h[:, -1:]), new_state
+
+    raise ValueError(cfg.family)

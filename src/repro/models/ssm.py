@@ -1,0 +1,396 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+One generic chunked SSD primitive serves both Mamba2 and mLSTM -- they
+share the recurrence  h_t = exp(dA_t) * h_t-1 + g_t * (b_t  v_t^T),
+y_t = c_t . h_t,  differing only in how (dA, g, b, c, v) are produced.
+The chunked form (intra-chunk masked matmul + inter-chunk lax.scan) is
+MXU-friendly: all heavy math is batched matmuls; only the tiny per-chunk
+state recurrence is sequential.
+
+sLSTM is a true recurrence (h feeds back through per-head R matrices)
+and is computed with a lax.scan over time.
+
+Quantization: the parameter-heavy in/out projections route through
+`qlinear` (scope 'ffn' -- see DESIGN.md on arch applicability); the
+small, sensitive state parameters (A_log, dt_bias, conv, gates' R)
+stay full precision, mirroring the paper quantizing only FFN weights.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# Generic chunked SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(v, b, c, dA, g, chunk: int = 128, h0=None):
+    """Chunked linear-recurrent attention.
+
+    v: (B, T, H, P) values;  b: (B, T, H, N) input keys;
+    c: (B, T, H, N) output queries;  dA: (B, T, H) log-decay (<= 0);
+    g: (B, T, H) input gate (dt for Mamba2, i for mLSTM).
+    Returns (y: (B, T, H, P), h_final: (B, H, N, P)).
+    """
+    B, T, H, P = v.shape
+    N = b.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc, Q = T // chunk, chunk
+    rs = lambda a: a.reshape((B, nc, Q) + a.shape[2:])
+    v, b, c, dA, g = map(rs, (v, b, c, dA, g))
+    dA = dA.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+
+    cum = jnp.cumsum(dA, axis=2)                            # (B,nc,Q,H)
+    # intra-chunk: scores[t,s] = (c_t . b_s) * exp(cum_t - cum_s) * g_s, s<=t
+    L = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Q,S,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(mask, L, -jnp.inf)
+    qk = jnp.einsum("bcqhn,bcshn->bcqsh", c.astype(jnp.float32), b.astype(jnp.float32))
+    scores = qk * jnp.exp(L) * g[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", scores, v.astype(jnp.float32))
+
+    # per-chunk state contribution and decay
+    tail = cum[:, :, -1:, :] - cum                          # (B,nc,Q,H) >= 0? no: <=0 negated
+    w = jnp.exp(tail) * g                                   # weight of step s into chunk state
+    S_c = jnp.einsum("bcsh,bcshn,bcshp->bchnp", w, b.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    G_c = jnp.exp(cum[:, :, -1, :])                         # (B,nc,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, inputs):
+        s_c, g_c = inputs
+        h_new = g_c[:, :, None, None] * h + s_c
+        return h_new, h  # emit the PRE-update state for inter-chunk reads
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(G_c, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum(
+        "bcqhn,bchnp->bcqhp", (c.astype(jnp.float32) * jnp.exp(cum)[..., None]), h_prevs
+    )
+    y = (y_intra + y_inter).reshape(B, T, H, P)
+    return y, h_final
+
+
+def ssd_decode_step(h, v, b, c, dA, g):
+    """Single-token recurrence. h: (B,H,N,P); v:(B,H,P); b,c:(B,H,N);
+    dA,g:(B,H). Returns (y: (B,H,P), h_new)."""
+    h_new = jnp.exp(dA.astype(jnp.float32))[:, :, None, None] * h + (
+        g.astype(jnp.float32)[:, :, None, None]
+        * b.astype(jnp.float32)[:, :, :, None]
+        * v.astype(jnp.float32)[:, :, None, :]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", c.astype(jnp.float32), h_new)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, buf=None):
+    """Depthwise causal conv. x: (B, T, C); w: (k, C). If buf (B, k-1, C)
+    is given (decode), prepend it; else left-pad zeros."""
+    k = w.shape[0]
+    if buf is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = buf.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    new_buf = xp[:, -(k - 1):] if k > 1 else None
+    return out, new_buf
+
+
+def init_mamba2(key, cfg, qcfg: QuantConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    H, N, k = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    conv_ch = d_inner + 2 * N  # x, B, C share the conv (G=1 groups)
+    return {
+        "wz": cm.init_linear(ks[0], d, d_inner, qcfg, kind="ffn", dtype=dtype),
+        "wx": cm.init_linear(ks[1], d, d_inner, qcfg, kind="ffn", dtype=dtype),
+        "wB": {"w": cm.dense_init(ks[2], d, N, dtype)},
+        "wC": {"w": cm.dense_init(ks[3], d, N, dtype)},
+        "wdt": {"w": cm.dense_init(ks[4], d, H, dtype)},
+        "wo": cm.init_linear(ks[5], d_inner, d, qcfg, kind="ffn", dtype=dtype,
+                             scale=d_inner**-0.5),
+        "conv_w": (jax.random.normal(ks[6], (k, conv_ch)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "norm": cm.init_rmsnorm(d_inner, dtype),
+    }
+
+
+def mamba2_axes(omn: bool = False):
+    return {
+        "wz": cm.linear_axes("embed", "inner", omn=omn),
+        "wx": cm.linear_axes("embed", "inner", omn=omn),
+        "wB": {"w": ("embed", None)},
+        "wC": {"w": ("embed", None)},
+        "wdt": {"w": ("embed", None)},
+        "wo": cm.linear_axes("inner", "embed", omn=omn),
+        "conv_w": (None, "inner"),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": {"scale": ("inner",)},
+    }
+
+
+def _mamba2_proj(p, u, cfg, *, bits, qcfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    z = cm.qlinear(p["wz"], u, bits=bits, qcfg=qcfg, kind="ffn")
+    x = cm.qlinear(p["wx"], u, bits=bits, qcfg=qcfg, kind="ffn")
+    bv = u @ p["wB"]["w"].astype(u.dtype)
+    cv = u @ p["wC"]["w"].astype(u.dtype)
+    dt = u @ p["wdt"]["w"].astype(u.dtype)
+    return z, x, bv, cv, dt, d_inner, N, H
+
+
+def apply_mamba2(p, u, cfg, *, bits, qcfg: QuantConfig, chunk: int = 128):
+    """Training/prefill. u: (B, T, d) -> (B, T, d)."""
+    B, T, d = u.shape
+    z, x, bv, cv, dt, d_inner, N, H = _mamba2_proj(p, u, cfg, bits=bits, qcfg=qcfg)
+    xbc, _ = _causal_conv(jnp.concatenate([x, bv, cv], axis=-1), p["conv_w"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(u.dtype)
+    x, bv, cv = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    P = d_inner // H
+    x = x.reshape(B, T, H, P)
+    bh = jnp.broadcast_to(bv[:, :, None, :], (B, T, H, N))
+    ch = jnp.broadcast_to(cv[:, :, None, :], (B, T, H, N))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dA = dt * (-jnp.exp(p["A_log"]))                      # (B,T,H), <= 0
+    y, _ = ssd_chunked(x, bh, ch, dA, dt, chunk=min(chunk, T))
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner).astype(u.dtype)
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype))
+    return cm.qlinear(p["wo"], y, bits=bits, qcfg=qcfg, kind="ffn")
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32, layers: int | None = None):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H, N, k = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv
+    P = d_inner // H
+    conv_ch = d_inner + 2 * N
+    h = (batch, H, N, P)
+    cb = (batch, k - 1, conv_ch)
+    if layers is not None:
+        h, cb = (layers,) + h, (layers,) + cb
+    return {"h": jnp.zeros(h, jnp.float32), "conv": jnp.zeros(cb, dtype)}
+
+
+def mamba2_state_axes(layers: bool = True):
+    h = ("batch", "heads_cache", None, None)
+    cb = ("batch", None, "inner")
+    if layers:
+        h, cb = ("layer",) + h, ("layer",) + cb
+    return {"h": h, "conv": cb}
+
+
+def decode_mamba2(p, u, state, cfg, *, bits, qcfg: QuantConfig):
+    """One-token decode. u: (B, 1, d); state {'h','conv'}."""
+    B = u.shape[0]
+    z, x, bv, cv, dt, d_inner, N, H = _mamba2_proj(p, u, cfg, bits=bits, qcfg=qcfg)
+    xbc, new_conv = _causal_conv(
+        jnp.concatenate([x, bv, cv], axis=-1), p["conv_w"], buf=state["conv"]
+    )
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(u.dtype)
+    x, bv, cv = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    P = d_inner // H
+    x1 = x.reshape(B, H, P)
+    b1 = jnp.broadcast_to(bv.reshape(B, 1, N), (B, H, N))
+    c1 = jnp.broadcast_to(cv.reshape(B, 1, N), (B, H, N))
+    dt1 = jax.nn.softplus(dt.reshape(B, H).astype(jnp.float32) + p["dt_bias"])
+    dA1 = dt1 * (-jnp.exp(p["A_log"]))
+    y, h_new = ssd_decode_step(state["h"], x1, b1, c1, dA1, dt1)
+    y = y + p["D"][None, :, None] * x1.astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner).astype(u.dtype)
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype))
+    out = cm.qlinear(p["wo"], y, bits=bits, qcfg=qcfg, kind="ffn")
+    return out, {"h": h_new, "conv": new_conv.astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM) -- matrix memory with scalar gates; parallel via SSD.
+# Simplification noted in DESIGN.md: input gate uses 2*sigmoid instead of
+# the stabilized exponential gate (the projections, which MatQuant
+# quantizes, are unchanged).
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, qcfg: QuantConfig, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": cm.init_linear(ks[0], d, d, qcfg, kind="ffn", dtype=dtype),
+        "wk": cm.init_linear(ks[1], d, d, qcfg, kind="ffn", dtype=dtype),
+        "wv": cm.init_linear(ks[2], d, d, qcfg, kind="ffn", dtype=dtype),
+        "wi": {"w": cm.dense_init(ks[3], d, H, dtype)},
+        "wf": {"w": cm.dense_init(ks[4], d, H, dtype)},
+        "wo": cm.init_linear(ks[5], d, d, qcfg, kind="ffn", dtype=dtype),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),  # open forget gate at init
+        "norm": cm.init_rmsnorm(d, dtype),
+    }
+
+
+def mlstm_axes(omn: bool = False):
+    return {
+        "wq": cm.linear_axes("embed", "inner", omn=omn),
+        "wk": cm.linear_axes("embed", "inner", omn=omn),
+        "wv": cm.linear_axes("embed", "inner", omn=omn),
+        "wi": {"w": ("embed", None)},
+        "wf": {"w": ("embed", None)},
+        "wo": cm.linear_axes("inner", "embed", omn=omn),
+        "f_bias": (None,),
+        "norm": {"scale": ("inner",)},
+    }
+
+
+def _mlstm_qkv(p, u, cfg, *, bits, qcfg):
+    B, T, d = u.shape
+    H = cfg.num_heads
+    dh = d // H
+    q = cm.qlinear(p["wq"], u, bits=bits, qcfg=qcfg, kind="ffn").reshape(B, T, H, dh)
+    k = cm.qlinear(p["wk"], u, bits=bits, qcfg=qcfg, kind="ffn").reshape(B, T, H, dh)
+    v = cm.qlinear(p["wv"], u, bits=bits, qcfg=qcfg, kind="ffn").reshape(B, T, H, dh)
+    i = 2.0 * jax.nn.sigmoid((u @ p["wi"]["w"].astype(u.dtype)).astype(jnp.float32))
+    f = jax.nn.log_sigmoid(
+        (u @ p["wf"]["w"].astype(u.dtype)).astype(jnp.float32) + p["f_bias"]
+    )
+    k = k * (dh**-0.5)
+    return q, k, v, i, f, H, dh
+
+
+def _mlstm_norm_out(p, y_aug, z_gate, u, dh, *, bits, qcfg):
+    B, T = y_aug.shape[:2]
+    y, n = y_aug[..., :dh], y_aug[..., dh:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(B, T, -1).astype(u.dtype)
+    y = cm.rmsnorm(p["norm"], y)
+    return cm.qlinear(p["wo"], y, bits=bits, qcfg=qcfg, kind="ffn")
+
+
+def apply_mlstm(p, u, cfg, *, bits, qcfg: QuantConfig, chunk: int = 128):
+    B, T, d = u.shape
+    q, k, v, i, f, H, dh = _mlstm_qkv(p, u, cfg, bits=bits, qcfg=qcfg)
+    # augment v with ones to carry the normalizer through the same SSD
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    y_aug, _ = ssd_chunked(v_aug, k, q, f, i, chunk=min(chunk, T))
+    return _mlstm_norm_out(p, y_aug, None, u, dh, bits=bits, qcfg=qcfg)
+
+
+def init_mlstm_state(cfg, batch: int, layers: int | None = None):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    shape = (batch, H, dh, dh + 1)
+    if layers is not None:
+        shape = (layers,) + shape
+    return {"C": jnp.zeros(shape, jnp.float32)}
+
+
+def decode_mlstm(p, u, state, cfg, *, bits, qcfg: QuantConfig):
+    B = u.shape[0]
+    q, k, v, i, f, H, dh = _mlstm_qkv(p, u, cfg, bits=bits, qcfg=qcfg)
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    y_aug, C_new = ssd_decode_step(
+        state["C"], v_aug[:, 0], k[:, 0], q[:, 0], f[:, 0], i[:, 0]
+    )
+    out = _mlstm_norm_out(p, y_aug[:, None], None, u, dh, bits=bits, qcfg=qcfg)
+    return out, {"C": C_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM -- scalar memory, true recurrence through per-head R matrices.
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, qcfg: QuantConfig, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": cm.init_linear(ks[0], d, 4 * d, qcfg, kind="ffn", dtype=dtype),
+        "r": (jax.random.normal(ks[1], (H, dh, 4 * dh)) * dh**-0.5).astype(dtype),
+        "wo": cm.init_linear(ks[2], d, d, qcfg, kind="ffn", dtype=dtype),
+        "norm": cm.init_rmsnorm(d, dtype),
+    }
+
+
+def slstm_axes(omn: bool = False):
+    return {
+        "wx": cm.linear_axes("embed", "inner", omn=omn),
+        "r": (None, None, None),
+        "wo": cm.linear_axes("inner", "embed", omn=omn),
+        "norm": {"scale": ("embed",)},
+    }
+
+
+def init_slstm_state(cfg, batch: int, layers: int | None = None):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    s = (batch, H, dh)
+    if layers is not None:
+        s = (layers,) + s
+    z = lambda: jnp.zeros(s, jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": z()}
+
+
+def _slstm_cell(state, gx, r):
+    """One timestep. gx: (B, 4*d) preactivations from input;
+    r: (H, dh, 4*dh) recurrent weights; state leaves (B, H, dh)."""
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    B, H, dh = h.shape
+    gr = jnp.einsum("bhd,hdk->bhk", h, r.astype(jnp.float32))   # (B,H,4*dh)
+    g = gx.reshape(B, H, 4 * dh).astype(jnp.float32) + gr
+    it, ft, zt, ot = jnp.split(g, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    ft = jax.nn.log_sigmoid(ft)                                  # log forget
+    m_new = jnp.maximum(ft + m, it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(ft + m - m_new)
+    c_new = f_s * c + i_s * zt
+    n_new = f_s * n + i_s
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def apply_slstm(p, u, cfg, *, bits, qcfg: QuantConfig, state=None):
+    """u: (B, T, d). Sequential lax.scan over T."""
+    B, T, d = u.shape
+    gx = cm.qlinear(p["wx"], u, bits=bits, qcfg=qcfg, kind="ffn")  # (B,T,4d)
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    def step(st, g_t):
+        st = _slstm_cell(st, g_t, p["r"])
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, T, d).astype(u.dtype)
+    y = cm.rmsnorm(p["norm"], y)
+    return cm.qlinear(p["wo"], y, bits=bits, qcfg=qcfg, kind="ffn"), state
+
+
+def decode_slstm(p, u, state, cfg, *, bits, qcfg: QuantConfig):
+    out, state = apply_slstm(p, u, cfg, bits=bits, qcfg=qcfg, state=state)
+    return out, state

@@ -1,0 +1,94 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping, from scratch.
+
+State layout mirrors optax: {'m': pytree, 'v': pytree, 'step': scalar}.
+Moments are fp32 regardless of param dtype (bf16 params keep fp32
+optimizer state -- standard mixed-precision practice on TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    warmup_steps: int = 150
+    total_steps: int = 1000
+    schedule: str = "cosine"   # 'cosine' | 'constant'
+
+
+def cosine_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    if cfg.schedule == "constant":
+        return jnp.full_like(step, cfg.lr)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, cfg: OptConfig, mask=None):
+    """One AdamW step. `mask` (same-structure bool pytree or None)
+    freezes leaves where False (OmniQuant trains aux params only).
+
+    Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, keep):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        p_new = (p.astype(jnp.float32) - delta).astype(p.dtype)
+        if keep is not None:
+            p_new = jnp.where(keep, p_new, p)
+            m_new = jnp.where(keep, m_new, m)
+            v_new = jnp.where(keep, v_new, v)
+        return p_new, m_new, v_new
+
+    if mask is None:
+        flat = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v, None),
+                            params, grads, state["m"], state["v"])
+    else:
+        flat = jax.tree.map(lambda p, g, m, v, k: upd(p, g, m, v, k),
+                            params, grads, state["m"], state["v"], mask)
+    is_triple = lambda x: isinstance(x, tuple) and len(x) == 3 and not isinstance(x[0], tuple)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is_triple)
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=is_triple)
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=is_triple)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

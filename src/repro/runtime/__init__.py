@@ -1,0 +1,3 @@
+"""Distributed runtime: sharding rules, checkpointing, fault tolerance,
+gradient compression."""
+from repro.runtime import checkpoint, compression, fault, sharding  # noqa: F401

@@ -1,0 +1,145 @@
+"""Checkpointing: atomic, async, keep-N, elastic reshard-on-restore.
+
+Format: one msgpack file per checkpoint step holding every leaf as
+{key-path: {dtype, shape, raw bytes}}. Writes go to `<step>.tmp/` then
+an atomic rename publishes `<step>/` -- a crash mid-write can never
+corrupt the latest checkpoint. An async writer thread performs the
+serialization off the training thread (device->host copy happens
+eagerly so training can mutate buffers immediately).
+
+Restore is *elastic*: leaves are loaded as host numpy arrays and
+device_put against whatever shardings the (possibly re-sized) relaunch
+provides, so a job checkpointed on a 16x16 mesh restores cleanly onto
+2x16x16 or a single host (multi-host note: on a real fleet each process
+restores only its addressable shards; jax.device_put handles the
+per-shard slicing from the host array).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(k): v for k, v in flat}, treedef
+
+
+def save(path: str, step: int, tree, async_: bool = False) -> threading.Thread | None:
+    """Write checkpoint for `step`. Returns the writer thread if async."""
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+    def write():
+        os.makedirs(path, exist_ok=True)
+        tmp = os.path.join(path, f"{step}.tmp")
+        final = os.path.join(path, str(step))
+        os.makedirs(tmp, exist_ok=True)
+        flat, _ = _flatten(host_tree)
+        payload = {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in flat.items()
+        }
+        with open(os.path.join(tmp, "leaves.msgpack"), "wb") as f:
+            f.write(msgpack.packb(payload))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d) for d in os.listdir(path) if d.isdigit()]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, like, shardings=None):
+    """Load checkpoint `step` into the structure of `like`.
+
+    `like` may hold arrays or ShapeDtypeStructs; `shardings` (optional,
+    same structure) triggers sharded device_put -- the elastic-rescale
+    path. Raises KeyError on structure mismatch.
+    """
+    with open(os.path.join(path, str(step), "leaves.msgpack"), "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    flat_like, treedef = _flatten(like)
+    leaves = {}
+    for k, spec in flat_like.items():
+        if k not in payload:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        rec = payload[k]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(spec.shape):
+            raise ValueError(f"shape mismatch for {k}: ckpt {arr.shape} vs {spec.shape}")
+        leaves[k] = arr
+    restored = jax.tree_util.tree_unflatten(
+        treedef, [leaves[k] for k in flat_like.keys()]
+    )
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda a, s: jax.device_put(jnp.asarray(a), s), restored, shardings
+        )
+    else:
+        restored = jax.tree.map(jnp.asarray, restored)
+    return restored
+
+
+class CheckpointManager:
+    """Keep-N rotation + async-write bookkeeping."""
+
+    def __init__(self, path: str, keep: int = 3, async_: bool = True,
+                 every: int = 100):
+        self.path = path
+        self.keep = keep
+        self.async_ = async_
+        self.every = every
+        self._pending: threading.Thread | None = None
+
+    def maybe_save(self, step: int, tree, force: bool = False):
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return False
+        self.wait()
+        self._pending = save(self.path, step, tree, async_=self.async_)
+        self._gc(pending_step=step)
+        return True
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self, pending_step: int | None = None):
+        if not os.path.isdir(self.path):
+            return
+        on_disk = sorted(int(d) for d in os.listdir(self.path) if d.isdigit())
+        steps = sorted(set(on_disk) | ({pending_step} if pending_step is not None else set()))
+        drop = set(steps[: max(0, len(steps) - self.keep)])
+        for s in on_disk:
+            if s in drop:
+                shutil.rmtree(os.path.join(self.path, str(s)), ignore_errors=True)
+
+    def latest(self) -> int | None:
+        self.wait()
+        return latest_step(self.path)
+
+    def restore(self, like, step: int | None = None, shardings=None):
+        self.wait()
+        step = latest_step(self.path) if step is None else step
+        if step is None:
+            return None
+        return restore(self.path, step, like, shardings)

@@ -1,0 +1,233 @@
+"""Serving engine: packed weights, Mix'n'Match, batched generation.
+
+Deployment flow (paper Section 5.4): one int8 *parent* checkpoint is
+stored; at load time each layer's weights are sliced to the precision
+the deployment demands (uniform int8/6/4/3/2 or a per-layer
+Mix'n'Match vector), packed, and served. Execution paths:
+
+  * TPU: the Pallas `quant_matmul` kernel consumes packed planes and
+    dequantizes in VMEM (kernels/quant_matmul.py).
+  * CPU/tests: weights are materialized as their dequantized values
+    (`materialize_served_params`) -- numerically IDENTICAL to the
+    packed path (test_serve proves it equals fake-quant forward).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.models import api
+
+# projection names whose 'w' leaf is a quantized (ffn-scope) weight
+_FFN_PROJ = {"up", "gate", "down", "wz", "wx", "wo", "wq", "wk", "wv"}
+_ATTN_PARENT = {"attn", "self_attn", "cross_attn"}
+_FFN_PARENT = {"ffn", "moe", "mamba", "mlstm", "slstm"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        name = getattr(k, "key", None)
+        if name is None:
+            name = str(getattr(k, "idx", k))
+        out.append(str(name))
+    return out
+
+
+def quantized_leaf_kind(path) -> str | None:
+    """'ffn' / 'attn' if this param path is a quantizable weight."""
+    names = _path_names(path)
+    if not names or names[-1] != "w":
+        return None
+    parents = set(names[:-1])
+    proj = names[-2] if len(names) >= 2 else ""
+    if parents & _ATTN_PARENT and proj in {"wq", "wk", "wv", "wo"}:
+        return "attn"
+    if parents & _FFN_PARENT and proj in _FFN_PROJ:
+        if proj in {"wq", "wk", "wv"} and "mlstm" not in parents:
+            return "attn"
+        return "ffn"
+    return None
+
+
+def materialize_served_params(params, cfg, bits, extra_precision: bool | None = None):
+    """Replace quantized weights with their sliced-dequantized values.
+
+    bits: int (uniform) or per-layer list/array (Mix'n'Match; applied to
+    leaves whose leading axis is the stacked layer dim)."""
+    qcfg = cfg.quant
+    ep = qcfg.extra_precision if extra_precision is None else extra_precision
+    per_layer = not isinstance(bits, int)
+    if per_layer:
+        bits_arr = jnp.asarray(bits, jnp.int32)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        kind = quantized_leaf_kind(path)
+        scoped = kind == "ffn" or (kind == "attn" and "attn" in qcfg.scope)
+        if not scoped:
+            out.append(leaf)
+            continue
+        names = _path_names(path)
+        stacked = names[0] in ("layers", "encoder", "decoder") and leaf.ndim >= 3
+        moe = "moe" in names
+        # minmax group = the reduction dim: (L, E, d_in, d_out) -> 2,
+        # (L, d_in, d_out) -> 1, (E, d_in, d_out) -> 1, (d_in, d_out) -> 0
+        if stacked:
+            group_axis = 2 if (moe and leaf.ndim == 4) else 1
+        else:
+            group_axis = 1 if (moe and leaf.ndim == 3) else 0
+        if per_layer and stacked:
+            qd = jax.vmap(
+                lambda w, b: quant.quant_dequant(
+                    w, qcfg.parent_bits, b, axis=group_axis - 1,
+                    extra_precision=ep)
+            )(leaf, bits_arr[: leaf.shape[0]])
+        else:
+            b = int(bits) if not per_layer else int(bits[0])
+            qd = quant.quant_dequant(leaf, qcfg.parent_bits, b, axis=group_axis,
+                                     extra_precision=ep)
+        out.append(qd.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def materialize_packed_params(params, cfg, bits: int):
+    """Replace quantized weights with PACKED r-bit planes.
+
+    Each scoped 'w' leaf becomes {'words': int32 packed codes (along the
+    reduction dim), 'alpha', 'beta'}: w_hat = alpha * code - beta. The
+    int8 parent is quantized per-output-channel, sliced to `bits`, and
+    packed -- HBM weight bytes drop 16/bits x vs bf16. Consumed by
+    common.qlinear (jnp path) or kernels.quant_matmul (TPU).
+    Dense/VLM/encdec projections only (MoE expert stacks keep the
+    fake-quant path; their dispatch dominates serving cost anyway).
+    """
+    qcfg = cfg.quant
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        kind = quantized_leaf_kind(path)
+        scoped = kind == "ffn" or (kind == "attn" and "attn" in qcfg.scope)
+        names = _path_names(path)
+        if not scoped or "moe" in names or leaf.ndim > 3:
+            out.append(leaf)
+            continue
+        w32 = leaf.astype(jnp.float32)
+        q, alpha, z = quant.quantize(w32, qcfg.parent_bits, axis=-2)
+        codes = quant.sliced_codes(q, qcfg.parent_bits, bits)
+        scale = jnp.asarray(2 ** (qcfg.parent_bits - bits), jnp.float32)
+        from repro.core import packing
+        # down-type projections (out dim = residual 'embed') pack along N
+        # so the packed plane stays sharded on its reduction dim under
+        # TP; everything else packs along K and shards the out dim.
+        proj = names[-2] if len(names) >= 2 else ""
+        pack_axis = -1 if proj in ("down", "wo") else -2
+        out.append({
+            "words": packing.pack_codes(codes, bits, axis=pack_axis),
+            "alpha": alpha * scale,
+            "beta": alpha * z,
+        })
+
+    # rebuild by mutating a container-copied tree by key-path (leaf
+    # structure changes, so tree_unflatten can't be used directly)
+    def set_path(d, path, value):
+        node = d
+        for k in path[:-1]:
+            node = node[getattr(k, "key", getattr(k, "idx", None))]
+        node[getattr(path[-1], "key", getattr(path[-1], "idx", None))] = value
+
+    base = _deep_copy_containers(params)
+    for (path, _), new_leaf in zip(flat, out):
+        set_path(base, path, new_leaf)
+    return base
+
+
+def _deep_copy_containers(tree):
+    if isinstance(tree, dict):
+        return {k: _deep_copy_containers(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_deep_copy_containers(v) for v in tree]
+    if isinstance(tree, tuple):
+        return tuple(_deep_copy_containers(v) for v in tree)
+    return tree
+
+
+def packed_axes(axes_tree, params_packed, cfg):
+    """Logical-axes tree matching `materialize_packed_params` output:
+    wherever the packed params carry {'words','alpha','beta'}, the axes
+    leaf {'w': (..., a_in, a_out)} becomes the packed trio sharded on
+    a_out (the packed reduction dim stays unsharded)."""
+
+    def walk(ax_node, p_node, path):
+        if isinstance(p_node, dict) and "words" in p_node:
+            # ax_node is the original 'w' spec tuple (..., a_in, a_out)
+            spec = tuple(ax_node)
+            rest, a_in, a_out = spec[:-2], spec[-2], spec[-1]
+            # path ends with the 'w' key; the projection name precedes it
+            proj = path[-2] if len(path) >= 2 else ""
+            if proj in ("down", "wo"):        # packed along N: keep K shard
+                words = rest + (a_in, None)
+            else:                             # packed along K: keep N shard
+                words = rest + (None, a_out)
+            scales = rest + (None, a_out)
+            return {"words": words, "alpha": scales, "beta": scales}
+        if isinstance(p_node, dict):
+            return {k: walk(ax_node[k], p_node[k], path + [k]) for k in p_node}
+        if isinstance(p_node, list):
+            return [walk(a, v, path + [i])
+                    for i, (a, v) in enumerate(zip(ax_node, p_node))]
+        return ax_node
+
+    return walk(axes_tree, params_packed, [])
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    bits: object = 8                 # int or per-layer list (Mix'n'Match)
+    max_len: int = 512
+    extra_precision: bool = False
+    use_packed: bool = False         # TPU kernel path
+
+
+class Engine:
+    """Batched greedy-decoding engine over materialized served weights."""
+
+    def __init__(self, params, cfg, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.params = materialize_served_params(
+            params, cfg, serve_cfg.bits, serve_cfg.extra_precision)
+        self._decode = jax.jit(
+            lambda p, st, tok, pos: api.decode_step(p, st, tok, pos, cfg, bits=None)
+        )
+        self._prefill = jax.jit(
+            lambda p, batch: api.prefill(p, batch, cfg, bits=None,
+                                         max_len=serve_cfg.max_len)
+        )
+
+    def generate(self, prompts: jax.Array, num_tokens: int, extras=None):
+        """prompts: (B, S) int32 -> (B, num_tokens) greedy continuation."""
+        B, S = prompts.shape
+        batch = {"tokens": prompts}
+        if extras:
+            batch.update(extras)
+        logits, state = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1).reshape(B, 1).astype(jnp.int32)
+        out = [tok]
+        for i in range(num_tokens - 1):
+            logits, state = self._decode(self.params, state, tok,
+                                         jnp.asarray(S + i, jnp.int32))
+            tok = jnp.argmax(logits[:, -1], axis=-1).reshape(B, 1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+    def score(self, tokens: jax.Array, labels: jax.Array) -> float:
+        """Mean NLL of labels under the served model (quality evals)."""
+        from repro.core.matquant import cross_entropy
+        logits, _ = api.forward(self.params, {"tokens": tokens}, self.cfg, bits=None)
+        return float(cross_entropy(logits, labels))

@@ -1,0 +1,2 @@
+from repro.train.qat import init_train_state, make_loss_fn, make_train_step  # noqa: F401
+from repro.train import omniquant_calib  # noqa: F401

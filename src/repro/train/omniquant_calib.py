@@ -1,0 +1,95 @@
+"""OmniQuant block-wise calibration under MatQuant (Eqs. 5 + 7).
+
+OmniQuant freezes the model weights and trains only the per-linear aux
+parameters (gamma/beta clipping strengths, shift/scale equivalents) by
+gradient descent on each Transformer block's L2 reconstruction error,
+layer by layer, on a small calibration set. MatQuant sums that loss
+over R = {8, 4, 2}. Inputs to each block are propagated from the
+*full-precision* model (the paper's y'_i = F_l(W_F, X_l)).
+
+Implemented for the dense family (the paper's setting: Gemma-2 /
+Mistral); used by the Table-1/3/4/5/7 benchmarks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.matquant import recon_loss_multi
+from repro.models import common as cm
+from repro.models.lm import _dense_block
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+
+def _layer_slice(layers, l):
+    return jax.tree.map(lambda x: x[l], layers)
+
+
+def _layer_set(layers, l, lp):
+    return jax.tree.map(lambda full, new: full.at[l].set(new), layers, lp)
+
+
+def _omni_mask(tree):
+    """True only for leaves under an 'omni' subtree (trainable aux)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    mask = [any(getattr(k, "key", None) == "omni" for k in path)
+            for path, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, mask)
+
+
+def calibrate(params, cfg, calib_tokens, *, steps_per_layer: int = 50,
+              lr: float = 1e-3, verbose: bool = False):
+    """Calibrate OmniQuant aux params block-by-block.
+
+    calib_tokens: (Ncal, S) int32. Returns (params with trained aux,
+    per-layer final losses)."""
+    assert cfg.quant.mode == "omniquant", cfg.quant.mode
+    assert cfg.family == "dense", "calibration implemented for dense family"
+    qcfg = cfg.quant
+    B, S = calib_tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = jnp.take(params["embed"]["w"], calib_tokens, axis=0)
+
+    opt_cfg = OptConfig(lr=lr, clip_norm=0.0, schedule="constant",
+                        warmup_steps=0, total_steps=steps_per_layer)
+    layer_losses = []
+
+    def block_q(lp, xin, *, bits):
+        return _dense_block(lp, xin, cfg, bits, positions, qcfg, cfg.attn_chunk)
+
+    @jax.jit
+    def calib_layer(lp, x):
+        block_fp = lambda xin: _dense_block(lp, xin, cfg, None, positions,
+                                            qcfg, cfg.attn_chunk)
+        mask = _omni_mask(lp)
+        opt = adamw_init(lp)
+
+        def loss_fn(lp_):
+            return recon_loss_multi(
+                block_fp, lambda p, xi, bits: block_q(p, xi, bits=bits),
+                lp_, x, qcfg)
+
+        def step(carry, _):
+            lp_, opt_ = carry
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(lp_)
+            lp_, opt_, _ = adamw_update(lp_, g, opt_, opt_cfg, mask=mask)
+            return (lp_, opt_), loss
+
+        (lp, _), losses = jax.lax.scan(step, (lp, opt), None,
+                                       length=steps_per_layer)
+        # propagate the FP output to the next block (paper semantics)
+        x_next = block_fp(x)
+        return lp, x_next, losses[-1]
+
+    layers = params["layers"]
+    for l in range(cfg.num_layers):
+        lp = _layer_slice(layers, l)
+        lp, x, final_loss = calib_layer(lp, x)
+        layers = _layer_set(layers, l, lp)
+        layer_losses.append(float(final_loss))
+        if verbose:
+            print(f"  omniquant layer {l}: recon={final_loss:.3e}")
+    params = dict(params)
+    params["layers"] = layers
+    return params, layer_losses

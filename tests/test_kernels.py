@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode shape/dtype sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing, quant
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+@pytest.mark.parametrize("shape", [(16, 128, 128), (8, 256, 384), (33, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_matches_ref(bits, shape, dtype):
+    M, K, N = shape
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, hash((bits,) + shape) % 2**31))
+    x = jax.random.normal(kx, (M, K), jnp.float32).astype(dtype)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+    pl = packing.PackedLinear.from_weights(w)
+    words, alpha, beta = pl.materialize(bits)
+    y_k = ops.quant_matmul(x, words, alpha, beta, bits=bits)
+    y_r = ref.quant_matmul_ref(x, words, alpha, beta, bits=bits)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(y_k, np.float32), np.asarray(y_r, np.float32),
+        rtol=tol, atol=tol * K ** 0.5)
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_quant_matmul_matches_fake_quant_truth(bits):
+    """Kernel output == x @ quant_dequant(w) -- the deployment contract."""
+    kx, kw = jax.random.split(KEY)
+    x = jax.random.normal(kx, (16, 256), jnp.float32)
+    w = jax.random.normal(kw, (256, 128), jnp.float32)
+    pl = packing.PackedLinear.from_weights(w)
+    words, alpha, beta = pl.materialize(bits)
+    y_k = ops.quant_matmul(x, words, alpha, beta, bits=bits)
+    y_t = x @ quant.quant_dequant(w, 8, bits, axis=0)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_t),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_quant_matmul_extra_precision_composition():
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, 7))
+    x = jax.random.normal(kx, (8, 128), jnp.float32)
+    w = jax.random.normal(kw, (128, 128), jnp.float32)
+    pl = packing.PackedLinear.from_weights(w)
+    words, alpha, beta, over = pl.materialize(2, extra_precision=True)
+    y_k = ops.quant_matmul(x, words, alpha, beta, bits=2, overflow_words=over)
+    y_t = x @ quant.quant_dequant(w, 8, 2, axis=0, extra_precision=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_t),
+                               rtol=1e-4, atol=1e-3)
+    y_ref = ref.quant_matmul_ep_ref(x, words, alpha, beta, over, bits=2)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_quant_matmul_batched_leading_dims():
+    kx, kw = jax.random.split(KEY)
+    x = jax.random.normal(kx, (2, 5, 128), jnp.float32)
+    w = jax.random.normal(kw, (128, 64), jnp.float32)
+    pl = packing.PackedLinear.from_weights(w)
+    words, alpha, beta = pl.materialize(4)
+    y = ops.quant_matmul(x, words, alpha, beta, bits=4)
+    assert y.shape == (2, 5, 64)
+    y_flat = ops.quant_matmul(x.reshape(10, 128), words, alpha, beta, bits=4)
+    np.testing.assert_allclose(np.asarray(y.reshape(10, 64)),
+                               np.asarray(y_flat), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(128, 128), (300, 200), (1024, 64)])
+@pytest.mark.parametrize("bitwidths", [(8, 4, 2), (8,), (6, 3)])
+def test_fused_quantize_matches_ref(shape, bitwidths):
+    w = jax.random.normal(jax.random.fold_in(KEY, hash(shape + bitwidths) % 2**31),
+                          shape, jnp.float32)
+    outs = ops.fused_quantize(w, bitwidths=bitwidths)
+    refs = ref.fused_quantize_ref(w, bitwidths=bitwidths)
+    for o, r, b in zip(outs, refs, bitwidths):
+        diff = np.abs(np.asarray(o) - np.asarray(r))
+        # one quantization step of slack for fp rounding knife-edges,
+        # allowed on at most 1e-4 of elements; everything else exact.
+        step = (np.asarray(w).max(0) - np.asarray(w).min(0)) / (2**b - 1)
+        knife = diff > 1e-5
+        assert knife.mean() <= 1e-4, (b, knife.mean())
+        assert (diff <= step[None, :] * (1 + 1e-5) + 1e-6).all(), (b, diff.max())
+
+
+def test_fused_quantize_extra_precision():
+    w = jax.random.normal(KEY, (256, 128), jnp.float32)
+    outs = ops.fused_quantize(w, bitwidths=(2,), extra_precision=True)
+    refs = ref.fused_quantize_ref(w, bitwidths=(2,), extra_precision=True)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(refs[0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_serve_linear_end_to_end():
+    kx, kw = jax.random.split(KEY)
+    x = jax.random.normal(kx, (4, 256), jnp.float32)
+    w = jax.random.normal(kw, (256, 128), jnp.float32)
+    pl = packing.PackedLinear.from_weights(w)
+    for bits in (8, 4, 2):
+        y = ops.serve_linear(x, pl, bits)
+        y_t = x @ quant.quant_dequant(w, 8, bits, axis=0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_t),
+                                   rtol=1e-4, atol=1e-3)

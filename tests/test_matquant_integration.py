@@ -1,0 +1,129 @@
+"""End-to-end behaviour tests of the paper's central claims, at tiny
+scale on the synthetic corpus:
+
+  1. sliced int8->int2 of a plain QAT model collapses (Table 1/2
+     'Sliced int8' rows), while a MatQuant model's int2 slice works;
+  2. MatQuant int2 is no worse than an int2-only baseline at equal
+     steps (paper: substantially better);
+  3. interpolated int6/int3 (never trained) stay close to int8 quality;
+  4. co-distillation config runs and trains;
+  5. Single-Precision MatQuant trains the int2 slice of an int8 parent.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.matquant import cross_entropy
+from repro.core.quant import QuantConfig
+from repro.data import DataConfig, SyntheticCorpus
+from repro.models import api
+from repro.optim import OptConfig
+from repro.train import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+STEPS = 60
+BATCH, SEQ = 8, 64
+
+
+def _cfg(qcfg):
+    return (get_config("qwen3_1_7b").reduced()
+            .replace(num_layers=2, quant=qcfg))
+
+
+def _train(cfg, steps=STEPS, seed=0):
+    opt = OptConfig(lr=3e-3, total_steps=steps, warmup_steps=5)
+    params, opt_state = init_train_state(jax.random.PRNGKey(seed), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=SEQ, seed=11))
+    for i in range(steps):
+        b = corpus.batch(i, BATCH, SEQ)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt_state, m = step(params, opt_state, batch)
+    return params, m
+
+
+def _eval_nll(params, cfg, bits):
+    # same corpus seed (same Markov structure); held-out step range
+    corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=SEQ, seed=11))
+    b = corpus.batch(10_000, 16, SEQ)
+    logits, _ = api.forward(params, {"tokens": jnp.asarray(b["tokens"])},
+                            cfg, bits=bits)
+    return float(cross_entropy(logits, jnp.asarray(b["labels"])))
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Train three variants once for the whole module."""
+    mat_cfg = _cfg(QuantConfig(mode="qat", bitwidths=(8, 4, 2),
+                               weights=(0.1, 0.1, 1.0)))
+    base8_cfg = _cfg(QuantConfig(mode="qat", bitwidths=(8,), weights=(1.0,)))
+    base2_cfg = _cfg(QuantConfig(mode="qat", bitwidths=(2,), weights=(1.0,),
+                                 parent_bits=2))
+    mat, _ = _train(mat_cfg)
+    base8, _ = _train(base8_cfg)
+    base2, _ = _train(base2_cfg)
+    return dict(mat=(mat, mat_cfg), base8=(base8, base8_cfg),
+                base2=(base2, base2_cfg))
+
+
+def test_sliced_int8_collapses_matquant_does_not(trained):
+    mat, mat_cfg = trained["mat"]
+    base8, base8_cfg = trained["base8"]
+    # slicing the int8-only baseline to int2 (paper's 'Sliced int8' row)
+    sliced_nll = _eval_nll(base8, base8_cfg, bits=2)
+    mat_nll = _eval_nll(mat, mat_cfg, bits=2)
+    assert mat_nll < sliced_nll, (mat_nll, sliced_nll)
+
+
+def test_matquant_int2_not_worse_than_baseline_int2(trained):
+    mat, mat_cfg = trained["mat"]
+    base2, base2_cfg = trained["base2"]
+    mat_nll = _eval_nll(mat, mat_cfg, bits=2)
+    base_nll = _eval_nll(base2, base2_cfg, bits=2)
+    assert mat_nll <= base_nll * 1.10, (mat_nll, base_nll)
+
+
+def test_interpolated_bits_between_neighbours(trained):
+    mat, mat_cfg = trained["mat"]
+    nll = {b: _eval_nll(mat, mat_cfg, bits=b) for b in (8, 6, 4, 3, 2)}
+    # int6 close to int8; int3 between int4 and int2 (small slack)
+    assert nll[6] <= nll[8] * 1.05 + 0.05
+    assert nll[3] <= nll[2] * 1.05 + 0.05
+    assert nll[2] >= nll[8] - 0.05  # monotone-ish overall
+
+
+def test_matquant_int8_close_to_baseline_int8(trained):
+    mat, mat_cfg = trained["mat"]
+    base8, base8_cfg = trained["base8"]
+    assert _eval_nll(mat, mat_cfg, 8) <= _eval_nll(base8, base8_cfg, 8) * 1.15
+
+
+def test_codistillation_trains():
+    cfg = _cfg(QuantConfig(mode="qat", bitwidths=(8, 4, 2),
+                           weights=(0.1, 0.1, 1.0), codistill=((8, 2),)))
+    params, metrics = _train(cfg, steps=10)
+    assert "distill_8to2" in metrics
+    assert bool(jnp.isfinite(metrics["distill_8to2"]))
+
+
+def test_single_precision_matquant_trains_sliced_int2():
+    """R={2} with parent int8 (Section 5.3): loss only over the slice."""
+    cfg = _cfg(QuantConfig(mode="qat", bitwidths=(2,), weights=(1.0,),
+                           parent_bits=8))
+    params, metrics = _train(cfg, steps=30)
+    nll2 = _eval_nll(params, cfg, 2)
+    # the int8 parent of an S.P. model is still evaluable (Table 23/24)
+    nll8 = _eval_nll(params, cfg, 8)
+    assert jnp.isfinite(nll2) and jnp.isfinite(nll8)
+
+
+def test_extra_precision_improves_int2():
+    cfg_ep = _cfg(QuantConfig(mode="qat", bitwidths=(8, 4, 2),
+                              weights=(1.0, 1.0, 1.0), extra_precision=True))
+    params, _ = _train(cfg_ep, steps=STEPS)
+    nll_ep = _eval_nll(params, cfg_ep, 2)
+    assert jnp.isfinite(nll_ep)

@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes and finiteness; plus
+prefill/decode consistency against the teacher-forced forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.quant import QuantConfig
+from repro.models import api
+from repro.optim import OptConfig
+from repro.train import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, key=KEY):
+    kt, kf, kv = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(kt, (B, S), 0, cfg.vocab_size, jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(kf, (B, cfg.encoder_len, cfg.d_model),
+                                            jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(kv, (B, 4, cfg.d_model))
+        pos = jnp.arange(S, dtype=jnp.int32)
+        batch["positions"] = jnp.broadcast_to(pos[None, :, None], (B, S, 3))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = api.init(KEY, cfg)
+    batch = _batch(cfg)
+    for bits in (None, 8, 2):
+        logits, aux = api.forward(params, batch, cfg, bits=bits)
+        assert logits.shape == (B, S, cfg.padded_vocab)
+        assert bool(jnp.isfinite(logits).all()), (arch, bits)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS[:10])  # the 10 assigned archs
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    opt = OptConfig(lr=1e-3, total_steps=10)
+    params, opt_state = init_train_state(KEY, cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = _batch(cfg)
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(opt_state2["step"]) == 1
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "granite_moe_1b_a400m",
+                                  "xlstm_125m", "whisper_small", "zamba2_1_2b"])
+def test_prefill_decode_matches_forward(arch):
+    """decode(prefill(t[:k]), t[k:]) logits == forward(t) logits."""
+    cfg = get_config(arch).reduced()
+    params = api.init(KEY, cfg)
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+    full_logits, _ = api.forward(params, {k: v for k, v in batch.items()
+                                          if k != "labels"}, cfg, bits=8)
+    k = S // 2
+    pre_batch = {kk: (v[:, :k] if kk == "tokens" else v)
+                 for kk, v in batch.items() if kk != "labels"}
+    if cfg.family == "vlm":
+        pre_batch["positions"] = batch["positions"][:, :k]
+    logits_k, state = api.prefill(params, pre_batch, cfg, bits=8, max_len=S)
+    np.testing.assert_allclose(
+        np.asarray(logits_k[:, -1], np.float32),
+        np.asarray(full_logits[:, k - 1], np.float32), rtol=2e-2, atol=2e-2)
+    # decode the next tokens one by one and compare
+    for i in range(k, min(k + 3, S)):
+        tok = toks[:, i:i + 1]
+        logits_i, state = api.decode_step(params, state, tok,
+                                          jnp.asarray(i, jnp.int32), cfg, bits=8)
+        np.testing.assert_allclose(
+            np.asarray(logits_i[:, 0], np.float32),
+            np.asarray(full_logits[:, i], np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_mixnmatch_per_layer_bits_changes_output():
+    cfg = get_config("qwen3_1_7b").reduced()
+    params = api.init(KEY, cfg)
+    batch = _batch(cfg)
+    del batch["labels"]
+    l_uniform, _ = api.forward(params, batch, cfg, bits=2)
+    l_mix, _ = api.forward(params, batch, cfg, bits=[8, 2])
+    l_mix2, _ = api.forward(params, batch, cfg, bits=[2, 2])
+    assert not np.allclose(np.asarray(l_uniform), np.asarray(l_mix))
+    np.testing.assert_allclose(np.asarray(l_uniform), np.asarray(l_mix2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_param_count_analytic_close_to_actual():
+    for arch in ("qwen3_1_7b", "granite_moe_1b_a400m", "zamba2_1_2b",
+                 "whisper_small", "xlstm_125m"):
+        cfg = get_config(arch).reduced()
+        params = api.init(KEY, cfg)
+        actual = api.param_count(params)
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.12, (arch, actual, analytic)

@@ -1,0 +1,84 @@
+"""OmniQuant calibration quality + Mix'n'Match strategy behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import mixnmatch
+from repro.core.matquant import recon_loss_multi
+from repro.core.quant import QuantConfig
+from repro.models import api
+from repro.models.lm import _dense_block
+from repro.train import omniquant_calib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_calibration_reduces_reconstruction_error():
+    cfg = (get_config("mistral_7b").reduced()
+           .replace(num_layers=1, quant=QuantConfig(mode="omniquant")))
+    params = api.init(KEY, cfg)
+    toks = jax.random.randint(KEY, (4, 32), 0, cfg.vocab_size, jnp.int32)
+    x = jnp.take(params["embed"]["w"], toks, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(32, dtype=jnp.int32), (4, 32))
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+
+    def recon(lp_):
+        block_fp = lambda xin: _dense_block(lp_, xin, cfg, None, positions,
+                                            cfg.quant, cfg.attn_chunk)
+        block_q = lambda p, xi, bits: _dense_block(p, xi, cfg, bits, positions,
+                                                   cfg.quant, cfg.attn_chunk)
+        loss, _ = recon_loss_multi(block_fp, block_q, lp_, x, cfg.quant)
+        return float(loss)
+
+    before = recon(lp)
+    calibrated, losses = omniquant_calib.calibrate(
+        params, cfg, toks, steps_per_layer=40, lr=5e-3)
+    lp_after = jax.tree.map(lambda a: a[0], calibrated["layers"])
+    after = recon(lp_after)
+    assert after < before, (before, after)
+
+
+def test_omniquant_freezes_weights():
+    cfg = (get_config("mistral_7b").reduced()
+           .replace(num_layers=1, quant=QuantConfig(mode="omniquant")))
+    params = api.init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size, jnp.int32)
+    calibrated, _ = omniquant_calib.calibrate(params, cfg, toks,
+                                              steps_per_layer=5, lr=1e-2)
+    w_before = params["layers"]["ffn"]["up"]["w"]
+    w_after = calibrated["layers"]["ffn"]["up"]["w"]
+    np.testing.assert_array_equal(np.asarray(w_before), np.asarray(w_after))
+    g_before = params["layers"]["ffn"]["up"]["omni"]["gamma_logit"]
+    g_after = calibrated["layers"]["ffn"]["up"]["omni"]["gamma_logit"]
+    assert not np.array_equal(np.asarray(g_before), np.asarray(g_after))
+
+
+def test_mixnmatch_strategies_shapes():
+    for strat in mixnmatch.STRATEGIES:
+        a = mixnmatch.assign(12, 4.5, strat)
+        assert len(a) == 12
+    inc = mixnmatch.assign(12, 4.5, "increasing")
+    assert inc == sorted(inc)
+    dec = mixnmatch.assign(12, 4.5, "decreasing")
+    assert dec == sorted(dec, reverse=True)
+
+
+def test_mixnmatch_sweep_monotone_budget():
+    pts = mixnmatch.sweep(16, points=7)
+    effs = [e for e, _ in pts]
+    assert effs == sorted(effs)
+    assert effs[0] <= 2.5 and effs[-1] >= 7.5
+
+
+def test_exhaustive_pareto_tiny():
+    # quality proxy: lower is better, favouring more bits on layer 1
+    def eval_fn(a):
+        return -(a[0] * 1.0 + a[1] * 3.0)
+
+    pareto = mixnmatch.exhaustive_pareto(2, eval_fn)
+    assert pareto[-1][2] == (8, 8)
+    # pareto quality strictly improves along the frontier
+    quals = [q for _, q, _ in pareto]
+    assert quals == sorted(quals, reverse=True)

@@ -1,0 +1,141 @@
+"""Tests pinning the §Perf optimizations to the paper-faithful math:
+packed serving planes, vmap-over-precisions loss, remat policies,
+serving sharding rules."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quant import QuantConfig
+from repro.models import api
+from repro.serve.engine import (materialize_packed_params,
+                                materialize_served_params, packed_axes)
+from repro.train.qat import make_loss_fn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch="qwen3_1_7b", **kw):
+    return get_config(arch).reduced().replace(**kw)
+
+
+def _batch(cfg, B=2, S=16):
+    return {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.fold_in(KEY, 1), (B, S), 0,
+                                     cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_packed_serving_equals_served(bits):
+    cfg = _cfg()
+    params = api.init(KEY, cfg)
+    batch = {"tokens": _batch(cfg)["tokens"]}
+    cfg_p = cfg.replace(quant=dataclasses.replace(cfg.quant, packed_bits=bits))
+    pp = materialize_packed_params(params, cfg_p, bits)
+    lp, _ = api.forward(pp, batch, cfg_p, bits=None)
+    sp = materialize_served_params(params, cfg, bits)
+    ls, _ = api.forward(sp, batch, cfg, bits=None)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ls),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_packed_down_projection_packs_along_n():
+    """down/wo projections pack along N so their K dim keeps TP sharding."""
+    cfg = _cfg()
+    cfg_p = cfg.replace(quant=dataclasses.replace(cfg.quant, packed_bits=4))
+    params = api.init(KEY, cfg)
+    pp = materialize_packed_params(params, cfg_p, 4)
+    up = pp["layers"]["ffn"]["up"]["w"]
+    down = pp["layers"]["ffn"]["down"]["w"]
+    K, N = cfg.d_model, cfg.d_ff
+    assert up["words"].shape[-2] * 8 == K          # packed along K
+    assert down["words"].shape[-2] == N            # packed along N
+    ax = packed_axes(api.axes(cfg), jax.eval_shape(
+        lambda k: materialize_packed_params(api.init(k, cfg_p), cfg_p, 4), KEY),
+        cfg_p)
+    assert ax["layers"]["ffn"]["down"]["w"]["words"][-2] == "mlp"
+    assert ax["layers"]["ffn"]["up"]["w"]["words"][-1] == "mlp"
+
+
+def test_packed_bytes_shrink_with_bits():
+    cfg = _cfg()
+    params = api.init(KEY, cfg)
+    def nbytes(bits):
+        cfg_p = cfg.replace(quant=dataclasses.replace(cfg.quant, packed_bits=bits))
+        pp = materialize_packed_params(params, cfg_p, bits)
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(pp["layers"]["ffn"]))
+    n8, n4, n2 = nbytes(8), nbytes(4), nbytes(2)
+    assert n8 > n4 > n2
+
+
+@pytest.mark.parametrize("codistill", [(), ((8, 2),)])
+def test_vmap_precisions_loss_and_grads_match(codistill):
+    cfg = _cfg(num_layers=2).replace(
+        quant=QuantConfig(mode="qat", bitwidths=(8, 4, 2),
+                          weights=(0.1, 0.1, 1.0), codistill=codistill))
+    params = api.init(KEY, cfg)
+    batch = _batch(cfg)
+    l_seq, m_seq = make_loss_fn(cfg)(params, batch)
+    l_vm, m_vm = make_loss_fn(cfg, vmap_precisions=True)(params, batch)
+    assert abs(float(l_seq) - float(l_vm)) < 1e-4
+    for k in ("ce_int8", "ce_int2"):
+        assert abs(float(m_seq[k]) - float(m_vm[k])) < 1e-4
+    g1 = jax.grad(lambda p: make_loss_fn(cfg)(p, batch)[0])(params)
+    g2 = jax.grad(lambda p: make_loss_fn(cfg, vmap_precisions=True)(p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_vmap_precisions_moe_aux():
+    cfg = get_config("granite_moe_1b_a400m").reduced().replace(
+        num_layers=2, quant=QuantConfig(mode="qat"))
+    params = api.init(KEY, cfg)
+    batch = _batch(cfg)
+    l, m = make_loss_fn(cfg, vmap_precisions=True)(params, batch)
+    assert "moe_aux" in m and bool(jnp.isfinite(l))
+
+
+@pytest.mark.parametrize("remat", ["", "block", "dots"])
+def test_remat_policies_same_forward(remat):
+    cfg = _cfg(remat=remat)
+    params = api.init(KEY, cfg)
+    batch = {"tokens": _batch(cfg)["tokens"]}
+    logits, _ = api.forward(params, batch, cfg, bits=8)
+    cfg0 = _cfg(remat="")
+    ref, _ = api.forward(params, batch, cfg0, bits=8)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_serving_rules_drop_fsdp():
+    from repro.runtime import sharding as shard
+    rules = shard.serving_rules()
+    assert rules["embed"] == []
+    assert shard.RULES["embed"] == [("data",)]  # training rules untouched
+
+
+def test_grouped_attention_matches_repeated_reference():
+    """The grouped-GQA einsum equals explicit head repetition."""
+    from repro.models import attention as attn
+    B, S, H, KH, D = 2, 8, 4, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KH, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KH, D))
+    out = attn.causal_attention(q, k, v, chunk=4)
+    k_rep = jnp.repeat(k, H // KH, axis=2)
+    v_rep = jnp.repeat(v, H // KH, axis=2)
+    scale = D ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_rep) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(logits, -1), v_rep)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

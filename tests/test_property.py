@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) for system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixnmatch, packing, quant
+
+_settings = settings(max_examples=40, deadline=None)
+
+
+@_settings
+@given(
+    st.integers(0, 2**31 - 1).map(np.uint32),
+    st.sampled_from([1, 2, 4, 8]),
+    st.integers(1, 200),
+)
+def test_pack_unpack_roundtrip(seed, bits, n):
+    rng = np.random.default_rng(int(seed))
+    codes = rng.integers(0, 2**bits, size=(n, 3), dtype=np.int32)
+    words = packing.pack_codes(jnp.asarray(codes), bits, axis=0)
+    back = packing.unpack_codes(words, bits, n, axis=0)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 3, 4, 6]))
+def test_slice_bounds_and_grid(seed, r):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(0, 256, size=64, dtype=np.int32))
+    s = np.asarray(quant.slice_bits(q, 8, r))
+    shift = 2 ** (8 - r)
+    assert s.min() >= 0 and s.max() <= (2**r - 1) * shift
+    assert (s % shift == 0).all()
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1))
+def test_slice_monotone_nonexpansive(seed):
+    """Slicing is monotone: q1 <= q2 implies S(q1) <= S(q2)."""
+    rng = np.random.default_rng(seed)
+    a = np.sort(rng.integers(0, 256, size=32).astype(np.int32))
+    s = np.asarray(quant.slice_bits(jnp.asarray(a), 8, 2))
+    assert (np.diff(s) >= 0).all()
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]))
+def test_quant_dequant_error_bounded_by_grid(seed, c):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(128, 4)).astype(np.float32))
+    q, alpha, z = quant.quantize(w, c, axis=0)
+    w_hat = quant.dequantize(q, alpha, z)
+    err = np.asarray(jnp.abs(w - w_hat))
+    bound = np.asarray(alpha)[0] * 0.5 + 1e-5
+    assert (err <= bound[None, :]).all()
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1))
+def test_ste_gradient_identity_everywhere(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(32, 4)).astype(np.float32))
+    g = jax.grad(lambda w: quant.fake_quant(w, 8, 2).sum())(w)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+@_settings
+@given(st.integers(4, 96), st.floats(2.0, 8.0),
+       st.sampled_from(list(mixnmatch.STRATEGIES)))
+def test_mixnmatch_budget_hit(L, target, strategy):
+    a = mixnmatch.assign(L, target, strategy)
+    assert len(a) == L
+    assert set(a) <= {2, 4, 8}
+    # greedy count split gets within half a bucket of the budget
+    assert abs(mixnmatch.effective_bits(a) - target) <= 6.0 / L + 0.51
+
+
+@_settings
+@given(st.integers(6, 60))
+def test_pyramid_center_heavier_than_ends(L):
+    a = mixnmatch.assign(L, 5.0, "pyramid")
+    assert a[L // 2] >= a[0]
+    assert a[L // 2] >= a[-1]
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4]))
+def test_extra_precision_never_clamps_information(seed, r):
+    """EP slicing is plain rounding: |S_ep(q)/2^(c-r) - q/2^(c-r)| <= 0.5."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(0, 256, size=64, dtype=np.int32))
+    s = np.asarray(quant.slice_bits(q, 8, r, extra_precision=True))
+    shift = 2 ** (8 - r)
+    assert (np.abs(s - np.asarray(q)) <= shift // 2).all()
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1))
+def test_packed_linear_materialize_consistent(seed):
+    """PackedLinear.materialize(r) == core quant_dequant at r bits."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+    pl = packing.PackedLinear.from_weights(w)
+    for r in (2, 4, 8):
+        words, alpha, beta = pl.materialize(r)
+        codes = packing.unpack_codes(words, r, 64, axis=0)
+        w_hat = alpha * codes.astype(jnp.float32) - beta
+        expect = quant.quant_dequant(w, 8, r, axis=0)
+        np.testing.assert_allclose(np.asarray(w_hat), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,154 @@
+"""Unit tests for the paper's quantization math (Eqs. 1, 3, 6, 8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.quant import QuantConfig
+
+
+class TestSliceBits:
+    """Appendix A / Errata worked examples, verbatim."""
+
+    def test_paper_example_234(self):
+        # 234 -> round 4 -> clamp 3 -> 3*64 = 192
+        q = jnp.array([234], jnp.int32)
+        assert int(quant.slice_bits(q, 8, 2)[0]) == 192
+
+    def test_paper_example_53_rounds_up(self):
+        # 53 = 0b00110101: MSBs 00, 3rd bit set -> round UP to 1 -> 64
+        q = jnp.array([53], jnp.int32)
+        assert int(quant.slice_bits(q, 8, 2)[0]) == 64
+
+    def test_paper_example_240_clamped(self):
+        # 240 rounds to 4, clamp -> 3 -> 192
+        q = jnp.array([240], jnp.int32)
+        assert int(quant.slice_bits(q, 8, 2)[0]) == 192
+
+    def test_errata_extra_bucket_234(self):
+        # Eq. 8 (no clamp): 234 -> 4 * 64 = 256, the 2^r+1-th bucket
+        q = jnp.array([234], jnp.int32)
+        assert int(quant.slice_bits(q, 8, 2, extra_precision=True)[0]) == 256
+
+    def test_int2_codes_cover_paper_grid(self):
+        # MatQuant int2 allows exactly {0, 64, 128, 192}
+        q = jnp.arange(256, dtype=jnp.int32)
+        vals = set(np.asarray(quant.slice_bits(q, 8, 2)).tolist())
+        assert vals == {0, 64, 128, 192}
+
+    def test_slice_full_width_identity(self):
+        q = jnp.arange(256, dtype=jnp.int32)
+        np.testing.assert_array_equal(quant.slice_bits(q, 8, 8), q)
+
+    def test_dynamic_r_matches_static(self):
+        q = jnp.arange(256, dtype=jnp.int32)
+        for r in (2, 3, 4, 6, 8):
+            np.testing.assert_array_equal(
+                quant.slice_bits(q, 8, jnp.asarray(r)),
+                quant.slice_bits(q, 8, r))
+
+    def test_slice_under_jit_and_scan(self):
+        q = jnp.arange(256, dtype=jnp.int32)
+
+        def body(c, r):
+            return c, quant.slice_bits(q, 8, r)
+
+        _, outs = jax.lax.scan(body, None, jnp.array([2, 4, 8]))
+        np.testing.assert_array_equal(outs[0], quant.slice_bits(q, 8, 2))
+        np.testing.assert_array_equal(outs[2], q)
+
+
+class TestMinMaxQuant:
+    def test_roundtrip_error_bound(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+        for c in (2, 4, 8):
+            q, alpha, z = quant.quantize(w, c, axis=0)
+            w_hat = quant.dequantize(q, alpha, z)
+            # max error <= alpha/2 per group
+            err = jnp.max(jnp.abs(w - w_hat), axis=0)
+            assert bool(jnp.all(err <= alpha[0] * 0.5 + 1e-6)), c
+
+    def test_codes_in_range(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 8)) * 100
+        q, _, _ = quant.quantize(w, 4, axis=0)
+        assert int(q.min()) >= 0 and int(q.max()) <= 15
+
+    def test_constant_group_no_nan(self):
+        w = jnp.ones((32, 4))
+        q, alpha, z = quant.quantize(w, 8, axis=0)
+        w_hat = quant.dequantize(q, alpha, z)
+        assert bool(jnp.isfinite(w_hat).all())
+
+    def test_extremes_hit_min_max(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (128, 4))
+        q, _, _ = quant.quantize(w, 8, axis=0)
+        assert int(q.max()) == 255 and int(q.min()) == 0
+
+
+class TestSTE:
+    def test_identity_gradient(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+        g = jax.grad(lambda w: jnp.sum(quant.fake_quant(w, 8, 2) * 3.0))(w)
+        np.testing.assert_allclose(np.asarray(g), 3.0)
+
+    def test_forward_matches_quant_dequant(self):
+        # w + sg(qdq - w) == qdq up to one float-add rounding
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+        np.testing.assert_allclose(
+            np.asarray(quant.fake_quant(w, 8, 4)),
+            np.asarray(quant.quant_dequant(w, 8, 4)), rtol=0, atol=1e-6)
+
+    def test_omni_fake_quant_grads_flow_to_gamma_beta(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+        gamma = jnp.ones((1, 8))
+        beta = jnp.ones((1, 8))
+
+        def loss(gamma, beta):
+            return jnp.sum(quant.fake_quant_omni(w, 8, 2, gamma, beta) ** 2)
+
+        g1, g2 = jax.grad(loss, argnums=(0, 1))(gamma, beta)
+        assert float(jnp.abs(g1).sum()) > 0
+        assert float(jnp.abs(g2).sum()) > 0
+
+
+class TestExtraPrecision:
+    def test_effective_bits_close_to_paper(self):
+        # paper reports ~2.05 avg bits for int2 with the extra bucket
+        w = jax.random.normal(jax.random.PRNGKey(0), (4096, 64))
+        q, _, _ = quant.quantize(w, 8, axis=0)
+        eff = float(quant.effective_bits(q, 8, 2))
+        assert 2.0 < eff < 2.2, eff
+
+    def test_ep_reduces_quant_error_at_int2(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (1024, 32))
+        base = quant.quant_dequant(w, 8, 2)
+        ep = quant.quant_dequant(w, 8, 2, extra_precision=True)
+        assert float(jnp.mean((ep - w) ** 2)) <= float(jnp.mean((base - w) ** 2))
+
+
+class TestQuantConfig:
+    def test_weight_length_validation(self):
+        with pytest.raises(ValueError):
+            QuantConfig(bitwidths=(8, 4, 2), weights=(1.0,))
+
+    def test_bits_exceed_parent(self):
+        with pytest.raises(ValueError):
+            QuantConfig(bitwidths=(16,), weights=(1.0,), parent_bits=8)
+
+    def test_lambdas(self):
+        q = QuantConfig(bitwidths=(8, 2), weights=(0.1, 1.0))
+        assert q.lambdas == {8: 0.1, 2: 1.0}
+
+
+def test_right_shift_stat_orders_matquant_style():
+    """Fig 1c: on the same value range, a distribution with more mass in
+    the high buckets has a larger mean quantized code."""
+    rng = np.random.default_rng(0)
+    uniform = jnp.asarray(rng.uniform(0, 1, (1024, 8)).astype(np.float32))
+    skewed = jnp.asarray(rng.beta(5.0, 1.0, (1024, 8)).astype(np.float32))
+    # pin the ranges so minmax normalization is identical
+    uniform = uniform.at[0].set(0.0).at[1].set(1.0)
+    skewed = skewed.at[0].set(0.0).at[1].set(1.0)
+    assert float(quant.right_shift_stat(skewed)) > float(quant.right_shift_stat(uniform))
