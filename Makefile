@@ -1,0 +1,19 @@
+# Repo tooling: `make test` is the tier-1 gate (ROADMAP.md); bench
+# targets accrue benchmark numbers per-PR.
+
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test bench-serve lint
+
+test:
+	python -m pytest -x -q
+
+bench-serve:
+	python benchmarks/serve_throughput.py --reduced --out BENCH_serve.json
+
+lint:
+	python -m compileall -q src tests benchmarks examples
+	@python -c "import pyflakes" 2>/dev/null \
+	    && python -m pyflakes src/repro tests benchmarks examples \
+	    || echo "pyflakes not installed; ran syntax check only"

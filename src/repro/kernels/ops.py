@@ -49,8 +49,7 @@ def quant_matmul(x, words, alpha, beta, *, bits, overflow_words=None,
     M = x2.shape[0]
 
     cpw = packing.codes_per_word(bits)
-    bm = min(block_m, max(8, M))
-    x2, pad_m = _pad_to(x2, bm, 0)
+    bm = min(block_m, max(8, M))      # ragged M is padded inside the kernel
     bk = min(block_k, K)
     # block_k must divide K and be a multiple of cpw
     while K % bk or bk % cpw:
@@ -72,8 +71,6 @@ def quant_matmul(x, words, alpha, beta, *, bits, overflow_words=None,
             jnp.zeros_like(beta, jnp.float32),
             bits=1, block_m=bm, block_n=bn, block_k=bk1, interpret=interpret)
         y = y + y_over
-    if pad_m:
-        y = y[:M]
     return y.reshape(lead + (N,)).astype(x.dtype)
 
 

@@ -68,11 +68,17 @@ def quant_matmul_pallas(
     cpw = 32 // bits
     Kw, N = words.shape
     assert Kw * cpw == K, (Kw, cpw, K)
-    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
-        M, N, K, block_m, block_n, block_k)
+    # M is ragged in serving (decode batches are rarely multiples of
+    # 128): pad the activation rows up to block_m and slice the product
+    # back. K/N come from the packed weight planes and must tile exactly.
+    assert N % block_n == 0 and K % block_k == 0, (
+        N, K, block_n, block_k)
     assert block_k % cpw == 0
+    pad_m = (-M) % block_m
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
     k_steps = K // block_k
-    grid = (M // block_m, N // block_n, k_steps)
+    grid = ((M + pad_m) // block_m, N // block_n, k_steps)
 
     out = pl.pallas_call(
         functools.partial(_kernel, bits=bits, k_steps=k_steps),
@@ -84,7 +90,9 @@ def quant_matmul_pallas(
             pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((M + pad_m, N), jnp.float32),
         interpret=interpret,
     )(x, words, alpha, beta)
+    if pad_m:
+        out = out[:M]
     return out.astype(x.dtype)

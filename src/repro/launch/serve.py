@@ -1,47 +1,40 @@
-"""Serving driver: batched requests against a sliced/packed model.
+"""Serving driver: a Poisson arrival stream through continuous batching.
 
-Demonstrates the paper's deployment story (Section 5.4): one int8
-parent checkpoint, served at whatever precision the flag demands --
-uniform (--bits 4), interpolated (--bits 3), or layer-wise Mix'n'Match
-(--mixnmatch-bits 3.5 picks the pyramid assignment for that budget).
+Demonstrates the paper's deployment story (Section 5.4) as a *runtime*
+behavior: one int8 parent checkpoint; requests arrive as an open-loop
+Poisson process, the continuous-batching scheduler admits them into KV
+slots as capacity frees up, and (with --elastic) the precision router
+downgrades int8 -> int4 -> Mix'n'Match -> int2 while the queue is deep
+and recovers when it drains.
 
+  # elastic precision under load
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --reduced \
-      --bits 2 --requests 8 --prompt-len 32 --gen-tokens 16
+      --elastic --requests 32 --arrival-rate 16 --prompt-len 24 --gen-tokens 12
+
+  # fixed tier, legacy fixed-batch loop
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --reduced \
+      --bits 2 --legacy --requests 8 --prompt-len 32 --gen-tokens 16
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.core import mixnmatch
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import api
 from repro.serve import Engine, ServeConfig
+from repro.serve.scheduler import poisson_trace
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3_1_7b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--mixnmatch-bits", type=float, default=None,
-                    help="effective-bits budget; overrides --bits")
-    ap.add_argument("--extra-precision", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-tokens", type=int, default=16)
-    ap.add_argument("--ckpt", default="", help="checkpoint dir to serve from")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
+def build_engine(args, cfg):
     params = api.init(jax.random.PRNGKey(args.seed), cfg)
     if args.ckpt:
         from repro.runtime.checkpoint import CheckpointManager
@@ -57,23 +50,78 @@ def main(argv=None):
         print(f"mix'n'match pyramid assignment ({eff:.2f} eff bits): {bits}")
     else:
         bits = args.bits
-    engine = Engine(params, cfg, ServeConfig(
+    return Engine(params, cfg, ServeConfig(
         bits=bits, max_len=args.prompt_len + args.gen_tokens,
-        extra_precision=args.extra_precision))
+        extra_precision=args.extra_precision, use_packed=args.packed,
+        num_slots=args.num_slots, page_size=args.page_size))
 
-    corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
-                                        seq_len=args.prompt_len, seed=123))
-    prompts = jnp.asarray(
-        corpus.batch(0, args.requests, args.prompt_len)["tokens"])
-    t0 = time.perf_counter()
-    out = engine.generate(prompts, args.gen_tokens)
-    jax.block_until_ready(out)
-    dt = time.perf_counter() - t0
-    tok_s = args.requests * args.gen_tokens / dt
-    print(f"served {args.requests} requests x {args.gen_tokens} tokens "
-          f"in {dt:.2f}s ({tok_s:.1f} tok/s)")
-    print("first continuations:", out[:2].tolist())
-    return out
+
+def build_trace(args, cfg):
+    return poisson_trace(cfg, requests=args.requests,
+                         prompt_len=args.prompt_len,
+                         gen_tokens=args.gen_tokens,
+                         rate=args.arrival_rate, seed=args.seed)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_1_7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--mixnmatch-bits", type=float, default=None,
+                    help="effective-bits budget; overrides --bits")
+    ap.add_argument("--extra-precision", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve packed r-bit planes (TPU Pallas path)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="Poisson arrivals per second")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="concurrent decode slots (continuous batching)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--elastic", action="store_true",
+                    help="load-adaptive precision tiers (int8..int2)")
+    ap.add_argument("--legacy", action="store_true",
+                    help="old fixed-batch run-to-completion loop")
+    ap.add_argument("--ckpt", default="", help="checkpoint dir to serve from")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    engine = build_engine(args, cfg)
+
+    if args.legacy:
+        corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                            seq_len=args.prompt_len, seed=123))
+        prompts = jnp.asarray(
+            corpus.batch(0, args.requests, args.prompt_len)["tokens"])
+        t0 = time.perf_counter()
+        out = engine.generate_legacy(prompts, args.gen_tokens)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        tok_s = args.requests * args.gen_tokens / dt
+        print(f"served {args.requests} requests x {args.gen_tokens} tokens "
+              f"in {dt:.2f}s ({tok_s:.1f} tok/s)")
+        print("first continuations:", out[:2].tolist())
+        return out
+
+    sched = engine.scheduler(elastic=args.elastic)
+    trace = build_trace(args, cfg)
+    print(f"replaying {len(trace)} Poisson arrivals "
+          f"(rate {args.arrival_rate}/s) through "
+          f"{sched.num_slots} slots x {sched.capacity} tokens"
+          + (" with elastic precision" if args.elastic else
+             f" at fixed tier bits={engine.serve_cfg.bits}"))
+    results = sched.run_trace(trace)
+    summary = sched.metrics.summary()
+    print(json.dumps(summary, indent=2))
+    first = {k: results[k].tolist() for k in sorted(results)[:2]}
+    print("first continuations:", first)
+    return results
 
 
 if __name__ == "__main__":

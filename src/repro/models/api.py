@@ -50,14 +50,17 @@ def state_axes(cfg):
     return lm.decode_state_axes(cfg)
 
 
-def prefill(params, batch, cfg, *, bits=None, max_len=None):
+def prefill(params, batch, cfg, *, bits=None, max_len=None, last_pos=None):
     if cfg.family == "encdec":
+        if last_pos is not None:
+            raise NotImplementedError("last_pos gather for encdec prefill")
         return ed.prefill_encdec(params, batch["frames"], batch["tokens"],
                                  cfg, bits=bits, max_len=max_len)
     return lm.prefill(
         params, batch["tokens"], cfg, bits=bits, max_len=max_len,
         positions=batch.get("positions"),
         vision_embeds=batch.get("vision_embeds"),
+        last_pos=last_pos,
     )
 
 
@@ -65,6 +68,17 @@ def decode_step(params, state, token, pos, cfg, *, bits=None):
     if cfg.family == "encdec":
         return ed.decode_step_encdec(params, state, token, pos, cfg, bits=bits)
     return lm.decode_step(params, state, token, pos, cfg, bits=bits)
+
+
+def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
+    """Slot-array decode step: pos is (B,) int32, one position per slot.
+
+    The continuous-batching scheduler's inner step -- see
+    lm.decode_step_slots. Attention-cache families only.
+    """
+    if cfg.family == "encdec":
+        raise NotImplementedError("slot-wise decode for encdec")
+    return lm.decode_step_slots(params, state, token, pos, cfg, bits=bits)
 
 
 def param_count(params) -> int:

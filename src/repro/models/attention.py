@@ -152,6 +152,44 @@ def cache_axes(layers: bool = True):
     return {"k": base, "v": base}
 
 
+def decode_attention_slots(
+    p, x, cache, pos, cfg, *, bits, qcfg: QuantConfig,
+):
+    """One-token decode with PER-SLOT positions (continuous batching).
+
+    x: (B, 1, d); pos: (B,) int32, each slot's current write index. Every
+    slot writes its new k/v at its own cache row/position and attends to
+    its own prefix only -- the batch axis is a slot array where rows may
+    belong to different requests at different depths.
+    """
+    B = x.shape[0]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pos = pos.astype(jnp.int32)
+    positions = pos[:, None]
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(pos[:, None, None], (B, 1, 3))
+    q, k_new, v_new = _project_qkv(p, x, cfg, bits=bits, qcfg=qcfg, positions=positions)
+
+    def upd(c, n, p_):  # c: (max_len, kh, hd); n: (1, kh, hd)
+        return jax.lax.dynamic_update_slice_in_dim(c, n, p_, axis=0)
+
+    k_cache = jax.vmap(upd)(cache["k"], k_new.astype(cache["k"].dtype), pos)
+    v_cache = jax.vmap(upd)(cache["v"], v_new.astype(cache["v"].dtype), pos)
+    G = h // kh
+    qg = q.reshape(B, 1, kh, G, hd)
+    scale = hd**-0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    mask = (jnp.arange(k_cache.shape[1])[None, :] <= pos[:, None])
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, h * hd)
+    out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg, kind="attn")
+    return out, {"k": k_cache, "v": v_cache}
+
+
 def decode_attention(
     p, x, cache, pos, cfg, *, bits, qcfg: QuantConfig,
 ):

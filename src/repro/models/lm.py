@@ -410,13 +410,68 @@ def decode_step(params, state, token, pos, cfg, *, bits=None):
     raise ValueError(cfg.family)
 
 
+def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
+    """One decode step over a SLOT ARRAY with per-slot positions.
+
+    token: (B, 1) int32; pos: (B,) int32, each slot's current write
+    index. Returns (logits (B, 1, V), new state). This is the inner step
+    of the continuous-batching scheduler: the batch axis is a fixed slot
+    array (static shapes, one compile), rows belong to different requests
+    at different decode depths, and inactive slots just compute garbage
+    that the scheduler masks at the bookkeeping level.
+
+    Supported for attention-cache families (dense / vlm / moe); the
+    recurrent families keep the shared-position `decode_step` path.
+    """
+    qcfg = cfg.quant
+    L = cfg.num_layers
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise NotImplementedError(
+            f"slot-wise decode requires an attention KV cache; family "
+            f"{cfg.family!r} is served via the legacy shared-position path")
+    bits_l = _bits_per_layer(bits, L)
+    h = jnp.take(params["embed"]["w"], token, axis=0)
+    h = cm.constrain(h, "batch", None, "embed")
+    is_moe = cfg.family == "moe"
+
+    def body(x, xs):
+        lp, cache_l, b = xs
+        b = None if bits_l is None else b
+        a, new_cache = attn.decode_attention_slots(
+            lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, pos, cfg,
+            bits=b, qcfg=qcfg)
+        x = x + a
+        if is_moe:
+            y, _ = ffn_mod.apply_moe(lp["moe"], cm.rmsnorm(lp["norm2"], x),
+                                     bits=b, qcfg=qcfg, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor)
+        else:
+            y = ffn_mod.apply_ffn(lp["ffn"], cm.rmsnorm(lp["norm2"], x),
+                                  bits=b, qcfg=qcfg)
+        return x + y, new_cache
+
+    xs = (params["layers"], state["kv"],
+          bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32))
+    h, new_kv = cm.scan_layers(body, h, xs, cfg.unroll_layers)
+    return _logits(params, cfg, h), {"kv": new_kv}
+
+
 def prefill(params, tokens, cfg, *, bits=None, max_len=None,
-            positions=None, vision_embeds=None):
+            positions=None, vision_embeds=None, last_pos=None):
     """Process a full prompt; returns (last-position logits, decode state).
 
     For attention families the KV cache is materialized from the
     projected k/v of the forward pass (padded to max_len); for SSM
     families the final recurrent state is returned.
+
+    `last_pos` (scalar, may be traced): position count of the REAL
+    prompt when `tokens` is right-padded to a static bucket; logits are
+    gathered at index last_pos - 1 instead of -1. Under causal attention
+    right-padding is exact -- pad positions never influence logits at
+    earlier positions, and their (garbage) KV rows are overwritten by
+    decode steps before ever entering an attention window. Recurrent
+    families fold pad tokens into their state, so only pass last_pos for
+    attention families.
     """
     qcfg = cfg.quant
     B, S = tokens.shape
@@ -428,6 +483,12 @@ def prefill(params, tokens, cfg, *, bits=None, max_len=None,
             positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
     bits_l = _bits_per_layer(bits, L)
     h = _embed(params, cfg, tokens, vision_embeds)
+
+    def last(h):
+        if last_pos is None:
+            return h[:, -1:]
+        idx = jnp.asarray(last_pos, jnp.int32) - 1
+        return jax.lax.dynamic_slice_in_dim(h, idx, 1, axis=1)
 
     def pad_cache(k):
         if max_len == S:
@@ -463,7 +524,7 @@ def prefill(params, tokens, cfg, *, bits=None, max_len=None,
         xs = (params["layers"],
               bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32))
         h, kv = cm.scan_layers(body, h, xs, cfg.unroll_layers)
-        return _logits(params, cfg, h[:, -1:]), {"kv": kv}
+        return _logits(params, cfg, last(h)), {"kv": kv}
 
     if cfg.family in ("hybrid", "ssm"):
         # run the training forward but thread/collect final states
@@ -527,7 +588,7 @@ def prefill(params, tokens, cfg, *, bits=None, max_len=None,
                   bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32),
                   jnp.arange(L, dtype=jnp.int32))
             (h, kv_new), ssm_new = cm.scan_layers(body, (h, kv), xs, cfg.unroll_layers)
-            return _logits(params, cfg, h[:, -1:]), {"ssm": ssm_new, "kv": kv_new}
+            return _logits(params, cfg, last(h)), {"ssm": ssm_new, "kv": kv_new}
 
         # xLSTM prefill: python loop, collect states
         new_state = {}
@@ -548,6 +609,6 @@ def prefill(params, tokens, cfg, *, bits=None, max_len=None,
                 y, st = ssm_mod.apply_slstm(lp["slstm"], xin, cfg, bits=b, qcfg=qcfg)
                 new_state[f"slstm_{i}"] = st
             h = h + y
-        return _logits(params, cfg, h[:, -1:]), new_state
+        return _logits(params, cfg, last(h)), new_state
 
     raise ValueError(cfg.family)

@@ -1,1 +1,9 @@
-from repro.serve.engine import Engine, ServeConfig, materialize_served_params  # noqa: F401
+from repro.serve.engine import (Engine, ServeConfig,  # noqa: F401
+                                materialize_packed_params,
+                                materialize_served_params)
+from repro.serve.kv_cache import PagePool  # noqa: F401
+from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.router import (ElasticPrecisionRouter, PrecisionTier,  # noqa: F401
+                                TierCache, default_tiers)
+from repro.serve.scheduler import (ContinuousBatchingScheduler,  # noqa: F401
+                                   Request)

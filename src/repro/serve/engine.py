@@ -1,20 +1,47 @@
-"""Serving engine: packed weights, Mix'n'Match, batched generation.
+"""Serving engine: weight materialization + continuous-batching facade.
 
 Deployment flow (paper Section 5.4): one int8 *parent* checkpoint is
-stored; at load time each layer's weights are sliced to the precision
-the deployment demands (uniform int8/6/4/3/2 or a per-layer
-Mix'n'Match vector), packed, and served. Execution paths:
+stored; each layer's weights are sliced to the precision the deployment
+demands (uniform int8/6/4/3/2 or a per-layer Mix'n'Match vector) and
+served. Execution paths:
 
-  * TPU: the Pallas `quant_matmul` kernel consumes packed planes and
+  * TPU: the Pallas `quant_matmul` kernel consumes packed planes
+    (`materialize_packed_params`, ServeConfig.use_packed) and
     dequantizes in VMEM (kernels/quant_matmul.py).
   * CPU/tests: weights are materialized as their dequantized values
     (`materialize_served_params`) -- numerically IDENTICAL to the
-    packed path (test_serve proves it equals fake-quant forward).
+    packed path (test_perf_paths proves it equals fake-quant forward).
+
+Serving architecture
+--------------------
+`Engine` is a thin facade over the continuous-batching subsystem:
+
+  * serve/scheduler.py -- request queue + slot-array continuous
+    batching: admit on free slots, one jitted `decode_step_slots` over
+    the full slot array per step (static shapes, per-slot position
+    vector), evict on EOS/max-tokens so finished requests release
+    capacity mid-flight.
+  * serve/kv_cache.py -- the slot/page pool over `api.init_state`'s
+    decode-state layout: page-budget admission, allocate/free/defrag,
+    and the jit-friendly insert/permute state surgery.
+  * serve/router.py -- elastic-precision policy: queue depth + token
+    backlog pick the served tier (int8 -> int4 -> Mix'n'Match -> int2),
+    re-materialized via the functions below and cached per tier so a
+    switch between two decode steps is a dict lookup.
+  * serve/metrics.py -- TTFT / latency / throughput / tier-occupancy
+    counters the benchmarks serialize.
+
+`Engine.generate` routes fixed batches through the scheduler as the
+single-batch special case (token-identical to the legacy loop, kept as
+`generate_legacy`); `Engine.scheduler()` hands out the full
+continuous-batching interface for arrival-stream drivers
+(launch/serve.py, benchmarks/serve_throughput.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -191,17 +218,54 @@ class ServeConfig:
     bits: object = 8                 # int or per-layer list (Mix'n'Match)
     max_len: int = 512
     extra_precision: bool = False
-    use_packed: bool = False         # TPU kernel path
+    use_packed: bool = False         # TPU kernel path (packed r-bit planes)
+    num_slots: int = 8               # continuous batching: concurrent requests
+    page_size: int = 16              # KV page granularity (tokens)
+    keep_parent: bool = True         # retain parent ckpt for elastic tiers;
+                                     # False frees it (elastic then raises)
+
+
+def _packed_backend_ok() -> bool:
+    """Packed planes pay off where the Pallas kernel runs (TPU)."""
+    return jax.default_backend() == "tpu"
 
 
 class Engine:
-    """Batched greedy-decoding engine over materialized served weights."""
+    """Facade over the continuous-batching scheduler (see module doc).
+
+    Holds the materialized served weights for the configured tier and
+    the jitted legacy prefill/decode closures; `generate`/`score` keep
+    their original signatures.
+    """
 
     def __init__(self, params, cfg, serve_cfg: ServeConfig):
-        self.cfg = cfg
         self.serve_cfg = serve_cfg
-        self.params = materialize_served_params(
-            params, cfg, serve_cfg.bits, serve_cfg.extra_precision)
+        # tier re-materialization source; note the extra reference only
+        # pins the caller's arrays, it copies nothing
+        self._parent_params = params if serve_cfg.keep_parent else None
+        use_packed = serve_cfg.use_packed
+        if use_packed and not _packed_backend_ok():
+            warnings.warn(
+                "ServeConfig.use_packed: no TPU backend, so the Pallas "
+                "quant_matmul path is unavailable; serving dequantized "
+                "weights instead", stacklevel=2)
+            use_packed = False
+        if use_packed and (not isinstance(serve_cfg.bits, int)
+                           or serve_cfg.extra_precision):
+            warnings.warn(
+                "ServeConfig.use_packed supports uniform integer bits "
+                "without extra_precision; serving dequantized weights "
+                "instead", stacklevel=2)
+            use_packed = False
+        self.packed = use_packed
+        if use_packed:
+            cfg = cfg.replace(quant=dataclasses.replace(
+                cfg.quant, packed_bits=serve_cfg.bits))
+            self.params = materialize_packed_params(params, cfg, serve_cfg.bits)
+        else:
+            self.params = materialize_served_params(
+                params, cfg, serve_cfg.bits, serve_cfg.extra_precision)
+        self.cfg = cfg
         self._decode = jax.jit(
             lambda p, st, tok, pos: api.decode_step(p, st, tok, pos, cfg, bits=None)
         )
@@ -209,9 +273,103 @@ class Engine:
             lambda p, batch: api.prefill(p, batch, cfg, bits=None,
                                          max_len=serve_cfg.max_len)
         )
+        self._score_logits = jax.jit(
+            lambda p, toks: api.forward(p, {"tokens": toks}, cfg, bits=None)[0]
+        )
+        self._schedulers: dict[tuple[int, int], object] = {}
+
+    # -- continuous batching ----------------------------------------------
+
+    def scheduler(self, *, num_slots: int | None = None,
+                  max_len: int | None = None, elastic: bool = False,
+                  tiers=None, thresholds=None, cooldown: int = 4,
+                  total_pages: int | None = None, clock=None):
+        """Build a ContinuousBatchingScheduler over this engine's model.
+
+        elastic=True serves load-adaptive precision from the parent
+        checkpoint (router + per-tier cache); otherwise the scheduler
+        serves this engine's fixed tier (packed or dequantized).
+        """
+        from repro.serve import router as router_mod
+        from repro.serve import scheduler as sched_mod
+        kw = dict(
+            num_slots=num_slots or self.serve_cfg.num_slots,
+            max_len=max_len or self.serve_cfg.max_len,
+            page_size=self.serve_cfg.page_size,
+            total_pages=total_pages,
+        )
+        if clock is not None:
+            kw["clock"] = clock
+        if elastic:
+            if self.packed:
+                raise ValueError("elastic tiers are served from dequantized "
+                                 "weights; disable use_packed")
+            if self._parent_params is None:
+                raise ValueError("elastic tiers re-materialize from the "
+                                 "parent checkpoint, which this engine was "
+                                 "built without (keep_parent=False)")
+            tiers = tiers or router_mod.default_tiers(self.cfg.num_layers)
+            cache = router_mod.TierCache(
+                self._parent_params, self.cfg,
+                extra_precision=self.serve_cfg.extra_precision)
+            own = self.serve_cfg.bits
+            own = tuple(own) if isinstance(own, (list, tuple)) else own
+            for tier in tiers:
+                # this engine's fixed tier is already materialized --
+                # seed the cache instead of re-quantizing a second copy
+                tb = tier.bits if isinstance(tier.bits, int) else tuple(tier.bits)
+                if tb == own:
+                    cache._cache[tier.name] = self.params
+            return sched_mod.ContinuousBatchingScheduler(
+                None, self.cfg,
+                router=router_mod.ElasticPrecisionRouter(
+                    tiers, thresholds, cooldown=cooldown),
+                tier_cache=cache,
+                **kw)
+        return sched_mod.ContinuousBatchingScheduler(self.params, self.cfg, **kw)
+
+    def _batch_scheduler(self, B: int, max_len: int):
+        # keep only the latest shape: each cached scheduler pins a full
+        # (L, B, max_len, ...) decode state on device
+        key = (B, max_len)
+        if key not in self._schedulers:
+            self._schedulers.clear()
+            self._schedulers[key] = self.scheduler(num_slots=B, max_len=max_len)
+        sched = self._schedulers[key]
+        sched.reset()
+        return sched
+
+    # -- generation --------------------------------------------------------
 
     def generate(self, prompts: jax.Array, num_tokens: int, extras=None):
-        """prompts: (B, S) int32 -> (B, num_tokens) greedy continuation."""
+        """prompts: (B, S) int32 -> (B, num_tokens) greedy continuation.
+
+        Routed through the continuous-batching scheduler as the
+        all-arrive-at-once special case; families whose rows couple
+        through the batch (MoE expert capacity) or need per-request
+        extras keep the legacy fixed-batch loop.
+
+        Admission prefills one request at a time (as an arrival stream
+        would), so large fixed batches pay B prefill launches where
+        `generate_legacy` pays one batched call; prefer generate_legacy
+        when throughput on big offline batches is the only goal.
+        """
+        if extras or self.cfg.family not in ("dense", "vlm"):
+            return self.generate_legacy(prompts, num_tokens, extras)
+        import numpy as np
+        from repro.serve.scheduler import Request
+        B, S = prompts.shape
+        sched = self._batch_scheduler(B, S + num_tokens)
+        prompts_np = np.asarray(prompts)
+        for i in range(B):
+            sched.submit(Request(uid=i, prompt=prompts_np[i],
+                                 max_new_tokens=num_tokens))
+        results = sched.run_until_idle()
+        return jnp.asarray(np.stack([results[i] for i in range(B)]))
+
+    def generate_legacy(self, prompts: jax.Array, num_tokens: int, extras=None):
+        """The original fixed-batch run-to-completion loop (also the
+        equivalence oracle for the scheduler path)."""
         B, S = prompts.shape
         batch = {"tokens": prompts}
         if extras:
@@ -229,5 +387,5 @@ class Engine:
     def score(self, tokens: jax.Array, labels: jax.Array) -> float:
         """Mean NLL of labels under the served model (quality evals)."""
         from repro.core.matquant import cross_entropy
-        logits, _ = api.forward(self.params, {"tokens": tokens}, self.cfg, bits=None)
+        logits = self._score_logits(self.params, tokens)
         return float(cross_entropy(logits, labels))

@@ -1,0 +1,192 @@
+"""Slot/page pool over the model decode state (continuous batching).
+
+The decode state produced by `api.init_state(cfg, num_slots, capacity)`
+is a fixed-shape pytree whose "batch" axis is a SLOT ARRAY: row i holds
+the KV cache (and/or recurrent state) of whatever request currently owns
+slot i. Static shapes keep a single jitted decode step alive for the
+whole serving session; requests come and go by overwriting rows.
+
+Two layers live here:
+
+  * `PagePool` -- pure-Python accounting. Slots are the unit of
+    occupancy (one request per slot); pages (page_size tokens each) are
+    the unit of memory budget. The pool may be *overcommitted*
+    (total_pages < num_slots * pages_per_slot), in which case admission
+    reserves ceil((prompt + max_new) / page_size) pages up front so a
+    running request can never run out mid-flight; short requests then
+    share the budget that one max-length request would hog. `free`
+    releases both the slot and its pages the moment a request finishes
+    -- the scheduler admits from the queue on the same step.
+    `defrag` compacts live slots into a dense prefix (a permutation),
+    which keeps the active region contiguous for schedulers that lower
+    several decode batch sizes.
+
+  * jit-friendly state surgery -- `insert_slot` writes a single-request
+    prefill state (batch == 1) into row `slot` of the big state;
+    `permute_slots` applies a defrag permutation. Both locate the batch
+    axis of every leaf from `api.state_axes(cfg)`, so they work for any
+    family whose state the scheduler supports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+
+# ---------------------------------------------------------------------------
+# page/slot accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SlotInfo:
+    owner: object            # request uid
+    pages: int               # pages reserved
+    tokens: int = 0          # tokens actually written (metrics only)
+
+
+class PagePool:
+    """Fixed-capacity slot + page accounting for the decode state.
+
+    num_slots: rows in the slot array (the decode batch dimension).
+    page_size: tokens per page.
+    pages_per_slot: pages a single slot's cache row can hold; the cache
+      capacity in tokens is page_size * pages_per_slot.
+    total_pages: global page budget; defaults to the uncommitted
+      num_slots * pages_per_slot, set it lower to model memory pressure.
+    """
+
+    def __init__(self, num_slots: int, page_size: int = 16,
+                 pages_per_slot: int = 8, total_pages: int | None = None):
+        assert num_slots > 0 and page_size > 0 and pages_per_slot > 0
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        self.total_pages = (num_slots * pages_per_slot
+                            if total_pages is None else total_pages)
+        self._slots: dict[int, SlotInfo] = {}
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def slot_capacity(self) -> int:
+        """Token capacity of one slot (the cache max_len to allocate)."""
+        return self.page_size * self.pages_per_slot
+
+    @property
+    def used_pages(self) -> int:
+        return sum(s.pages for s in self._slots.values())
+
+    @property
+    def free_pages(self) -> int:
+        return self.total_pages - self.used_pages
+
+    @property
+    def active_slots(self) -> list[int]:
+        return sorted(self._slots)
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.num_slots) if i not in self._slots]
+
+    def owner(self, slot: int):
+        return self._slots[slot].owner
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    # -- allocate / grow / free -------------------------------------------
+
+    def can_admit(self, n_tokens: int) -> bool:
+        pages = self.pages_for(n_tokens)
+        return (len(self._slots) < self.num_slots
+                and pages <= self.pages_per_slot
+                and pages <= self.free_pages)
+
+    def allocate(self, owner, n_tokens: int) -> int | None:
+        """Reserve a slot + pages covering n_tokens total (prompt +
+        planned generation). Returns the slot id, or None if the request
+        does not fit right now (queue it) or can never fit (caller must
+        reject: pages_for(n) > pages_per_slot)."""
+        if not self.can_admit(n_tokens):
+            return None
+        slot = min(i for i in range(self.num_slots) if i not in self._slots)
+        self._slots[slot] = SlotInfo(owner=owner, pages=self.pages_for(n_tokens))
+        return slot
+
+    def grow(self, slot: int, n_tokens: int):
+        """Record actual token usage (reservation already covers it)."""
+        info = self._slots[slot]
+        info.tokens = n_tokens
+        assert n_tokens <= info.pages * self.page_size, (
+            f"slot {slot} wrote {n_tokens} tokens past its "
+            f"{info.pages}-page reservation")
+
+    def free(self, slot: int):
+        """Release a finished request's slot and pages mid-flight."""
+        del self._slots[slot]
+
+    # -- defrag ------------------------------------------------------------
+
+    def defrag(self) -> tuple[list[int], dict[int, int]]:
+        """Compact live slots into a dense prefix.
+
+        Returns (perm, moves): `perm` is a length-num_slots gather index
+        list for `permute_slots` (new_state[i] = old_state[perm[i]]);
+        `moves` maps old slot id -> new slot id for every live slot so
+        the scheduler can remap request bookkeeping.
+        """
+        live = self.active_slots
+        dead = [i for i in range(self.num_slots) if i not in self._slots]
+        perm = live + dead
+        moves = {old: new for new, old in enumerate(live)}
+        self._slots = {moves[old]: info for old, info in self._slots.items()}
+        return perm, moves
+
+
+# ---------------------------------------------------------------------------
+# slot-wise state surgery
+# ---------------------------------------------------------------------------
+
+
+def state_batch_axes(cfg) -> list[int]:
+    """Flattened per-leaf index of the 'batch' (slot) axis of the decode
+    state, in tree_flatten leaf order."""
+    axes_leaves = jax.tree_util.tree_flatten(
+        api.state_axes(cfg), is_leaf=lambda x: isinstance(x, tuple))[0]
+    return [ax.index("batch") for ax in axes_leaves]
+
+
+def insert_slot(state, slot_state, slot, batch_axes: list[int]):
+    """Write a batch-1 prefill state into row `slot` of the slot array.
+
+    `slot` may be a traced scalar (the closure jits once and serves any
+    slot). `batch_axes` comes from `state_batch_axes(cfg)` (static).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    new_leaves = jax.tree_util.tree_flatten(slot_state)[0]
+    assert len(leaves) == len(new_leaves) == len(batch_axes)
+    out = []
+    for leaf, new, b in zip(leaves, new_leaves, batch_axes):
+        assert new.shape[b] == 1, (new.shape, b)
+        start = [jnp.asarray(0, jnp.int32)] * leaf.ndim
+        start[b] = jnp.asarray(slot, jnp.int32)
+        out.append(jax.lax.dynamic_update_slice(
+            leaf, new.astype(leaf.dtype), tuple(start)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def permute_slots(state, perm, batch_axes: list[int]):
+    """Gather slot rows: new_state[i] = state[perm[i]] along each leaf's
+    batch axis (defrag compaction)."""
+    perm = jnp.asarray(perm, jnp.int32)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    out = [jnp.take(leaf, perm, axis=b)
+           for leaf, b in zip(leaves, batch_axes)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,119 @@
+"""Serving metrics: per-request latency/TTFT and per-step tier counters.
+
+The scheduler feeds this with explicit timestamps (a `clock()` float,
+wall time in the live driver, a virtual clock in tests), so the module
+is deterministic under test. `summary()` flattens everything into a
+plain dict of floats/ints that the benchmarks serialize as
+BENCH_serve.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    uid: object
+    arrival: float
+    admitted: float | None = None
+    first_token: float | None = None
+    finished: float | None = None
+    prompt_tokens: int = 0
+    generated_tokens: int = 0
+    admit_tier: str = ""
+
+    @property
+    def ttft(self) -> float | None:
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrival
+
+    @property
+    def latency(self) -> float | None:
+        if self.finished is None:
+            return None
+        return self.finished - self.arrival
+
+
+class ServeMetrics:
+    """Aggregates the continuous-batching scheduler's counters."""
+
+    def __init__(self):
+        self.requests: dict[object, RequestRecord] = {}
+        self.steps = 0
+        self.tier_steps: dict[str, int] = {}
+        self.tier_tokens: dict[str, int] = {}
+        self.queue_depth_samples: list[int] = []
+        self.active_samples: list[int] = []
+        self.tier_switches = 0
+        self._last_tier: str | None = None
+
+    # -- request lifecycle -------------------------------------------------
+
+    def on_submit(self, uid, now: float, prompt_tokens: int):
+        self.requests[uid] = RequestRecord(
+            uid=uid, arrival=now, prompt_tokens=prompt_tokens)
+
+    def on_admit(self, uid, now: float, tier: str):
+        rec = self.requests[uid]
+        rec.admitted = now
+        rec.admit_tier = tier
+
+    def on_first_token(self, uid, now: float):
+        rec = self.requests[uid]
+        if rec.first_token is None:
+            rec.first_token = now
+
+    def on_finish(self, uid, now: float, generated_tokens: int):
+        rec = self.requests[uid]
+        rec.finished = now
+        rec.generated_tokens = generated_tokens
+
+    # -- per-step counters -------------------------------------------------
+
+    def on_step(self, tier: str, *, new_tokens: int, active: int,
+                queue_depth: int):
+        self.steps += 1
+        self.tier_steps[tier] = self.tier_steps.get(tier, 0) + 1
+        self.tier_tokens[tier] = self.tier_tokens.get(tier, 0) + new_tokens
+        self.queue_depth_samples.append(queue_depth)
+        self.active_samples.append(active)
+        if self._last_tier is not None and tier != self._last_tier:
+            self.tier_switches += 1
+        self._last_tier = tier
+
+    # -- aggregation -------------------------------------------------------
+
+    def summary(self) -> dict:
+        done = [r for r in self.requests.values() if r.finished is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        lats = [r.latency for r in done]
+        gen = sum(r.generated_tokens for r in done)
+        span = 0.0
+        if done:
+            t0 = min(r.arrival for r in done)
+            t1 = max(r.finished for r in done)
+            span = max(t1 - t0, 1e-9)
+        total_steps = max(self.steps, 1)
+        return {
+            "requests_submitted": len(self.requests),
+            "requests_completed": len(done),
+            "generated_tokens": gen,
+            "throughput_tok_s": gen / span if done else 0.0,
+            "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "max_ttft_s": max(ttfts) if ttfts else 0.0,
+            "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
+            "scheduler_steps": self.steps,
+            "tier_switches": self.tier_switches,
+            "mean_queue_depth": (sum(self.queue_depth_samples)
+                                 / len(self.queue_depth_samples)
+                                 if self.queue_depth_samples else 0.0),
+            "max_queue_depth": max(self.queue_depth_samples, default=0),
+            "mean_active_slots": (sum(self.active_samples)
+                                  / len(self.active_samples)
+                                  if self.active_samples else 0.0),
+            "tier_occupancy": {t: n / total_steps
+                               for t, n in sorted(self.tier_steps.items())},
+            "tier_tokens": dict(sorted(self.tier_tokens.items())),
+        }

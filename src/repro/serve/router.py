@@ -1,0 +1,144 @@
+"""Elastic-precision routing: load -> served precision tier.
+
+The MatQuant deployment story (paper §5.4) stores ONE int8 parent
+checkpoint; any sliced precision of it is a valid model. That turns
+precision into a runtime knob: when the request queue grows past what
+the current tier can drain, the router downgrades (int8 -> int4 ->
+Mix'n'Match ~3.x -> int2), trading quality for ~2x decode-arithmetic
+savings per step down; when load subsides it recovers toward int8.
+
+Downgrades apply immediately (load spikes need an immediate response);
+upgrades require the measured load to sit below the lower tier's
+threshold for `cooldown` consecutive observations (hysteresis, so the
+scheduler does not thrash across a threshold).
+
+`TierCache` owns the parent params and materializes each tier's sliced
+weights on first use via `materialize_served_params` /
+`materialize_packed_params`; afterwards a switch is a dict lookup
+(O(1)), so the scheduler can flip tiers between two decode steps. All
+tiers share the same pytree structure and dtypes, so the jitted decode
+step never recompiles on a switch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import mixnmatch
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionTier:
+    """A servable precision of the parent checkpoint.
+
+    bits: int (uniform slice) or a per-layer tuple (Mix'n'Match).
+    """
+    name: str
+    bits: int | tuple[int, ...]
+
+    @property
+    def effective_bits(self) -> float:
+        if isinstance(self.bits, int):
+            return float(self.bits)
+        return mixnmatch.effective_bits(self.bits)
+
+
+def default_tiers(num_layers: int) -> tuple[PrecisionTier, ...]:
+    """int8 -> int4 -> Mix'n'Match ~3.3 -> int2, best quality first."""
+    mnm = tuple(mixnmatch.assign(num_layers, 3.3, "pyramid"))
+    return (
+        PrecisionTier("int8", 8),
+        PrecisionTier("int4", 4),
+        PrecisionTier(f"mixnmatch{mixnmatch.effective_bits(mnm):.1f}", mnm),
+        PrecisionTier("int2", 2),
+    )
+
+
+class ElasticPrecisionRouter:
+    """Maps a scalar load signal to a tier index with hysteresis.
+
+    thresholds[i] is the load above which tier i is insufficient: with
+    tiers (int8, int4, mnm, int2) and thresholds (4, 8, 16), load <= 4
+    serves int8, 4 < load <= 8 serves int4, ..., load > 16 serves int2.
+    The load signal the scheduler feeds is queue depth + a backlog term
+    (queued prompt tokens / slot capacity), so both many small requests
+    and few huge ones push precision down.
+    """
+
+    def __init__(self, tiers, thresholds=None, cooldown: int = 4):
+        self.tiers = tuple(tiers)
+        if thresholds is None:
+            thresholds = tuple(4 * 2**i for i in range(len(self.tiers) - 1))
+        assert len(thresholds) == len(self.tiers) - 1
+        assert list(thresholds) == sorted(thresholds)
+        self.thresholds = tuple(float(t) for t in thresholds)
+        self.cooldown = cooldown
+        self.index = 0                 # serving tiers[0] (best quality)
+        self._calm_steps = 0
+
+    @property
+    def tier(self) -> PrecisionTier:
+        return self.tiers[self.index]
+
+    def reset(self):
+        self.index = 0
+        self._calm_steps = 0
+
+    def desired_index(self, load: float) -> int:
+        for i, thr in enumerate(self.thresholds):
+            if load <= thr:
+                return i
+        return len(self.tiers) - 1
+
+    def observe(self, load: float) -> PrecisionTier:
+        """Feed one load measurement; returns the tier to serve NOW."""
+        desired = self.desired_index(load)
+        if desired > self.index:               # overload: drop immediately
+            self.index = desired
+            self._calm_steps = 0
+        elif desired < self.index:             # calm: recover with hysteresis
+            self._calm_steps += 1
+            if self._calm_steps >= self.cooldown:
+                self.index -= 1                # one tier at a time
+                self._calm_steps = 0
+        else:
+            self._calm_steps = 0
+        return self.tiers[self.index]
+
+
+class TierCache:
+    """Lazily materialized served params per tier, keyed by tier name.
+
+    packed=True routes through materialize_packed_params (TPU kernel
+    consumable planes; uniform-int tiers only) instead of the
+    dequantized-weights path.
+    """
+
+    def __init__(self, parent_params, cfg, *, extra_precision: bool = False,
+                 packed: bool = False):
+        from repro.serve import engine as _engine   # avoid import cycle
+        self._engine = _engine
+        self.parent_params = parent_params
+        self.cfg = cfg
+        self.extra_precision = extra_precision
+        self.packed = packed
+        self._cache: dict[str, object] = {}
+
+    def get(self, tier: PrecisionTier):
+        if tier.name not in self._cache:
+            bits = tier.bits if isinstance(tier.bits, int) else list(tier.bits)
+            if self.packed:
+                if not isinstance(bits, int):
+                    raise ValueError(
+                        "packed serving needs uniform integer bits; "
+                        f"tier {tier.name} is per-layer")
+                self._cache[tier.name] = self._engine.materialize_packed_params(
+                    self.parent_params, self.cfg, bits)
+            else:
+                self._cache[tier.name] = self._engine.materialize_served_params(
+                    self.parent_params, self.cfg, bits, self.extra_precision)
+        return self._cache[tier.name]
+
+    @property
+    def materialized(self) -> list[str]:
+        return sorted(self._cache)

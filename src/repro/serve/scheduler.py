@@ -1,0 +1,355 @@
+"""Continuous-batching scheduler with elastic-precision serving.
+
+Requests arrive at any time, are queued, and are admitted into free
+rows ("slots") of a fixed-shape decode state the moment capacity frees
+up; finished requests release their slot mid-flight so the next queued
+request starts immediately instead of waiting for the whole batch.
+
+The loop per `step()`:
+
+  1. ROUTE -- feed the router a load signal (queue depth + queued-token
+     backlog); if it picks a different precision tier, swap the served
+     params from the tier cache (O(1) after first materialization; all
+     tiers share one pytree structure, so the jitted step never
+     recompiles).
+  2. ADMIT -- pop queued requests while the page pool can seat them;
+     each admission right-pads the prompt to a static bucket length and
+     runs the jitted prefill-into-slot (writes the prompt's KV into the
+     slot's rows, returns the first generated token).
+  3. DECODE -- one jitted `decode_step_slots` over the FULL slot array
+     with a per-slot position vector. Shapes are static; inactive slots
+     compute garbage that is ignored host-side (active-mask
+     bookkeeping), and their rows are fully overwritten at the next
+     admission.
+  4. EVICT -- requests hitting EOS or max_new_tokens free their slot and
+     pages; metrics record TTFT / latency / per-tier counters.
+
+Single-batch equivalence: with every request admitted at step 0 at the
+same prompt length and a fixed tier, the per-slot math is identical to
+the legacy fixed-batch `Engine.generate` loop (same prefill, same
+per-position decode attention), so outputs are token-identical for
+batch-independent families (dense/vlm; MoE couples rows through expert
+capacity).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.serve import kv_cache
+from repro.serve.metrics import ServeMetrics
+from repro.serve.router import ElasticPrecisionRouter, TierCache
+
+_MIN_BUCKET = 8
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Static prompt pad length: next power of two, clamped to cap."""
+    b = _MIN_BUCKET
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request."""
+    uid: object
+    prompt: np.ndarray                  # (S,) int32 token ids
+    max_new_tokens: int
+    eos_id: int | None = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size > 0 and self.max_new_tokens > 0
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    generated: list[int]
+    last_token: int
+
+
+def poisson_trace(cfg, *, requests: int, prompt_len: int, gen_tokens: int,
+                  rate: float, seed: int = 0):
+    """Synthetic open-loop workload: (offset_seconds, Request) pairs with
+    exponential inter-arrivals, shared by the serve driver and the
+    throughput benchmark so both replay the same trace."""
+    from repro.data import DataConfig, SyntheticCorpus
+    corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=prompt_len, seed=123))
+    prompts = np.asarray(corpus.batch(0, requests, prompt_len)["tokens"])
+    rng = np.random.default_rng(seed)
+    offsets = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+    return [(float(t), Request(uid=i, prompt=prompts[i],
+                               max_new_tokens=gen_tokens))
+            for i, t in enumerate(offsets)]
+
+
+class ContinuousBatchingScheduler:
+    """Slot-array continuous batching over one model's decode state.
+
+    params: served params for the fixed tier, OR None with `router` +
+      `tier_cache` set for elastic-precision serving.
+    num_slots: decode batch dimension (concurrent requests).
+    max_len: token capacity per slot (prompt + generation); rounded up
+      to whole pages.
+    total_pages: optional global page budget (overcommit; see PagePool).
+    clock: float-returning time source (injectable for tests).
+    """
+
+    def __init__(self, params, cfg, *, num_slots: int = 8,
+                 max_len: int = 128, page_size: int = 16,
+                 total_pages: int | None = None,
+                 router: ElasticPrecisionRouter | None = None,
+                 tier_cache: TierCache | None = None,
+                 clock=time.perf_counter):
+        if cfg.family not in ("dense", "vlm", "moe"):
+            raise NotImplementedError(
+                f"continuous batching needs an attention KV cache; "
+                f"family {cfg.family!r} is not slot-addressable")
+        if cfg.family == "moe":
+            warnings.warn(
+                "continuous batching over a MoE family: slot rows share "
+                "expert-capacity buckets, so garbage tokens in free slots "
+                "can perturb active requests' routing unless "
+                "capacity_factor is high enough to avoid drops",
+                stacklevel=2)
+        if router is not None:
+            if tier_cache is None:
+                raise ValueError("router requires a tier_cache")
+            if cfg.quant.packed_bits:
+                raise ValueError(
+                    "elastic tiers over packed planes would need one "
+                    "compiled step per packed bitwidth; serve packed "
+                    "checkpoints at a fixed tier")
+        self.cfg = cfg
+        self.clock = clock
+        self.router = router
+        self.tier_cache = tier_cache
+        self.metrics = ServeMetrics()
+        self.pool = kv_cache.PagePool(
+            num_slots, page_size,
+            pages_per_slot=-(-max_len // page_size), total_pages=total_pages)
+        self.capacity = self.pool.slot_capacity
+        self.num_slots = num_slots
+        if router is not None:
+            self.tier = router.tier
+            self.params = tier_cache.get(self.tier)
+        else:
+            assert params is not None
+            self.tier = None
+            self.params = params
+        self.state = api.init_state(cfg, num_slots, self.capacity)
+        self.pos = np.zeros((num_slots,), np.int32)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.active: dict[int, _Active] = {}
+        self.results: dict[object, np.ndarray] = {}
+        self._batch_axes = kv_cache.state_batch_axes(cfg)
+        capacity, batch_axes = self.capacity, self._batch_axes
+
+        def prefill(p, st, toks, slot, length):
+            logits, slot_state = api.prefill(
+                p, {"tokens": toks}, cfg, bits=None, max_len=capacity,
+                last_pos=length)
+            st = kv_cache.insert_slot(st, slot_state, slot, batch_axes)
+            return jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32), st
+
+        # jit retraces once per padded prompt-bucket shape
+        self._prefill_fn = jax.jit(prefill)
+
+        def decode(p, st, tok, pos):
+            logits, st = api.decode_step_slots(p, st, tok, pos, cfg, bits=None)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
+
+        self._decode_fn = jax.jit(decode)
+
+    def reset(self):
+        """Clear all requests/bookkeeping but keep the compiled closures.
+
+        Slot rows need no zeroing: every admission overwrites its whole
+        row via prefill-into-slot.
+        """
+        pool = self.pool
+        self.pool = kv_cache.PagePool(pool.num_slots, pool.page_size,
+                                      pages_per_slot=pool.pages_per_slot,
+                                      total_pages=pool.total_pages)
+        self.pos[:] = 0
+        self.queue.clear()
+        self.active.clear()
+        self.results = {}
+        self.metrics = ServeMetrics()
+        if self.router is not None:
+            self.router.reset()
+            self.tier = self.router.tier
+            self.params = self.tier_cache.get(self.tier)
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, req: Request, now: float | None = None):
+        total = req.prompt.size + req.max_new_tokens
+        if total > self.capacity:
+            raise ValueError(
+                f"request {req.uid!r} needs {total} tokens; slot capacity "
+                f"is {self.capacity} (raise max_len)")
+        if self.pool.pages_for(total) > self.pool.total_pages:
+            raise ValueError(
+                f"request {req.uid!r} needs {self.pool.pages_for(total)} "
+                f"pages; the pool budget is {self.pool.total_pages} -- it "
+                f"could never be admitted")
+        now = self.clock() if now is None else now
+        self.metrics.on_submit(req.uid, now, req.prompt.size)
+        self.queue.append(req)
+
+    # -- scheduling loop ---------------------------------------------------
+
+    @property
+    def tier_name(self) -> str:
+        return self.tier.name if self.tier is not None else "fixed"
+
+    def load_signal(self) -> float:
+        backlog = sum(r.prompt.size + r.max_new_tokens for r in self.queue)
+        return len(self.queue) + backlog / self.capacity
+
+    def _route(self):
+        if self.router is None:
+            return
+        tier = self.router.observe(self.load_signal())
+        if tier.name != self.tier.name:
+            self.tier = tier
+            self.params = self.tier_cache.get(tier)
+
+    def _admit(self, now: float) -> int:
+        admitted = 0
+        while self.queue:
+            req = self.queue[0]
+            total = req.prompt.size + req.max_new_tokens
+            slot = self.pool.allocate(req.uid, total)
+            if slot is None:
+                break
+            self.queue.popleft()
+            plen = req.prompt.size
+            P = _bucket(plen, self.capacity)
+            toks = np.zeros((1, P), np.int32)
+            toks[0, :plen] = req.prompt
+            tok, self.state = self._prefill_fn(
+                self.params, self.state, jnp.asarray(toks),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(plen, jnp.int32))
+            tok = int(tok)                      # forces the computation
+            t_tok = self.clock()
+            self.pos[slot] = plen
+            self.active[slot] = _Active(req=req, generated=[tok], last_token=tok)
+            self.pool.grow(slot, plen + 1)
+            self.metrics.on_admit(req.uid, now, self.tier_name)
+            self.metrics.on_first_token(req.uid, t_tok)
+            admitted += 1
+            if req.max_new_tokens == 1 or tok == req.eos_id:
+                self._finish(slot, t_tok)
+        return admitted
+
+    def _finish(self, slot: int, now: float):
+        act = self.active.pop(slot)
+        self.pool.free(slot)
+        self.pos[slot] = 0
+        self.results[act.req.uid] = np.asarray(act.generated, np.int32)
+        self.metrics.on_finish(act.req.uid, now, len(act.generated))
+
+    def step(self, now: float | None = None) -> bool:
+        """One scheduler iteration; returns True if any work was done."""
+        now = self.clock() if now is None else now
+        self._route()
+        admitted = self._admit(now)
+        decoded = 0
+        if self.active:
+            toks = np.zeros((self.num_slots, 1), np.int32)
+            for slot, act in self.active.items():
+                toks[slot, 0] = act.last_token
+            next_toks, self.state = self._decode_fn(
+                self.params, self.state, jnp.asarray(toks),
+                jnp.asarray(self.pos))
+            next_toks = np.asarray(next_toks)   # forces the computation
+            t_tok = self.clock()
+            for slot in list(self.active):
+                act = self.active[slot]
+                tok = int(next_toks[slot])
+                act.generated.append(tok)
+                act.last_token = tok
+                self.pos[slot] += 1
+                self.pool.grow(slot, self.pos[slot] + 1)
+                decoded += 1
+                if (len(act.generated) >= act.req.max_new_tokens
+                        or tok == act.req.eos_id):
+                    self._finish(slot, t_tok)
+        if admitted or decoded:
+            self.metrics.on_step(
+                self.tier_name, new_tokens=admitted + decoded,
+                active=len(self.active), queue_depth=len(self.queue))
+        return bool(admitted or decoded)
+
+    def defrag(self):
+        """Compact live slots into a dense prefix (permutes slot rows)."""
+        perm, moves = self.pool.defrag()
+        if all(moves[old] == old for old in moves):
+            return moves
+        self.state = kv_cache.permute_slots(self.state, perm, self._batch_axes)
+        self.pos = self.pos[np.asarray(perm)]
+        self.active = {moves[old]: act for old, act in self.active.items()}
+        return moves
+
+    # -- drivers -----------------------------------------------------------
+
+    def run_until_idle(self, max_steps: int = 100_000):
+        """Drain queue + active requests; returns results dict."""
+        steps = 0
+        while self.queue or self.active:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("scheduler did not drain")
+        return self.results
+
+    def run_trace(self, trace, max_steps: int = 1_000_000):
+        """Replay an arrival trace of (offset_seconds, Request) pairs.
+
+        Offsets are relative to the replay start; requests become
+        visible once the wall clock passes their offset (open-loop
+        arrivals). Returns the results dict.
+        """
+        trace = sorted(trace, key=lambda it: it[0])
+        t0 = self.clock()
+        i = 0
+        steps = 0
+        virtual = False      # set once a sleep fails to advance the clock
+        while i < len(trace) or self.queue or self.active:
+            now = self.clock()
+            while i < len(trace) and t0 + trace[i][0] <= now:
+                # stamp the TRACE arrival time, not the poll time, so
+                # TTFT includes queueing delay accrued inside a step
+                self.submit(trace[i][1], now=t0 + trace[i][0])
+                i += 1
+            if not self.step() and i < len(trace):
+                # idle gap before the next arrival: sleep up to it
+                wait = t0 + trace[i][0] - self.clock()
+                if wait > 0:
+                    if not virtual:
+                        time.sleep(min(wait, 0.05))
+                        virtual = self.clock() <= now
+                    if virtual:
+                        # non-advancing clock: offsets cannot be honored;
+                        # fast-forward the next arrival to "now" (keeps
+                        # TTFT/latency non-negative)
+                        self.submit(trace[i][1], now=self.clock())
+                        i += 1
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("trace replay did not drain")
+        return self.results

@@ -1,0 +1,337 @@
+"""Continuous-batching serving subsystem tests.
+
+Covers the acceptance surface of the scheduler: single-batch token
+identity with the legacy engine loop, admit/evict under a scripted
+arrival trace, KV-slot reuse after eviction, elastic-precision
+downgrade/recovery, page-pool accounting + defrag, the packed-path
+wiring, and the ragged-M kernel guard.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve import (ContinuousBatchingScheduler, ElasticPrecisionRouter,
+                         Engine, PagePool, Request, ServeConfig, TierCache,
+                         default_tiers)
+from repro.serve import engine as engine_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+class FakeClock:
+    """Manually advanced time source for deterministic scheduling tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen3_1_7b").reduced()
+    params = api.init(KEY, cfg)
+    eng = Engine(params, cfg, ServeConfig(bits=4, max_len=32, num_slots=2,
+                                          page_size=8))
+    return params, cfg, eng
+
+
+def _prompts(cfg, B, S, seed=1):
+    return jax.random.randint(jax.random.fold_in(KEY, seed), (B, S), 0,
+                              cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# token identity with the legacy path
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_single_batch_token_identical(served):
+    _, cfg, eng = served
+    prompts = _prompts(cfg, 3, 16)
+    legacy = np.asarray(eng.generate_legacy(prompts, 8))
+    sched = np.asarray(eng.generate(prompts, 8))   # facade -> scheduler
+    np.testing.assert_array_equal(legacy, sched)
+
+
+def test_prefill_bucket_padding_is_exact(served):
+    """Prompt lengths off the bucket grid (12 -> padded 16) still match."""
+    _, cfg, eng = served
+    prompts = _prompts(cfg, 2, 12, seed=7)
+    legacy = np.asarray(eng.generate_legacy(prompts, 6))
+    sched = np.asarray(eng.generate(prompts, 6))
+    np.testing.assert_array_equal(legacy, sched)
+
+
+# ---------------------------------------------------------------------------
+# admit / evict / slot reuse
+# ---------------------------------------------------------------------------
+
+
+def test_admit_evict_and_slot_reuse(served):
+    params, cfg, eng = served
+    clock = FakeClock()
+    sched = eng.scheduler(num_slots=2, max_len=32, clock=clock)
+    rng = np.random.default_rng(0)
+    prompts = {f"r{i}": rng.integers(0, cfg.vocab_size, size=8)
+               for i in range(5)}
+    mnt = {"r0": 3, "r1": 6, "r2": 3, "r3": 3, "r4": 3}
+    for uid, p in prompts.items():
+        sched.submit(Request(uid=uid, prompt=p, max_new_tokens=mnt[uid]))
+    assert len(sched.queue) == 5
+
+    clock.t = 1.0
+    sched.step()
+    # two slots -> r0, r1 admitted; the rest wait
+    assert sorted(a.req.uid for a in sched.active.values()) == ["r0", "r1"]
+    assert len(sched.queue) == 3
+
+    clock.t = 2.0
+    sched.step()  # r0 (max_new=2) finished last step or this one; r2 reuses
+    while "r0" not in sched.results:
+        clock.t += 1.0
+        sched.step()
+    clock.t += 1.0
+    sched.step()           # admission runs at the start of the next step
+    freed_uids = [a.req.uid for a in sched.active.values()]
+    assert "r2" in freed_uids or "r2" in sched.results  # admitted after evict
+    slots_of_r2 = [s for s, a in sched.active.items() if a.req.uid == "r2"]
+    if slots_of_r2:
+        assert slots_of_r2[0] == 0      # lowest freed slot is reused
+
+    while sched.queue or sched.active:
+        clock.t += 1.0
+        sched.step()
+    assert sorted(sched.results) == sorted(prompts)
+    assert sched.pool.active_slots == [] and sched.pool.used_pages == 0
+    for uid in prompts:
+        assert len(sched.results[uid]) == mnt[uid]
+    # metrics recorded the full lifecycle under the fake clock
+    s = sched.metrics.summary()
+    assert s["requests_completed"] == 5
+    assert s["mean_ttft_s"] >= 0.0 and s["max_queue_depth"] >= 3
+
+
+def test_reused_slot_is_clean(served):
+    """Tokens of a request admitted into a freed slot match an isolated
+    run -- no KV leakage from the slot's previous occupant."""
+    _, cfg, eng = served
+    sched = eng.scheduler(num_slots=1, max_len=32)
+    rng = np.random.default_rng(3)
+    p0 = rng.integers(0, cfg.vocab_size, size=16)
+    p1 = rng.integers(0, cfg.vocab_size, size=16)
+    sched.submit(Request(uid="a", prompt=p0, max_new_tokens=5))
+    sched.submit(Request(uid="b", prompt=p1, max_new_tokens=5))
+    res = sched.run_until_idle()
+    iso = np.asarray(eng.generate_legacy(jnp.asarray(p1[None]), 5))[0]
+    np.testing.assert_array_equal(res["b"], iso)
+
+
+def test_defrag_compacts_and_preserves_outputs(served):
+    _, cfg, eng = served
+    sched = eng.scheduler(num_slots=3, max_len=32)
+    rng = np.random.default_rng(5)
+    ps = [rng.integers(0, cfg.vocab_size, size=8) for _ in range(3)]
+    sched.submit(Request(uid=0, prompt=ps[0], max_new_tokens=2))
+    sched.submit(Request(uid=1, prompt=ps[1], max_new_tokens=10))
+    sched.submit(Request(uid=2, prompt=ps[2], max_new_tokens=10))
+    sched.step()
+    while 0 not in sched.results:
+        sched.step()
+    assert sched.pool.active_slots == [1, 2]     # hole at slot 0
+    moves = sched.defrag()
+    assert moves == {1: 0, 2: 1}
+    assert sched.pool.active_slots == [0, 1]
+    res = sched.run_until_idle()
+    for uid in (1, 2):
+        iso = np.asarray(eng.generate_legacy(
+            jnp.asarray(ps[uid][None]), 10))[0]
+        np.testing.assert_array_equal(res[uid], iso)
+
+
+# ---------------------------------------------------------------------------
+# elastic precision router
+# ---------------------------------------------------------------------------
+
+
+def test_router_downgrades_then_recovers():
+    tiers = default_tiers(2)
+    r = ElasticPrecisionRouter(tiers, thresholds=(2, 6, 12), cooldown=2)
+    assert r.tier.name == "int8"
+    assert r.observe(20.0).name == "int2"          # overload: immediate drop
+    assert r.observe(20.0).name == "int2"
+    # calm load: recover one tier per `cooldown` observations
+    names = [r.observe(0.0).name for _ in range(6)]
+    assert names == ["int2", tiers[2].name, tiers[2].name, "int4",
+                     "int4", "int8"]
+    # hysteresis: a single calm step does not upgrade
+    r2 = ElasticPrecisionRouter(tiers, thresholds=(2, 6, 12), cooldown=3)
+    r2.observe(8.0)
+    assert r2.tier.name == tiers[2].name
+    r2.observe(1.0)
+    r2.observe(5.0)                                # load back over tier-1 thr
+    assert r2.tier.name == tiers[2].name
+
+
+def test_elastic_scheduler_downgrades_under_load(served):
+    params, cfg, _ = served
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=2,
+                                          page_size=8))
+    sched = eng.scheduler(elastic=True, thresholds=(1, 3, 6), cooldown=2)
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        sched.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                             max_new_tokens=4))
+    sched.run_until_idle()
+    occ = sched.metrics.summary()["tier_occupancy"]
+    assert "int2" in occ                     # deep queue hit the lowest tier
+    assert len(sched.results) == 10
+    assert sched.tier.name != "int2" or sched.router.index != 3
+    # after the drain the router has begun recovering toward int8
+    for _ in range(8):
+        sched.router.observe(0.0)
+    assert sched.router.tier.name == "int8"
+    # tier params are cached: switching back is a dict lookup
+    assert set(sched.tier_cache.materialized) >= {"int8", "int2"}
+
+
+def test_tier_cache_materializes_once(served):
+    params, cfg, _ = served
+    cache = TierCache(params, cfg)
+    t = default_tiers(cfg.num_layers)[1]
+    a = cache.get(t)
+    assert cache.get(t) is a
+
+
+# ---------------------------------------------------------------------------
+# page pool
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_accounting():
+    pool = PagePool(num_slots=3, page_size=8, pages_per_slot=4,
+                    total_pages=8)                 # overcommitted budget
+    assert pool.slot_capacity == 32
+    s0 = pool.allocate("a", 20)                    # 3 pages
+    s1 = pool.allocate("b", 33)                    # > pages_per_slot
+    assert s0 == 0 and s1 is None
+    s2 = pool.allocate("c", 40)
+    assert s2 is None                              # still too big
+    s3 = pool.allocate("d", 30)                    # 4 pages -> 7/8 used
+    assert s3 == 1 and pool.free_pages == 1
+    assert pool.allocate("e", 9) is None           # 2 pages > 1 free
+    assert pool.allocate("f", 8) == 2              # exactly 1 page
+    assert pool.free_pages == 0
+    pool.free(0)
+    assert pool.free_pages == 3 and pool.free_slots == [0]
+    assert pool.allocate("g", 24) == 0             # slot + pages reused
+
+
+def test_page_pool_defrag():
+    pool = PagePool(num_slots=4, page_size=8, pages_per_slot=2)
+    for uid in "abcd":
+        pool.allocate(uid, 8)
+    pool.free(0)
+    pool.free(2)
+    perm, moves = pool.defrag()
+    assert perm[:2] == [1, 3] and sorted(perm) == [0, 1, 2, 3]
+    assert moves == {1: 0, 3: 1}
+    assert pool.active_slots == [0, 1]
+    assert pool.owner(0) == "b" and pool.owner(1) == "d"
+
+
+# ---------------------------------------------------------------------------
+# packed-path wiring (ServeConfig.use_packed)
+# ---------------------------------------------------------------------------
+
+
+def test_use_packed_falls_back_off_tpu(served, monkeypatch):
+    params, cfg, _ = served
+    monkeypatch.setattr(engine_mod, "_packed_backend_ok", lambda: False)
+    with pytest.warns(UserWarning, match="no TPU backend"):
+        eng = Engine(params, cfg, ServeConfig(bits=4, max_len=24,
+                                              use_packed=True))
+    assert not eng.packed
+    assert eng.cfg.quant.packed_bits == 0          # dequantized path served
+
+
+def test_use_packed_routes_through_packed_planes(served, monkeypatch):
+    params, cfg, _ = served
+    monkeypatch.setattr(engine_mod, "_packed_backend_ok", lambda: True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")             # no fallback warning
+        eng = Engine(params, cfg, ServeConfig(bits=4, max_len=24,
+                                              use_packed=True))
+    assert eng.packed and eng.cfg.quant.packed_bits == 4
+    # scoped dense projections became packed planes
+    w = eng.params["layers"]["ffn"]["up"]["w"]
+    assert set(w) == {"words", "alpha", "beta"}
+    # generate/score run through the packed qlinear path and agree with
+    # the dequantized engine
+    ref = Engine(params, cfg, ServeConfig(bits=4, max_len=24))
+    prompts = _prompts(cfg, 2, 8, seed=9)
+    out = np.asarray(eng.generate(prompts, 4))
+    assert out.shape == (2, 4)
+    labels = _prompts(cfg, 2, 8, seed=10)
+    assert abs(eng.score(prompts, labels) - ref.score(prompts, labels)) < 1e-2
+
+
+def test_use_packed_rejects_mixnmatch_bits(served, monkeypatch):
+    params, cfg, _ = served
+    monkeypatch.setattr(engine_mod, "_packed_backend_ok", lambda: True)
+    with pytest.warns(UserWarning, match="uniform integer bits"):
+        eng = Engine(params, cfg, ServeConfig(bits=[8, 4], max_len=24,
+                                              use_packed=True))
+    assert not eng.packed
+
+
+# ---------------------------------------------------------------------------
+# ragged-M kernel guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M", [1, 9, 130])
+def test_quant_matmul_ragged_m(M):
+    from repro.core import packing, quant
+    from repro.kernels.quant_matmul import quant_matmul_pallas
+    K, N, bits = 128, 128, 4
+    w = jax.random.normal(jax.random.fold_in(KEY, M), (K, N))
+    q, alpha, z = quant.quantize(np.asarray(w, np.float32), 8, axis=0)
+    codes = quant.sliced_codes(q, 8, bits)
+    words = packing.pack_codes(codes, bits, axis=0)
+    scale = jnp.asarray(2 ** (8 - bits), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, M + 1), (M, K))
+    y = quant_matmul_pallas(x, words, alpha * scale, alpha * z, bits=bits,
+                            block_m=128, block_n=128, block_k=128,
+                            interpret=True)
+    w_hat = alpha * scale * codes - alpha * z
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w_hat),
+                               rtol=1e-4, atol=1e-4)
+    # K/N raggedness is still rejected
+    with pytest.raises(AssertionError):
+        quant_matmul_pallas(x, words[:, :100], alpha[:, :100] * scale,
+                            (alpha * z)[:, :100], bits=bits, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# score jit-cache
+# ---------------------------------------------------------------------------
+
+
+def test_score_is_jit_cached(served):
+    _, cfg, eng = served
+    toks = _prompts(cfg, 2, 8, seed=20)
+    labels = _prompts(cfg, 2, 8, seed=21)
+    a = eng.score(toks, labels)
+    b = eng.score(toks, labels)
+    assert a == b
+    # same-shape second call hits the jit cache (no retrace)
+    assert eng._score_logits._cache_size() == 1
