@@ -4,10 +4,13 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test bench-serve lint
+.PHONY: test test-fast bench-serve lint
 
 test:
 	python -m pytest -x -q
+
+test-fast:
+	python -m pytest -x -q -m "not slow"
 
 bench-serve:
 	python benchmarks/serve_throughput.py --reduced --out BENCH_serve.json

@@ -6,11 +6,16 @@ TTFT, queue behavior, and per-tier occupancy -- the serving-side
 counterpart of the paper-table quality benchmarks, so each PR's
 scheduler changes show up as numbers.
 
-Two runs are reported side by side on the SAME trace:
+Runs reported side by side on the SAME trace:
 
-  * elastic  -- router downgrades int8 -> int4 -> Mix'n'Match -> int2
-    as the queue builds, recovers as it drains;
-  * fixed    -- int8 only (the quality-maximal baseline).
+  * elastic        -- router downgrades int8 -> int4 -> Mix'n'Match ->
+    int2 as the queue builds, recovers as it drains (dequantized tiers);
+  * fixed          -- int8 only (the quality-maximal baseline);
+  * packed A/B     -- the same elastic replay twice, once over PACKED
+    r-bit tier planes and once over dequantized tiers, with measured
+    per-tier HBM weight bytes (`packed_nbytes`, halving per downgrade
+    step int8 -> int4 -> int2) and tok/s -- the paper's Section 5.4
+    bytes claim as a reported number instead of an assertion.
 
   PYTHONPATH=src python benchmarks/serve_throughput.py --reduced
 """
@@ -23,7 +28,6 @@ import os
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import api
@@ -31,24 +35,52 @@ from repro.serve import Engine, Request, ServeConfig
 from repro.serve.scheduler import poisson_trace
 
 
-def run_once(engine, cfg, args, *, elastic: bool):
-    sched = engine.scheduler(elastic=elastic,
-                             thresholds=args.thresholds, cooldown=args.cooldown)
+def tier_bytes(sched) -> dict:
+    """Measured per-tier weight footprint from the scheduler's cache."""
+    out = {}
+    for tier in sched.router.tiers:
+        e = sched.tier_cache.get(tier)
+        out[tier.name] = {"packed_bits": e.packed_bits,
+                          "packed_nbytes": e.packed_nbytes,
+                          "weight_nbytes": e.weight_nbytes}
+    return out
+
+
+def run_once(engine, cfg, args, *, elastic: bool, packed: bool | None = None):
+    sched = engine.scheduler(elastic=elastic, thresholds=args.thresholds,
+                             cooldown=args.cooldown, packed=packed)
     trace = poisson_trace(cfg, requests=args.requests,
                           prompt_len=args.prompt_len,
                           gen_tokens=args.gen_tokens,
                           rate=args.arrival_rate, seed=args.seed)
-    # warm the jitted prefill/decode closures (and, for elastic, the
-    # tier materializations) so the replay measures steady-state serving
-    for tier_warm in range(4 if elastic else 1):
+    # warm the jitted prefill/decode closures (one per packed bitwidth
+    # for packed tiers; one prefill trace per admission-burst row
+    # bucket) and the tier materializations so the replay measures
+    # steady-state serving. Row buckets are powers of two up to AND
+    # covering num_slots (a 5-admission burst on 6 slots pads to 8
+    # rows, so that shape needs warming too).
+    row_buckets = [1]
+    while row_buckets[-1] < args.num_slots:
+        row_buckets.append(row_buckets[-1] * 2)
+    if elastic:
+        # pin the router: warm bursts would otherwise raise the load
+        # signal and re-route mid-warm, leaving some (bitwidth, rows)
+        # closure shapes cold and compiling inside the timed replay
+        saved = (sched.router.thresholds, sched.router.cooldown)
+        sched.router.thresholds = (float("inf"),) * len(saved[0])
+        sched.router.cooldown = 10**9
+    for tier_warm in range(len(sched.router.tiers) if elastic else 1):
         if elastic:
             sched.router.index = tier_warm
-            sched.tier = sched.router.tier
-            sched.params = sched.tier_cache.get(sched.tier)
-        sched.submit(Request(uid=f"_warm{tier_warm}",
-                             prompt=trace[0][1].prompt,
-                             max_new_tokens=2))
-        sched.run_until_idle()
+            sched._set_tier(sched.router.tier)
+        for rows in row_buckets:
+            for j in range(min(rows, args.num_slots)):
+                sched.submit(Request(uid=f"_warm{tier_warm}_{rows}_{j}",
+                                     prompt=trace[0][1].prompt,
+                                     max_new_tokens=2))
+            sched.run_until_idle()
+    if elastic:
+        sched.router.thresholds, sched.router.cooldown = saved
     sched.reset()
     t0 = time.perf_counter()
     results = sched.run_trace(trace)
@@ -56,7 +88,9 @@ def run_once(engine, cfg, args, *, elastic: bool):
     assert len(results) == args.requests, (len(results), args.requests)
     summary = sched.metrics.summary()
     summary["wall_s"] = wall
-    return summary
+    summary["prefill_calls"] = sched.prefill_calls
+    per_tier = tier_bytes(sched) if elastic else None
+    return summary, per_tier
 
 
 def main(argv=None):
@@ -73,6 +107,8 @@ def main(argv=None):
     ap.add_argument("--thresholds", type=float, nargs="*", default=(2, 6, 12))
     ap.add_argument("--cooldown", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-packed-ab", action="store_true",
+                    help="skip the packed-vs-dequant elastic A/B replay")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -86,11 +122,27 @@ def main(argv=None):
 
     print(f"== elastic tiers, {args.requests} Poisson arrivals "
           f"@ {args.arrival_rate}/s ==")
-    elastic = run_once(engine, cfg, args, elastic=True)
+    elastic, elastic_tiers = run_once(engine, cfg, args, elastic=True)
     print(json.dumps(elastic, indent=2))
     print("== fixed int8, same trace ==")
-    fixed = run_once(engine, cfg, args, elastic=False)
+    fixed, _ = run_once(engine, cfg, args, elastic=False)
     print(json.dumps(fixed, indent=2))
+
+    packed_ab = None
+    if not args.skip_packed_ab:
+        print("== packed-vs-dequant elastic A/B, same trace ==")
+        packed, packed_tiers = run_once(engine, cfg, args, elastic=True,
+                                        packed=True)
+        packed_ab = {
+            "packed": {"summary": packed, "per_tier": packed_tiers,
+                       "throughput_tok_s": packed["throughput_tok_s"]},
+            "dequant": {"summary": elastic, "per_tier": elastic_tiers,
+                        "throughput_tok_s": elastic["throughput_tok_s"]},
+        }
+        for name, info in packed_tiers.items():
+            print(f"  tier {name:16s} packed_bits={info['packed_bits']} "
+                  f"packed_nbytes={info['packed_nbytes']:,d} "
+                  f"weight_nbytes={info['weight_nbytes']:,d}")
 
     report = {
         "bench": "serve_throughput",
@@ -102,6 +154,7 @@ def main(argv=None):
         "num_slots": args.num_slots,
         "elastic": elastic,
         "fixed_int8": fixed,
+        "packed_ab": packed_ab,
         # headline numbers (the acceptance-criterion fields)
         "throughput_tok_s": elastic["throughput_tok_s"],
         "mean_ttft_s": elastic["mean_ttft_s"],

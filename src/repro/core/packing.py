@@ -71,23 +71,37 @@ class PackedLinear:
     (alpha, z). Slicing to a lower precision happens at load time
     (`materialize`) producing the r-bit packed plane the kernel consumes;
     this is exactly the deployment flow of Section 5.4.
+
+    Weights may carry leading (e.g. stacked-layer) dims; the trailing two
+    are always (k, n) and quantization groups run along k. `pack_axis`
+    selects which of the two the codes pack along: -2 (the default, the
+    reduction dim the Pallas kernel DMAs) or -1 (down/wo-type projections
+    whose packed plane must keep its reduction dim shardable under TP).
     """
 
-    words: jax.Array        # packed parent codes, int32, packed along k
-    alpha: jax.Array        # (1, n) scale
-    zero: jax.Array         # (1, n) zero point
+    words: jax.Array        # packed parent codes, int32
+    alpha: jax.Array        # (..., 1, n) scale
+    zero: jax.Array         # (..., 1, n) zero point
     k: int                  # logical reduction dim
     n: int                  # output dim
     parent_bits: int = 8
+    pack_axis: int = -2     # axis the codes are packed along
 
     @classmethod
-    def from_weights(cls, w: jax.Array, parent_bits: int = 8):
+    def from_weights(cls, w: jax.Array, parent_bits: int = 8,
+                     pack_axis: int = -2):
         from repro.core import quant
 
-        q, alpha, z = quant.quantize(w, parent_bits, axis=0)
-        words = pack_codes(q, parent_bits, axis=0)
+        q, alpha, z = quant.quantize(w, parent_bits, axis=-2)
+        words = pack_codes(q, parent_bits, axis=pack_axis)
         return cls(words=words, alpha=alpha, zero=z,
-                   k=w.shape[0], n=w.shape[1], parent_bits=parent_bits)
+                   k=w.shape[-2], n=w.shape[-1], parent_bits=parent_bits,
+                   pack_axis=pack_axis)
+
+    @property
+    def _packed_len(self) -> int:
+        """Logical (unpacked) length of the packed axis."""
+        return self.k if self.pack_axis in (-2, self.words.ndim - 2) else self.n
 
     def materialize(self, bits: int, extra_precision: bool = False):
         """Slice the parent to `bits` and re-pack for serving.
@@ -100,7 +114,8 @@ class PackedLinear:
         from repro.core import quant
 
         c = self.parent_bits
-        parent = unpack_codes(self.words, c, self.k, axis=0)
+        parent = unpack_codes(self.words, c, self._packed_len,
+                              axis=self.pack_axis)
         codes = quant.sliced_codes(parent, c, bits, extra_precision=extra_precision)
         scale = jnp.asarray(2 ** (c - bits), self.alpha.dtype)
         alpha_r = self.alpha * scale
@@ -109,12 +124,12 @@ class PackedLinear:
             overflow = (codes >= 2**bits).astype(jnp.int32)
             base = jnp.minimum(codes, 2**bits - 1)
             return (
-                pack_codes(base, bits, axis=0),
+                pack_codes(base, bits, axis=self.pack_axis),
                 alpha_r,
                 beta_r,
-                pack_codes(overflow, 1, axis=0),
+                pack_codes(overflow, 1, axis=self.pack_axis),
             )
-        return pack_codes(codes, bits, axis=0), alpha_r, beta_r
+        return pack_codes(codes, bits, axis=self.pack_axis), alpha_r, beta_r
 
 
 def packed_nbytes(k: int, n: int, bits: int) -> int:

@@ -44,6 +44,10 @@ class QuantConfig:
         with the ground-truth term).
       group_axis: axis treated as the quantization group (per output
         channel = -1 for a (d_in, d_out) kernel quantized column-wise).
+      packed_bits: serve path -- weights stored as packed r-bit codes.
+      packed_kernel: route packed planes through the Pallas dequant
+        matmul (kernels.ops.plane_matmul) instead of the jnp unpack
+        twin; set on TPU (or with interpret mode for kernel tests).
     """
 
     bitwidths: tuple[int, ...] = (8, 4, 2)
@@ -56,6 +60,7 @@ class QuantConfig:
     codistill_alpha: float = 1.0
     group_axis: int = 0
     packed_bits: int = 0     # serve path: weights stored as packed codes
+    packed_kernel: bool = False   # consume packed planes via the Pallas kernel
 
     def __post_init__(self):
         if len(self.weights) != len(self.bitwidths):

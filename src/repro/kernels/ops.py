@@ -93,6 +93,37 @@ def fused_quantize(w, *, bitwidths, parent_bits=8, extra_precision=False,
     return outs
 
 
+def plane_matmul(x, plane, *, bits: int, use_kernel: bool = False,
+                 interpret: bool | None = None):
+    """Bits-static entry point for a packed plane {'words','alpha','beta'}.
+
+    The serving integration point: `models.common.qlinear` hands every
+    packed weight plane here with the tier's bitwidth as a static int.
+    K-packed planes route to the Pallas dequant-matmul kernel when
+    `use_kernel` (TPU, or interpret mode elsewhere) and the plane tiles
+    exactly; N-packed planes (down/wo projections, packed along the
+    output dim so their reduction dim stays shardable) and non-tiling
+    shapes take the jnp unpack twin -- identical math, so the two paths
+    are interchangeable per-plane.
+
+    x: (..., K); returns (..., N) in x.dtype (no bias).
+    """
+    words, alpha, beta = plane["words"], plane["alpha"], plane["beta"]
+    K, N = x.shape[-1], alpha.shape[-1]
+    cpw = packing.codes_per_word(bits)
+    packed_k = words.shape[-2] != K        # else packed along N (down-type)
+    if (use_kernel and packed_k and words.ndim == 2
+            and words.shape[-2] * cpw == K):
+        return quant_matmul(x, words, alpha, beta, bits=bits,
+                            interpret=interpret)
+    if packed_k:
+        codes = packing.unpack_codes(words, bits, K, axis=-2)
+    else:
+        codes = packing.unpack_codes(words, bits, N, axis=-1)
+    w_hat = (alpha * codes.astype(jnp.float32) - beta).astype(x.dtype)
+    return x @ w_hat
+
+
 def serve_linear(x, packed: packing.PackedLinear, bits: int,
                  extra_precision: bool = False, interpret: bool | None = None):
     """End-to-end packed serving linear: slice parent -> kernel matmul."""
@@ -105,4 +136,5 @@ def serve_linear(x, packed: packing.PackedLinear, bits: int,
     return quant_matmul(x, words, alpha, beta, bits=bits, interpret=interpret)
 
 
-__all__ = ["quant_matmul", "fused_quantize", "serve_linear", "ref"]
+__all__ = ["quant_matmul", "plane_matmul", "fused_quantize", "serve_linear",
+           "ref"]

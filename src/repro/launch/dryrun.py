@@ -196,6 +196,8 @@ def run_cell(arch, shape_name, *, multi_pod=False, layers=None, unroll=False,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # JAX <= 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
     result = {

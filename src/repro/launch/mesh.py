@@ -3,25 +3,21 @@ never touches jax device state)."""
 
 from __future__ import annotations
 
-import jax
+from repro.runtime.sharding import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds the 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Whatever-is-available mesh for tests/examples (elastic): uses all
     local devices, model_parallel innermost."""
+    import jax
+
     n = len(jax.devices())
     assert n % model_parallel == 0, (n, model_parallel)
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // model_parallel, model_parallel), ("data", "model"))

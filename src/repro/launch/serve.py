@@ -72,7 +72,10 @@ def main(argv=None):
                     help="effective-bits budget; overrides --bits")
     ap.add_argument("--extra-precision", action="store_true")
     ap.add_argument("--packed", action="store_true",
-                    help="serve packed r-bit planes (TPU Pallas path)")
+                    help="serve packed r-bit planes (Pallas kernel on TPU, "
+                         "jnp twin elsewhere); with --elastic, every "
+                         "uniform-int tier becomes a packed plane so a "
+                         "downgrade cuts HBM weight bytes 2x per step")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=16)
@@ -109,13 +112,16 @@ def main(argv=None):
         print("first continuations:", out[:2].tolist())
         return out
 
-    sched = engine.scheduler(elastic=args.elastic)
+    sched = engine.scheduler(elastic=args.elastic,
+                             packed=args.packed if args.elastic else None)
     trace = build_trace(args, cfg)
     print(f"replaying {len(trace)} Poisson arrivals "
           f"(rate {args.arrival_rate}/s) through "
           f"{sched.num_slots} slots x {sched.capacity} tokens"
           + (" with elastic precision" if args.elastic else
-             f" at fixed tier bits={engine.serve_cfg.bits}"))
+             f" at fixed tier bits={engine.serve_cfg.bits}")
+          + (" over packed tier planes" if args.elastic and args.packed
+             else ""))
     results = sched.run_trace(trace)
     summary = sched.metrics.summary()
     print(json.dumps(summary, indent=2))

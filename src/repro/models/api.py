@@ -51,6 +51,12 @@ def state_axes(cfg):
 
 
 def prefill(params, batch, cfg, *, bits=None, max_len=None, last_pos=None):
+    """Prompt processing -> (last-position logits, decode state).
+
+    `last_pos` may be a scalar (one real length for the whole batch) or
+    a (B,) vector (per-row lengths -- the scheduler's bucketed batched
+    admission); see lm.prefill. Attention families only.
+    """
     if cfg.family == "encdec":
         if last_pos is not None:
             raise NotImplementedError("last_pos gather for encdec prefill")

@@ -126,22 +126,16 @@ def qlinear(p, x, *, bits, qcfg: QuantConfig, kind: str = "ffn"):
 
     x: (..., d_in); returns (..., d_out) in x.dtype. If `p` holds a
     PACKED plane ({'words', 'alpha', 'beta'}, from
-    serve.engine.materialize_packed_params), the weights are expanded
-    from r-bit codes after the (much smaller) HBM read -- the jnp twin
-    of kernels/quant_matmul; on TPU the Pallas kernel takes this path.
+    serve.engine.materialize_packed_params), it routes through
+    kernels.ops.plane_matmul with the tier's bitwidth static: the Pallas
+    dequant-matmul kernel when qcfg.packed_kernel (TPU / interpret
+    tests), else its jnp unpack twin -- identical math either way.
     """
     pw = p.get("w")
     if isinstance(pw, dict) and "words" in pw:
-        from repro.core import packing as _packing
-        r = qcfg.packed_bits
-        K, N = x.shape[-1], pw["alpha"].shape[-1]
-        if pw["words"].shape[-2] == K:       # packed along N (down-type)
-            codes = _packing.unpack_codes(pw["words"], r, N, axis=-1)
-        else:                                # packed along K
-            codes = _packing.unpack_codes(pw["words"], r, K, axis=-2)
-        w_hat = (pw["alpha"] * codes.astype(jnp.float32)
-                 - pw["beta"]).astype(x.dtype)
-        y = x @ w_hat
+        from repro.kernels import ops as _ops
+        y = _ops.plane_matmul(x, pw, bits=qcfg.packed_bits,
+                              use_kernel=qcfg.packed_kernel)
         return y if p.get("b") is None else y + p["b"].astype(y.dtype)
     w = pw
     b = p.get("b")

@@ -464,9 +464,12 @@ def prefill(params, tokens, cfg, *, bits=None, max_len=None,
     projected k/v of the forward pass (padded to max_len); for SSM
     families the final recurrent state is returned.
 
-    `last_pos` (scalar, may be traced): position count of the REAL
-    prompt when `tokens` is right-padded to a static bucket; logits are
-    gathered at index last_pos - 1 instead of -1. Under causal attention
+    `last_pos` (may be traced): position count of the REAL prompt when
+    `tokens` is right-padded to a static bucket; logits are gathered at
+    index last_pos - 1 instead of -1. A scalar applies one length to the
+    whole batch; a (B,) vector gathers per row -- the batched-admission
+    path, where one prefill call seats several requests of different
+    prompt lengths padded to the same bucket. Under causal attention
     right-padding is exact -- pad positions never influence logits at
     earlier positions, and their (garbage) KV rows are overwritten by
     decode steps before ever entering an attention window. Recurrent
@@ -488,7 +491,9 @@ def prefill(params, tokens, cfg, *, bits=None, max_len=None,
         if last_pos is None:
             return h[:, -1:]
         idx = jnp.asarray(last_pos, jnp.int32) - 1
-        return jax.lax.dynamic_slice_in_dim(h, idx, 1, axis=1)
+        if idx.ndim == 0:
+            return jax.lax.dynamic_slice_in_dim(h, idx, 1, axis=1)
+        return jnp.take_along_axis(h, idx[:, None, None], axis=1)
 
     def pad_cache(k):
         if max_len == S:

@@ -15,6 +15,37 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+# ---------------------------------------------------------------------------
+# Version-compat shims. JAX >= 0.5 grew `jax.sharding.AxisType` (explicit
+# sharding meshes) and promoted `shard_map` out of jax.experimental; 0.4.x
+# (this container ships 0.4.37) has neither. All mesh construction and
+# shard_map use in this repo goes through these two names so the code runs
+# on both sides of the API change.
+# ---------------------------------------------------------------------------
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None):
+    """`jax.make_mesh` with version-tolerant `axis_types`.
+
+    On JAX >= 0.5 the mesh is built with explicit axis types (defaulting
+    every axis to `AxisType.Auto`, the GSPMD-propagated behavior this
+    repo relies on). On 0.4.x, where `jax.sharding.AxisType` does not
+    exist and meshes are always auto-sharded, the kwarg is omitted.
+    """
+    axis_type_cls = getattr(jax.sharding, "AxisType", None)
+    if axis_type_cls is None:
+        return jax.make_mesh(axis_shapes, axis_names)
+    if axis_types is None:
+        axis_types = (axis_type_cls.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+
+
+if hasattr(jax, "shard_map"):           # JAX >= 0.5
+    shard_map = jax.shard_map
+else:                                    # 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
 # logical name -> ordered candidates; each candidate is a tuple of mesh
 # axes (a multi-axis candidate shards one dim over several mesh axes).
 RULES: dict[str, list[tuple[str, ...]]] = {

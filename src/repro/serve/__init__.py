@@ -1,9 +1,11 @@
 from repro.serve.engine import (Engine, ServeConfig,  # noqa: F401
+                                build_packed_parent,
                                 materialize_packed_params,
-                                materialize_served_params)
+                                materialize_served_params,
+                                served_weight_nbytes)
 from repro.serve.kv_cache import PagePool  # noqa: F401
 from repro.serve.metrics import ServeMetrics  # noqa: F401
 from repro.serve.router import (ElasticPrecisionRouter, PrecisionTier,  # noqa: F401
-                                TierCache, default_tiers)
+                                TierCache, TierEntry, default_tiers)
 from repro.serve.scheduler import (ContinuousBatchingScheduler,  # noqa: F401
                                    Request)

@@ -26,8 +26,13 @@ Serving architecture
     and the jit-friendly insert/permute state surgery.
   * serve/router.py -- elastic-precision policy: queue depth + token
     backlog pick the served tier (int8 -> int4 -> Mix'n'Match -> int2),
-    re-materialized via the functions below and cached per tier so a
-    switch between two decode steps is a dict lookup.
+    re-materialized via the functions below and cached per tier
+    (TierEntry) so a switch between two decode steps is a dict lookup.
+    With TierCache(packed=True), uniform-int tiers are PACKED r-bit
+    planes sliced from one pre-packed parent (build_packed_parent),
+    so a downgrade swaps the plane the kernel reads -- measured HBM
+    weight bytes drop 2x per step -- and the scheduler compiles one
+    step per packed bitwidth.
   * serve/metrics.py -- TTFT / latency / throughput / tier-occupancy
     counters the benchmarks serialize.
 
@@ -123,42 +128,61 @@ def materialize_served_params(params, cfg, bits, extra_precision: bool | None = 
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def materialize_packed_params(params, cfg, bits: int):
-    """Replace quantized weights with PACKED r-bit planes.
+def build_packed_parent(params, cfg):
+    """Pack the int8 PARENT codes of every scoped projection once.
 
-    Each scoped 'w' leaf becomes {'words': int32 packed codes (along the
-    reduction dim), 'alpha', 'beta'}: w_hat = alpha * code - beta. The
-    int8 parent is quantized per-output-channel, sliced to `bits`, and
-    packed -- HBM weight bytes drop 16/bits x vs bf16. Consumed by
-    common.qlinear (jnp path) or kernels.quant_matmul (TPU).
-    Dense/VLM/encdec projections only (MoE expert stacks keep the
-    fake-quant path; their dispatch dominates serving cost anyway).
+    Returns {key-path str: core.packing.PackedLinear}. This is the
+    stored artifact of the paper's deployment story (Section 5.4): one
+    packed c-bit parent per plane, from which `materialize_packed_params`
+    slices any r <= c tier via `PackedLinear.materialize` -- a cheap
+    unpack/slice/re-pack instead of a re-quantization of the float
+    checkpoint per tier. Dense/VLM/encdec projections only (MoE expert
+    stacks keep the fake-quant path; their dispatch dominates serving
+    cost anyway).
     """
+    from repro.core import packing
     qcfg = cfg.quant
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    out = []
-    for path, leaf in flat:
+    parent = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         kind = quantized_leaf_kind(path)
         scoped = kind == "ffn" or (kind == "attn" and "attn" in qcfg.scope)
         names = _path_names(path)
         if not scoped or "moe" in names or leaf.ndim > 3:
-            out.append(leaf)
             continue
-        w32 = leaf.astype(jnp.float32)
-        q, alpha, z = quant.quantize(w32, qcfg.parent_bits, axis=-2)
-        codes = quant.sliced_codes(q, qcfg.parent_bits, bits)
-        scale = jnp.asarray(2 ** (qcfg.parent_bits - bits), jnp.float32)
-        from repro.core import packing
         # down-type projections (out dim = residual 'embed') pack along N
         # so the packed plane stays sharded on its reduction dim under
         # TP; everything else packs along K and shards the out dim.
         proj = names[-2] if len(names) >= 2 else ""
         pack_axis = -1 if proj in ("down", "wo") else -2
-        out.append({
-            "words": packing.pack_codes(codes, bits, axis=pack_axis),
-            "alpha": alpha * scale,
-            "beta": alpha * z,
-        })
+        parent[jax.tree_util.keystr(path)] = packing.PackedLinear.from_weights(
+            leaf.astype(jnp.float32), qcfg.parent_bits, pack_axis=pack_axis)
+    return parent
+
+
+def materialize_packed_params(params, cfg, bits: int, parent=None):
+    """Replace quantized weights with PACKED r-bit planes.
+
+    Each scoped 'w' leaf becomes {'words': int32 packed codes (along the
+    reduction dim), 'alpha', 'beta'}: w_hat = alpha * code - beta. The
+    int8 parent is quantized per-output-channel, sliced to `bits` via
+    `PackedLinear.materialize`, and re-packed -- HBM weight bytes drop
+    16/bits x vs bf16. Consumed by kernels.ops.plane_matmul (the Pallas
+    kernel on TPU, its jnp twin elsewhere) through common.qlinear.
+
+    `parent` (from `build_packed_parent`) reuses pre-packed parent
+    codes across tiers; by default it is built on the fly.
+    """
+    if parent is None:
+        parent = build_packed_parent(params, cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pl = parent.get(jax.tree_util.keystr(path))
+        if pl is None:
+            out.append(leaf)
+            continue
+        words, alpha_r, beta_r = pl.materialize(bits)
+        out.append({"words": words, "alpha": alpha_r, "beta": beta_r})
 
     # rebuild by mutating a container-copied tree by key-path (leaf
     # structure changes, so tree_unflatten can't be used directly)
@@ -172,6 +196,35 @@ def materialize_packed_params(params, cfg, bits: int):
     for (path, _), new_leaf in zip(flat, out):
         set_path(base, path, new_leaf)
     return base
+
+
+def served_weight_nbytes(params, cfg) -> tuple[int, int]:
+    """(plane_bytes, total_bytes) of the served quantized weights.
+
+    plane_bytes counts only the sliced code planes -- packed int32
+    words, or the full dequantized 'w' arrays on the fallback path --
+    i.e. the term that shrinks 2x per packed tier step (int8 -> int4 ->
+    int2). total_bytes adds the per-channel alpha/beta scales, which are
+    tier-independent. Both are the HBM weight traffic of one decode
+    step, the quantity the elastic downgrade is supposed to cut.
+    """
+    qcfg = cfg.quant
+    plane = total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        names = _path_names(path)
+        if (len(names) >= 2 and names[-2] == "w"
+                and names[-1] in ("words", "alpha", "beta")):
+            nb = leaf.size * leaf.dtype.itemsize
+            total += nb
+            if names[-1] == "words":
+                plane += nb
+            continue
+        kind = quantized_leaf_kind(path)
+        if kind == "ffn" or (kind == "attn" and "attn" in qcfg.scope):
+            nb = leaf.size * leaf.dtype.itemsize
+            plane += nb
+            total += nb
+    return plane, total
 
 
 def _deep_copy_containers(tree):
@@ -260,7 +313,10 @@ class Engine:
         self.packed = use_packed
         if use_packed:
             cfg = cfg.replace(quant=dataclasses.replace(
-                cfg.quant, packed_bits=serve_cfg.bits))
+                cfg.quant, packed_bits=serve_cfg.bits,
+                # the Pallas kernel itself only pays off where it
+                # compiles; elsewhere packed planes run the jnp twin
+                packed_kernel=jax.default_backend() == "tpu"))
             self.params = materialize_packed_params(params, cfg, serve_cfg.bits)
         else:
             self.params = materialize_served_params(
@@ -283,12 +339,20 @@ class Engine:
     def scheduler(self, *, num_slots: int | None = None,
                   max_len: int | None = None, elastic: bool = False,
                   tiers=None, thresholds=None, cooldown: int = 4,
-                  total_pages: int | None = None, clock=None):
+                  total_pages: int | None = None, clock=None,
+                  packed: bool | None = None):
         """Build a ContinuousBatchingScheduler over this engine's model.
 
         elastic=True serves load-adaptive precision from the parent
         checkpoint (router + per-tier cache); otherwise the scheduler
         serves this engine's fixed tier (packed or dequantized).
+
+        `packed` (elastic only; defaults to this engine's use_packed
+        resolution) materializes uniform-int tiers as packed r-bit
+        planes -- a router downgrade then swaps the plane the kernel
+        reads, cutting HBM weight bytes 2x per step, with one compiled
+        prefill/decode closure per bitwidth. Mix'n'Match tiers fall back
+        to dequantized weights behind the same TierCache.get interface.
         """
         from repro.serve import router as router_mod
         from repro.serve import scheduler as sched_mod
@@ -301,25 +365,33 @@ class Engine:
         if clock is not None:
             kw["clock"] = clock
         if elastic:
-            if self.packed:
-                raise ValueError("elastic tiers are served from dequantized "
-                                 "weights; disable use_packed")
             if self._parent_params is None:
                 raise ValueError("elastic tiers re-materialize from the "
                                  "parent checkpoint, which this engine was "
                                  "built without (keep_parent=False)")
+            packed = self.packed if packed is None else packed
+            if packed and self.serve_cfg.extra_precision:
+                raise ValueError("packed elastic tiers do not support "
+                                 "extra_precision")
             tiers = tiers or router_mod.default_tiers(self.cfg.num_layers)
             cache = router_mod.TierCache(
                 self._parent_params, self.cfg,
-                extra_precision=self.serve_cfg.extra_precision)
+                extra_precision=self.serve_cfg.extra_precision,
+                packed=packed)
             own = self.serve_cfg.bits
             own = tuple(own) if isinstance(own, (list, tuple)) else own
             for tier in tiers:
                 # this engine's fixed tier is already materialized --
                 # seed the cache instead of re-quantizing a second copy
+                # (only when the stored representation matches what the
+                # cache would build for that tier)
                 tb = tier.bits if isinstance(tier.bits, int) else tuple(tier.bits)
-                if tb == own:
-                    cache._cache[tier.name] = self.params
+                if tb != own:
+                    continue
+                tier_packed = packed and isinstance(tier.bits, int)
+                if tier_packed == self.packed:
+                    cache.seed(tier, self.params,
+                               packed_bits=own if self.packed else None)
             return sched_mod.ContinuousBatchingScheduler(
                 None, self.cfg,
                 router=router_mod.ElasticPrecisionRouter(
@@ -349,10 +421,10 @@ class Engine:
         through the batch (MoE expert capacity) or need per-request
         extras keep the legacy fixed-batch loop.
 
-        Admission prefills one request at a time (as an arrival stream
-        would), so large fixed batches pay B prefill launches where
-        `generate_legacy` pays one batched call; prefer generate_legacy
-        when throughput on big offline batches is the only goal.
+        The whole batch is admitted in one step, so admission costs one
+        bucketed prefill per prompt-length bucket (a single call here,
+        where every prompt shares one length) -- same launch count as
+        `generate_legacy`, which remains the equivalence oracle.
         """
         if extras or self.cfg.family not in ("dense", "vlm"):
             return self.generate_legacy(prompts, num_tokens, extras)

@@ -21,11 +21,12 @@ Two layers live here:
     which keeps the active region contiguous for schedulers that lower
     several decode batch sizes.
 
-  * jit-friendly state surgery -- `insert_slot` writes a single-request
-    prefill state (batch == 1) into row `slot` of the big state;
-    `permute_slots` applies a defrag permutation. Both locate the batch
-    axis of every leaf from `api.state_axes(cfg)`, so they work for any
-    family whose state the scheduler supports.
+  * jit-friendly state surgery -- `insert_slots` scatters the prefill
+    states of a whole admission burst into their slot rows at once
+    (with dropped padding rows, so one jitted prefill seats many
+    requests); `permute_slots` applies a defrag permutation. Both
+    locate the batch axis of every leaf from `api.state_axes(cfg)`, so
+    they work for any family whose state the scheduler supports.
 """
 
 from __future__ import annotations
@@ -163,22 +164,25 @@ def state_batch_axes(cfg) -> list[int]:
     return [ax.index("batch") for ax in axes_leaves]
 
 
-def insert_slot(state, slot_state, slot, batch_axes: list[int]):
-    """Write a batch-1 prefill state into row `slot` of the slot array.
+def insert_slots(state, slot_state, slots, batch_axes: list[int]):
+    """Scatter a batch-m prefill state into rows `slots` of the slot array.
 
-    `slot` may be a traced scalar (the closure jits once and serves any
-    slot). `batch_axes` comes from `state_batch_axes(cfg)` (static).
+    One call seats a whole admission burst. `slots` is (m,) int32 and
+    may be traced; rows whose slot id falls outside the array (the
+    scheduler pads bursts to a static bucket with id == num_slots) are
+    DROPPED by the scatter, so padding never touches a live slot.
+    `batch_axes` comes from `state_batch_axes(cfg)` (static).
     """
+    slots = jnp.asarray(slots, jnp.int32)
     leaves, treedef = jax.tree_util.tree_flatten(state)
     new_leaves = jax.tree_util.tree_flatten(slot_state)[0]
     assert len(leaves) == len(new_leaves) == len(batch_axes)
     out = []
     for leaf, new, b in zip(leaves, new_leaves, batch_axes):
-        assert new.shape[b] == 1, (new.shape, b)
-        start = [jnp.asarray(0, jnp.int32)] * leaf.ndim
-        start[b] = jnp.asarray(slot, jnp.int32)
-        out.append(jax.lax.dynamic_update_slice(
-            leaf, new.astype(leaf.dtype), tuple(start)))
+        # scatter directly on the batch axis (no transposes: with the
+        # state buffer donated, this lowers to an in-place row write)
+        idx = (slice(None),) * b + (slots,)
+        out.append(leaf.at[idx].set(new.astype(leaf.dtype), mode="drop"))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -47,6 +47,7 @@ class ServeMetrics:
         self.queue_depth_samples: list[int] = []
         self.active_samples: list[int] = []
         self.tier_switches = 0
+        self.tier_weight_bytes: dict[str, dict] = {}
         self._last_tier: str | None = None
 
     # -- request lifecycle -------------------------------------------------
@@ -69,6 +70,17 @@ class ServeMetrics:
         rec = self.requests[uid]
         rec.finished = now
         rec.generated_tokens = generated_tokens
+
+    def on_tier_bytes(self, tier: str, *, packed_bits, packed_nbytes: int,
+                      weight_nbytes: int):
+        """Record the measured HBM weight footprint of a served tier
+        (fed by the scheduler on every tier activation, so the
+        downgrade -> fewer-weight-bytes claim is a reported number)."""
+        self.tier_weight_bytes[tier] = {
+            "packed_bits": packed_bits,
+            "packed_nbytes": int(packed_nbytes),
+            "weight_nbytes": int(weight_nbytes),
+        }
 
     # -- per-step counters -------------------------------------------------
 
@@ -116,4 +128,5 @@ class ServeMetrics:
             "tier_occupancy": {t: n / total_steps
                                for t, n in sorted(self.tier_steps.items())},
             "tier_tokens": dict(sorted(self.tier_tokens.items())),
+            "tier_weight_bytes": dict(sorted(self.tier_weight_bytes.items())),
         }

@@ -12,12 +12,26 @@ upgrades require the measured load to sit below the lower tier's
 threshold for `cooldown` consecutive observations (hysteresis, so the
 scheduler does not thrash across a threshold).
 
-`TierCache` owns the parent params and materializes each tier's sliced
-weights on first use via `materialize_served_params` /
-`materialize_packed_params`; afterwards a switch is a dict lookup
-(O(1)), so the scheduler can flip tiers between two decode steps. All
-tiers share the same pytree structure and dtypes, so the jitted decode
-step never recompiles on a switch.
+`TierCache` owns the parent params and materializes each tier's served
+weights on first use; afterwards a switch is a dict lookup (O(1)), so
+the scheduler can flip tiers between two decode steps. Two layouts:
+
+  * dequantized (packed=False): every tier shares one pytree structure
+    and dtype, so ONE jitted decode step serves all tiers with no
+    recompile on a switch.
+  * packed (packed=True): uniform-int tiers become packed r-bit planes
+    sliced from a single pre-packed int8 parent
+    (`engine.build_packed_parent` + `PackedLinear.materialize`) -- the
+    representation the Pallas kernel actually reads, so a downgrade
+    cuts HBM weight bytes 2x per step. Packed plane shapes depend on
+    the bitwidth, so the scheduler keeps one compiled step per packed
+    bitwidth (lazily warmed, cached by `TierEntry.packed_bits`);
+    Mix'n'Match tiers fall back to the dequantized layout behind the
+    same `get` interface.
+
+`get` returns a `TierEntry` carrying the params, the packed bitwidth
+(None on the dequantized path) and measured weight bytes, so the
+scheduler/benchmarks report the bytes claim instead of asserting it.
 """
 
 from __future__ import annotations
@@ -106,38 +120,77 @@ class ElasticPrecisionRouter:
         return self.tiers[self.index]
 
 
+@dataclasses.dataclass(frozen=True)
+class TierEntry:
+    """One materialized, servable tier.
+
+    packed_bits: the static bitwidth of the packed planes (selects the
+      scheduler's compiled closure), or None for the dequantized layout.
+    packed_nbytes: bytes of the sliced weight planes as served -- the
+      HBM weight traffic of one decode step, 2x smaller per packed tier
+      step down (int8 -> int4 -> int2).
+    weight_nbytes: packed_nbytes plus the tier-independent per-channel
+      scales (alpha/beta).
+    """
+    name: str
+    params: object = dataclasses.field(repr=False)
+    packed_bits: int | None = None
+    packed_nbytes: int = 0
+    weight_nbytes: int = 0
+
+
 class TierCache:
     """Lazily materialized served params per tier, keyed by tier name.
 
-    packed=True routes through materialize_packed_params (TPU kernel
-    consumable planes; uniform-int tiers only) instead of the
-    dequantized-weights path.
+    packed=True serves uniform-int tiers as packed r-bit planes sliced
+    from one pre-packed int8 parent (built once, on first use); per-layer
+    Mix'n'Match tiers fall back to dequantized weights behind the same
+    `get` interface. `get` returns a TierEntry.
     """
 
     def __init__(self, parent_params, cfg, *, extra_precision: bool = False,
                  packed: bool = False):
         from repro.serve import engine as _engine   # avoid import cycle
+        if packed and extra_precision:
+            raise ValueError("packed tier serving does not support "
+                             "extra_precision")
         self._engine = _engine
         self.parent_params = parent_params
         self.cfg = cfg
         self.extra_precision = extra_precision
         self.packed = packed
-        self._cache: dict[str, object] = {}
+        self._cache: dict[str, TierEntry] = {}
+        self._packed_parent = None      # {path: PackedLinear}, built once
 
-    def get(self, tier: PrecisionTier):
+    def _entry(self, tier: PrecisionTier, params, packed_bits):
+        plane, total = self._engine.served_weight_nbytes(params, self.cfg)
+        return TierEntry(name=tier.name, params=params,
+                         packed_bits=packed_bits,
+                         packed_nbytes=plane, weight_nbytes=total)
+
+    def get(self, tier: PrecisionTier) -> TierEntry:
         if tier.name not in self._cache:
-            bits = tier.bits if isinstance(tier.bits, int) else list(tier.bits)
-            if self.packed:
-                if not isinstance(bits, int):
-                    raise ValueError(
-                        "packed serving needs uniform integer bits; "
-                        f"tier {tier.name} is per-layer")
-                self._cache[tier.name] = self._engine.materialize_packed_params(
-                    self.parent_params, self.cfg, bits)
+            if self.packed and isinstance(tier.bits, int):
+                if self._packed_parent is None:
+                    self._packed_parent = self._engine.build_packed_parent(
+                        self.parent_params, self.cfg)
+                params = self._engine.materialize_packed_params(
+                    self.parent_params, self.cfg, tier.bits,
+                    parent=self._packed_parent)
+                packed_bits = tier.bits
             else:
-                self._cache[tier.name] = self._engine.materialize_served_params(
+                bits = (tier.bits if isinstance(tier.bits, int)
+                        else list(tier.bits))
+                params = self._engine.materialize_served_params(
                     self.parent_params, self.cfg, bits, self.extra_precision)
+                packed_bits = None
+            self._cache[tier.name] = self._entry(tier, params, packed_bits)
         return self._cache[tier.name]
+
+    def seed(self, tier: PrecisionTier, params, packed_bits: int | None = None):
+        """Adopt already-materialized served params for `tier` (e.g. the
+        engine's own fixed tier) instead of building a second copy."""
+        self._cache[tier.name] = self._entry(tier, params, packed_bits)
 
     @property
     def materialized(self) -> list[str]:

@@ -9,13 +9,20 @@ The loop per `step()`:
 
   1. ROUTE -- feed the router a load signal (queue depth + queued-token
      backlog); if it picks a different precision tier, swap the served
-     params from the tier cache (O(1) after first materialization; all
-     tiers share one pytree structure, so the jitted step never
-     recompiles).
-  2. ADMIT -- pop queued requests while the page pool can seat them;
-     each admission right-pads the prompt to a static bucket length and
-     runs the jitted prefill-into-slot (writes the prompt's KV into the
-     slot's rows, returns the first generated token).
+     params from the tier cache (O(1) after first materialization).
+     Dequantized tiers all share one pytree structure, so one jitted
+     step serves them without recompiling; PACKED tiers (TierEntry.
+     packed_bits set) swap the r-bit planes the kernel reads, and the
+     scheduler keeps one jitted prefill/decode closure per packed
+     bitwidth -- lazily compiled on the first visit, a dict lookup on
+     every revisit, so a downgrade also cuts HBM weight bytes instead
+     of only changing quality.
+  2. ADMIT -- pop queued requests while the page pool can seat them.
+     All same-step admissions are BATCHED: grouped by padded
+     prompt-length bucket, each bucket runs ONE jitted
+     prefill-into-slots call (per-row last_pos gathers, scatter-insert
+     with dropped padding rows), so a burst of N arrivals costs
+     #buckets prefill launches instead of N.
   3. DECODE -- one jitted `decode_step_slots` over the FULL slot array
      with a per-slot position vector. Shapes are static; inactive slots
      compute garbage that is ignored host-side (active-mask
@@ -24,12 +31,18 @@ The loop per `step()`:
   4. EVICT -- requests hitting EOS or max_new_tokens free their slot and
      pages; metrics record TTFT / latency / per-tier counters.
 
+Both jitted closures DONATE the slot-array state (`donate_argnums`), so
+prefill-insert and decode update the multi-megabyte KV buffers in place
+instead of allocating a fresh copy of the whole pytree per call -- the
+previous O(B)-copy admission bottleneck on bursty arrivals.
+
 Single-batch equivalence: with every request admitted at step 0 at the
 same prompt length and a fixed tier, the per-slot math is identical to
 the legacy fixed-batch `Engine.generate` loop (same prefill, same
 per-position decode attention), so outputs are token-identical for
 batch-independent families (dense/vlm; MoE couples rows through expert
-capacity).
+capacity -- for MoE, batched admission and padding rows can additionally
+perturb expert-capacity buckets, see the constructor warning).
 """
 
 from __future__ import annotations
@@ -57,6 +70,14 @@ def _bucket(n: int, cap: int) -> int:
     while b < n:
         b *= 2
     return min(b, cap)
+
+
+def _row_bucket(n: int) -> int:
+    """Static admission-burst row count: next power of two (from 1)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 @dataclasses.dataclass
@@ -99,7 +120,8 @@ class ContinuousBatchingScheduler:
     """Slot-array continuous batching over one model's decode state.
 
     params: served params for the fixed tier, OR None with `router` +
-      `tier_cache` set for elastic-precision serving.
+      `tier_cache` set for elastic-precision serving (dequantized or
+      packed tiers; see TierCache).
     num_slots: decode batch dimension (concurrent requests).
     max_len: token capacity per slot (prompt + generation); rounded up
       to whole pages.
@@ -121,17 +143,12 @@ class ContinuousBatchingScheduler:
             warnings.warn(
                 "continuous batching over a MoE family: slot rows share "
                 "expert-capacity buckets, so garbage tokens in free slots "
-                "can perturb active requests' routing unless "
-                "capacity_factor is high enough to avoid drops",
+                "(and padding rows of a batched admission) can perturb "
+                "active requests' routing unless capacity_factor is high "
+                "enough to avoid drops",
                 stacklevel=2)
-        if router is not None:
-            if tier_cache is None:
-                raise ValueError("router requires a tier_cache")
-            if cfg.quant.packed_bits:
-                raise ValueError(
-                    "elastic tiers over packed planes would need one "
-                    "compiled step per packed bitwidth; serve packed "
-                    "checkpoints at a fixed tier")
+        if router is not None and tier_cache is None:
+            raise ValueError("router requires a tier_cache")
         self.cfg = cfg
         self.clock = clock
         self.router = router
@@ -142,36 +159,81 @@ class ContinuousBatchingScheduler:
             pages_per_slot=-(-max_len // page_size), total_pages=total_pages)
         self.capacity = self.pool.slot_capacity
         self.num_slots = num_slots
+        # one (prefill, decode) jitted closure pair per served weight
+        # representation: key = packed bitwidth (int) or None for
+        # dequantized params. Lazily built, kept across reset().
+        self._fns: dict[int | None, dict] = {}
+        self.prefill_calls = 0          # jitted prefill launches (O(#buckets)
+                                        # per admission burst, not O(N))
         if router is not None:
-            self.tier = router.tier
-            self.params = tier_cache.get(self.tier)
+            self._set_tier(router.tier)
         else:
             assert params is not None
             self.tier = None
             self.params = params
+            self.packed_bits = cfg.quant.packed_bits or None
         self.state = api.init_state(cfg, num_slots, self.capacity)
         self.pos = np.zeros((num_slots,), np.int32)
         self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, _Active] = {}
         self.results: dict[object, np.ndarray] = {}
         self._batch_axes = kv_cache.state_batch_axes(cfg)
+
+    # -- per-representation compiled closures -------------------------------
+
+    def _step_fns(self, key: int | None) -> dict:
+        """(prefill, decode) jitted closures for one weight representation.
+
+        `key` is the packed bitwidth serving right now (None =
+        dequantized). The bitwidth is baked statically into the closure's
+        cfg (qlinear unpacks with it), so each packed tier gets its own
+        compile -- warmed on first visit, reused forever after; switching
+        back to an already-visited bitwidth never recompiles.
+        """
+        fns = self._fns.get(key)
+        if fns is not None:
+            return fns
+        cfg = self.cfg
+        if key:
+            qc = dataclasses.replace(
+                cfg.quant, packed_bits=key,
+                # the Pallas kernel where it compiles; jnp twin elsewhere
+                packed_kernel=(cfg.quant.packed_kernel
+                               or jax.default_backend() == "tpu"))
+        else:
+            qc = dataclasses.replace(cfg.quant, packed_bits=0)
+        cfg = cfg.replace(quant=qc)
         capacity, batch_axes = self.capacity, self._batch_axes
 
-        def prefill(p, st, toks, slot, length):
+        def prefill(p, st, toks, slots, lengths):
             logits, slot_state = api.prefill(
                 p, {"tokens": toks}, cfg, bits=None, max_len=capacity,
-                last_pos=length)
-            st = kv_cache.insert_slot(st, slot_state, slot, batch_axes)
-            return jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32), st
-
-        # jit retraces once per padded prompt-bucket shape
-        self._prefill_fn = jax.jit(prefill)
+                last_pos=lengths)
+            st = kv_cache.insert_slots(st, slot_state, slots, batch_axes)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
 
         def decode(p, st, tok, pos):
             logits, st = api.decode_step_slots(p, st, tok, pos, cfg, bits=None)
             return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
 
-        self._decode_fn = jax.jit(decode)
+        # donate the slot-array state: both closures overwrite it
+        # wholesale, so the KV buffers are updated in place instead of
+        # copied per call. prefill retraces once per (rows, prompt)
+        # bucket shape; decode compiles once per representation.
+        fns = {"prefill": jax.jit(prefill, donate_argnums=(1,)),
+               "decode": jax.jit(decode, donate_argnums=(1,))}
+        self._fns[key] = fns
+        return fns
+
+    def _set_tier(self, tier):
+        """Swap the served params to `tier` (cache lookup after first use)."""
+        entry = self.tier_cache.get(tier)
+        self.tier = tier
+        self.params = entry.params
+        self.packed_bits = entry.packed_bits
+        self.metrics.on_tier_bytes(tier.name, packed_bits=entry.packed_bits,
+                                   packed_nbytes=entry.packed_nbytes,
+                                   weight_nbytes=entry.weight_nbytes)
 
     def reset(self):
         """Clear all requests/bookkeeping but keep the compiled closures.
@@ -188,10 +250,10 @@ class ContinuousBatchingScheduler:
         self.active.clear()
         self.results = {}
         self.metrics = ServeMetrics()
+        self.prefill_calls = 0
         if self.router is not None:
             self.router.reset()
-            self.tier = self.router.tier
-            self.params = self.tier_cache.get(self.tier)
+            self._set_tier(self.router.tier)
 
     # -- request intake ----------------------------------------------------
 
@@ -225,11 +287,11 @@ class ContinuousBatchingScheduler:
             return
         tier = self.router.observe(self.load_signal())
         if tier.name != self.tier.name:
-            self.tier = tier
-            self.params = self.tier_cache.get(tier)
+            self._set_tier(tier)
 
     def _admit(self, now: float) -> int:
-        admitted = 0
+        # pop everything the pool can seat right now ...
+        picked: list[tuple[Request, int]] = []
         while self.queue:
             req = self.queue[0]
             total = req.prompt.size + req.max_new_tokens
@@ -237,24 +299,45 @@ class ContinuousBatchingScheduler:
             if slot is None:
                 break
             self.queue.popleft()
-            plen = req.prompt.size
-            P = _bucket(plen, self.capacity)
-            toks = np.zeros((1, P), np.int32)
-            toks[0, :plen] = req.prompt
-            tok, self.state = self._prefill_fn(
+            picked.append((req, slot))
+        if not picked:
+            return 0
+        # ... then seat the whole burst with ONE prefill per prompt
+        # bucket: rows padded to a static power-of-two count, padding
+        # rows targeting slot id == num_slots (dropped by the scatter).
+        prefill_fn = self._step_fns(self.packed_bits)["prefill"]
+        buckets: dict[int, list[tuple[Request, int]]] = {}
+        for req, slot in picked:
+            buckets.setdefault(_bucket(req.prompt.size, self.capacity),
+                               []).append((req, slot))
+        for P, group in sorted(buckets.items()):
+            rows = _row_bucket(len(group))
+            toks = np.zeros((rows, P), np.int32)
+            slots = np.full((rows,), self.num_slots, np.int32)
+            lengths = np.ones((rows,), np.int32)
+            for i, (req, slot) in enumerate(group):
+                plen = req.prompt.size
+                toks[i, :plen] = req.prompt
+                slots[i] = slot
+                lengths[i] = plen
+            first, self.state = prefill_fn(
                 self.params, self.state, jnp.asarray(toks),
-                jnp.asarray(slot, jnp.int32), jnp.asarray(plen, jnp.int32))
-            tok = int(tok)                      # forces the computation
+                jnp.asarray(slots), jnp.asarray(lengths))
+            self.prefill_calls += 1
+            first = np.asarray(first)           # forces the computation
             t_tok = self.clock()
-            self.pos[slot] = plen
-            self.active[slot] = _Active(req=req, generated=[tok], last_token=tok)
-            self.pool.grow(slot, plen + 1)
-            self.metrics.on_admit(req.uid, now, self.tier_name)
-            self.metrics.on_first_token(req.uid, t_tok)
-            admitted += 1
-            if req.max_new_tokens == 1 or tok == req.eos_id:
-                self._finish(slot, t_tok)
-        return admitted
+            for i, (req, slot) in enumerate(group):
+                tok = int(first[i])
+                plen = req.prompt.size
+                self.pos[slot] = plen
+                self.active[slot] = _Active(req=req, generated=[tok],
+                                            last_token=tok)
+                self.pool.grow(slot, plen + 1)
+                self.metrics.on_admit(req.uid, now, self.tier_name)
+                self.metrics.on_first_token(req.uid, t_tok)
+                if req.max_new_tokens == 1 or tok == req.eos_id:
+                    self._finish(slot, t_tok)
+        return len(picked)
 
     def _finish(self, slot: int, now: float):
         act = self.active.pop(slot)
@@ -273,7 +356,8 @@ class ContinuousBatchingScheduler:
             toks = np.zeros((self.num_slots, 1), np.int32)
             for slot, act in self.active.items():
                 toks[slot, 0] = act.last_token
-            next_toks, self.state = self._decode_fn(
+            decode_fn = self._step_fns(self.packed_bits)["decode"]
+            next_toks, self.state = decode_fn(
                 self.params, self.state, jnp.asarray(toks),
                 jnp.asarray(self.pos))
             next_toks = np.asarray(next_toks)   # forces the computation

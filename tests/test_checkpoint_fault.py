@@ -12,6 +12,7 @@ from repro.data import DataConfig, SyntheticCorpus
 from repro.optim import OptConfig
 from repro.runtime import checkpoint as ckpt_mod
 from repro.runtime.fault import Heartbeat, StepMonitor, run_resilient
+from repro.runtime.sharding import make_mesh
 from repro.train import init_train_state, make_train_step
 
 KEY = jax.random.PRNGKey(0)
@@ -54,8 +55,7 @@ def test_restore_structure_mismatch_raises(tmp_path):
 
 def test_elastic_restore_with_shardings(tmp_path):
     """Restore device_puts against target shardings (elastic relaunch)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
     tree = {"w": jnp.arange(16, dtype=jnp.float32)}
     ckpt_mod.save(str(tmp_path), 1, tree)

@@ -46,21 +46,24 @@ def test_ef_residual_bounded():
 
 _SHARD_MAP_SCRIPT = textwrap.dedent("""
     import os
+    # host-platform proxy: force the CPU backend so a TPU-capable
+    # container (stripped subprocess env) never probes for accelerators
+    os.environ["JAX_PLATFORMS"] = "cpu"
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.runtime.compression import compressed_psum_tree
+    from repro.runtime.sharding import make_mesh, shard_map
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("pod",))
     g = jax.random.normal(jax.random.PRNGKey(0), (4, 256)) * 0.1
 
     def f(g_shard):
         out, ef = compressed_psum_tree({"g": g_shard[0]}, None, "pod", bits=8)
         return out["g"][None], ef["g"][None]
 
-    out, ef = jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                            out_specs=P("pod"))(g)
+    out, ef = shard_map(f, mesh=mesh, in_specs=P("pod"),
+                        out_specs=P("pod"))(g)
     true_mean = jnp.mean(g, axis=0)
     # every pod ends with the same mean-reduced tensor
     for i in range(4):

@@ -1,0 +1,194 @@
+"""Packed elastic-tier serving: per-bitwidth compiled closures, batched
+bucketed admission with donated state, and packed/dequant equivalence
+(including through the interpret-mode Pallas kernel)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve import (Engine, Request, ServeConfig, TierCache,
+                         default_tiers, materialize_packed_params,
+                         materialize_served_params)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen3_1_7b").reduced()
+    params = api.init(KEY, cfg)
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=4,
+                                          page_size=8))
+    return params, cfg, eng
+
+
+def _tier(cfg, name):
+    return next(t for t in default_tiers(cfg.num_layers) if t.name == name)
+
+
+# ---------------------------------------------------------------------------
+# packed-tier equivalence on the interpret-mode kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_packed_decode_step_matches_dequant_on_interpret_kernel(served, bits):
+    """Sliced packed decode step == dequantized decode step, with the
+    packed planes consumed by the Pallas kernel in interpret mode."""
+    params, cfg, _ = served
+    cfg_k = cfg.replace(quant=dataclasses.replace(
+        cfg.quant, packed_bits=bits, packed_kernel=True))
+    pp = materialize_packed_params(params, cfg_k, bits)
+    sp = materialize_served_params(params, cfg, bits)
+    state = api.init_state(cfg, 2, 16)
+    tok = jax.random.randint(jax.random.fold_in(KEY, bits), (2, 1), 0,
+                             cfg.vocab_size)
+    pos = jnp.asarray([3, 7], jnp.int32)
+    lk, _ = api.decode_step_slots(pp, state, tok, pos, cfg_k, bits=None)
+    ld, _ = api.decode_step_slots(sp, state, tok, pos, cfg, bits=None)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(ld),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(lk, -1)),
+                                  np.asarray(jnp.argmax(ld, -1)))
+
+
+def test_tier_cache_packed_bytes_halve_and_mnm_falls_back(served):
+    params, cfg, _ = served
+    cache = TierCache(params, cfg, packed=True)
+    e8 = cache.get(_tier(cfg, "int8"))
+    e4 = cache.get(_tier(cfg, "int4"))
+    e2 = cache.get(_tier(cfg, "int2"))
+    # the sliced plane bytes halve exactly per tier step down
+    assert e8.packed_nbytes == 2 * e4.packed_nbytes == 4 * e2.packed_nbytes > 0
+    assert (e8.packed_bits, e4.packed_bits, e2.packed_bits) == (8, 4, 2)
+    # packed planes really replaced the scoped projections
+    up = e4.params["layers"]["ffn"]["up"]["w"]
+    assert set(up) == {"words", "alpha", "beta"}
+    # Mix'n'Match (per-layer bits) falls back to the dequantized layout
+    # behind the same get() interface
+    mnm = next(t for t in default_tiers(cfg.num_layers)
+               if not isinstance(t.bits, int))
+    em = cache.get(mnm)
+    assert em.packed_bits is None
+    assert not isinstance(em.params["layers"]["ffn"]["up"]["w"], dict)
+    # cached: a second get is the same entry
+    assert cache.get(_tier(cfg, "int4")) is e4
+
+
+# ---------------------------------------------------------------------------
+# mid-flight tier switching: per-bitwidth closures, no recompile on revisit
+# ---------------------------------------------------------------------------
+
+
+def _drive(sched, cfg, indices):
+    """Submit two requests, then step through `indices` tier switches."""
+    rng = np.random.default_rng(11)
+    for i in range(2):
+        sched.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                             max_new_tokens=len(indices) + 1))
+    for idx in indices:
+        sched.router.index = idx
+        sched.step()
+    sched.router.index = 0
+    return sched.run_until_idle()
+
+
+def test_tier_switch_no_recompile_within_bitwidth_and_exact_results(served):
+    params, cfg, eng = served
+    # cooldown is huge so the router holds whatever index the test sets
+    switches = [0, 1, 3, 1, 0, 3]           # int8 -> int4 -> int2 -> ...
+    sp = eng.scheduler(elastic=True, packed=True, cooldown=10_000)
+    sd = eng.scheduler(elastic=True, packed=False, cooldown=10_000)
+    rp = _drive(sp, cfg, switches)
+    rd = _drive(sd, cfg, switches)
+    # packed planes and dequantized weights decode the same tokens
+    # across every switch (identical dequant math)
+    for uid in rd:
+        np.testing.assert_array_equal(rp[uid], rd[uid])
+    # one compiled closure pair per packed bitwidth, warmed lazily...
+    assert set(sp._fns) == {8, 4, 2}
+    assert set(sd._fns) == {None}
+    # ...and revisiting a bitwidth reused it: exactly one decode compile
+    # per bitwidth even though each tier was served multiple times
+    for key in (8, 4, 2):
+        assert sp._fns[key]["decode"]._cache_size() == 1
+
+
+def test_scheduler_accepts_packed_fixed_tier(served, monkeypatch):
+    """A packed-checkpoint engine no longer needs a dequantized detour:
+    the fixed-tier scheduler keys its closures by the engine bitwidth."""
+    params, cfg, _ = served
+    import repro.serve.engine as engine_mod
+    monkeypatch.setattr(engine_mod, "_packed_backend_ok", lambda: True)
+    eng = Engine(params, cfg, ServeConfig(bits=4, max_len=32, num_slots=2,
+                                          page_size=8, use_packed=True))
+    assert eng.packed
+    sched = eng.scheduler(num_slots=2, max_len=32)
+    assert sched.packed_bits == 4
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 3), (2, 8), 0,
+                                 cfg.vocab_size)
+    out = np.asarray(eng.generate(prompts, 4))   # facade -> scheduler path
+    batch_sched = next(iter(eng._schedulers.values()))
+    assert set(batch_sched._fns) == {4}          # packed-bitwidth closure
+    ref = Engine(params, cfg, ServeConfig(bits=4, max_len=32, num_slots=2,
+                                          page_size=8))
+    np.testing.assert_array_equal(out, np.asarray(ref.generate(prompts, 4)))
+
+
+# ---------------------------------------------------------------------------
+# batched bucketed admission + donated state
+# ---------------------------------------------------------------------------
+
+
+def test_burst_admission_issues_one_prefill_per_bucket(served):
+    params, cfg, eng = served
+    sched = eng.scheduler(num_slots=4, max_len=32)
+    rng = np.random.default_rng(4)
+    # 3 prompts in the 8-token bucket + 1 in the 16-token bucket
+    for i, plen in enumerate((8, 6, 7, 12)):
+        sched.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, plen),
+                             max_new_tokens=3))
+    assert sched.prefill_calls == 0
+    sched.step()
+    assert len(sched.active) == 4           # the whole burst was admitted...
+    assert sched.prefill_calls == 2         # ...with <= #buckets prefills
+    res = sched.run_until_idle()
+    assert sorted(res) == [0, 1, 2, 3]
+    assert all(len(res[i]) == 3 for i in range(4))
+
+
+def test_burst_admission_tokens_match_sequential_runs(served):
+    """Bucketed batched admission is exact: each request decodes the
+    same tokens as an isolated legacy run (mixed prompt lengths)."""
+    params, cfg, eng = served
+    sched = eng.scheduler(num_slots=4, max_len=32)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, plen)
+               for plen in (8, 5, 12, 8)]
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+    res = sched.run_until_idle()
+    for i, p in enumerate(prompts):
+        iso = np.asarray(eng.generate_legacy(jnp.asarray(p[None]), 5))[0]
+        np.testing.assert_array_equal(res[i], iso)
+
+
+def test_admission_and_decode_donate_state(served):
+    """The jitted step closures donate the slot-array state: the previous
+    state buffers are consumed in place, not copied per call."""
+    params, cfg, eng = served
+    sched = eng.scheduler(num_slots=2, max_len=32)
+    rng = np.random.default_rng(6)
+    sched.submit(Request(uid="a", prompt=rng.integers(0, cfg.vocab_size, 8),
+                         max_new_tokens=4))
+    before = jax.tree.leaves(sched.state)[0]
+    sched.step()                            # admission prefill consumes it
+    assert before.is_deleted()
+    mid = jax.tree.leaves(sched.state)[0]
+    sched.step()                            # decode step consumes it too
+    assert mid.is_deleted()
