@@ -9,6 +9,8 @@ export PYTHONPATH
 test:
 	python -m pytest -x -q
 
+# fast lane: everything not marked `slow` (includes the packed
+# MoE / Mix'n'Match serving regressions in tests/test_packed_moe_mnm.py)
 test-fast:
 	python -m pytest -x -q -m "not slow"
 

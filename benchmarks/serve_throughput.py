@@ -13,9 +13,15 @@ Runs reported side by side on the SAME trace:
   * fixed          -- int8 only (the quality-maximal baseline);
   * packed A/B     -- the same elastic replay twice, once over PACKED
     r-bit tier planes and once over dequantized tiers, with measured
-    per-tier HBM weight bytes (`packed_nbytes`, halving per downgrade
-    step int8 -> int4 -> int2) and tok/s -- the paper's Section 5.4
-    bytes claim as a reported number instead of an assertion.
+    per-tier HBM weight bytes (`packed_nbytes`, shrinking per downgrade
+    step with the per-layer bit sum: int8 -> int4 -> Mix'n'Match ~3.3 ->
+    int2, every tier packed incl. the per-layer MnM planes) and tok/s --
+    the paper's Section 5.4 bytes claim as a reported number instead of
+    an assertion;
+  * MoE packed A/B -- the same packed-vs-dequant elastic replay on a
+    granite_moe config (expert stacks served as per-expert packed
+    planes), so the bytes claim also covers the MoE layout
+    (`packed_ab_moe` in BENCH_serve.json).
 
   PYTHONPATH=src python benchmarks/serve_throughput.py --reduced
 """
@@ -109,6 +115,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-packed-ab", action="store_true",
                     help="skip the packed-vs-dequant elastic A/B replay")
+    ap.add_argument("--moe-arch", default="granite_moe_1b_a400m",
+                    help="MoE config for the second packed A/B "
+                         "('none' skips it)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -128,6 +137,12 @@ def main(argv=None):
     fixed, _ = run_once(engine, cfg, args, elastic=False)
     print(json.dumps(fixed, indent=2))
 
+    def _print_tiers(tiers):
+        for name, info in tiers.items():
+            print(f"  tier {name:16s} packed_bits={info['packed_bits']} "
+                  f"packed_nbytes={info['packed_nbytes']:,d} "
+                  f"weight_nbytes={info['weight_nbytes']:,d}")
+
     packed_ab = None
     if not args.skip_packed_ab:
         print("== packed-vs-dequant elastic A/B, same trace ==")
@@ -139,10 +154,34 @@ def main(argv=None):
             "dequant": {"summary": elastic, "per_tier": elastic_tiers,
                         "throughput_tok_s": elastic["throughput_tok_s"]},
         }
-        for name, info in packed_tiers.items():
-            print(f"  tier {name:16s} packed_bits={info['packed_bits']} "
-                  f"packed_nbytes={info['packed_nbytes']:,d} "
-                  f"weight_nbytes={info['weight_nbytes']:,d}")
+        _print_tiers(packed_tiers)
+
+    packed_ab_moe = None
+    if not args.skip_packed_ab and args.moe_arch != "none":
+        # the same packed-vs-dequant A/B on a MoE config: expert stacks
+        # serve as per-expert packed planes, Mix'n'Match as per-layer
+        # planes, so a downgrade moves weight bytes on every layout
+        print(f"== MoE packed-vs-dequant elastic A/B ({args.moe_arch}) ==")
+        cfg_moe = get_config(args.moe_arch)
+        if args.reduced:
+            cfg_moe = cfg_moe.reduced()
+        params_moe = api.init(jax.random.PRNGKey(args.seed), cfg_moe)
+        engine_moe = Engine(params_moe, cfg_moe, ServeConfig(
+            bits=8, max_len=args.prompt_len + args.gen_tokens,
+            num_slots=args.num_slots, page_size=args.page_size))
+        moe_packed, moe_packed_tiers = run_once(
+            engine_moe, cfg_moe, args, elastic=True, packed=True)
+        moe_dequant, moe_dequant_tiers = run_once(
+            engine_moe, cfg_moe, args, elastic=True, packed=False)
+        packed_ab_moe = {
+            "arch": args.moe_arch + (" (reduced)" if args.reduced else ""),
+            "packed": {"summary": moe_packed, "per_tier": moe_packed_tiers,
+                       "throughput_tok_s": moe_packed["throughput_tok_s"]},
+            "dequant": {"summary": moe_dequant,
+                        "per_tier": moe_dequant_tiers,
+                        "throughput_tok_s": moe_dequant["throughput_tok_s"]},
+        }
+        _print_tiers(moe_packed_tiers)
 
     report = {
         "bench": "serve_throughput",
@@ -155,6 +194,7 @@ def main(argv=None):
         "elastic": elastic,
         "fixed_int8": fixed,
         "packed_ab": packed_ab,
+        "packed_ab_moe": packed_ab_moe,
         # headline numbers (the acceptance-criterion fields)
         "throughput_tok_s": elastic["throughput_tok_s"],
         "mean_ttft_s": elastic["mean_ttft_s"],

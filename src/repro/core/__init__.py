@@ -22,6 +22,7 @@ from repro.core.matquant import (  # noqa: F401
 )
 from repro.core.packing import (  # noqa: F401
     PackedLinear,
+    PackedPlane,
     pack_codes,
     packed_nbytes,
     unpack_codes,

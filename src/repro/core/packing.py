@@ -63,6 +63,35 @@ def unpack_codes(words: jax.Array, bits: int, n: int, axis: int = 0) -> jax.Arra
     return jnp.moveaxis(codes.astype(jnp.int32), 0, axis)
 
 
+@dataclasses.dataclass(eq=False)
+class PackedPlane:
+    """A served r-bit packed plane: what the kernels actually consume.
+
+    Registered as a pytree with `bits` and `pack_axis` as STATIC
+    metadata (aux data, not leaves): under `jax.jit` they stay Python
+    ints, so `kernels.ops.plane_matmul` can unpack without a traced
+    bitwidth, and two tiers with different bits/pack_axis have different
+    treedefs (a tier switch retraces exactly once per representation).
+    This is also what makes per-layer Mix'n'Match planes servable: each
+    layer's plane carries its own static r.
+
+    Dequant is always `w_hat = alpha * code - beta`.
+    """
+
+    words: jax.Array        # packed r-bit codes, int32
+    alpha: jax.Array        # (..., 1, n) scale (grid re-scale folded in)
+    beta: jax.Array         # (..., 1, n) alpha_parent * zero_point
+    bits: int = 8           # static: the plane's bitwidth r
+    pack_axis: int = -2     # static: -2 = K-packed, -1 = N-packed
+
+
+jax.tree_util.register_dataclass(
+    PackedPlane,
+    data_fields=("words", "alpha", "beta"),
+    meta_fields=("bits", "pack_axis"),
+)
+
+
 @dataclasses.dataclass
 class PackedLinear:
     """A packed c-bit parent from which any r <= c model can be served.
@@ -131,8 +160,36 @@ class PackedLinear:
             )
         return pack_codes(codes, bits, axis=self.pack_axis), alpha_r, beta_r
 
+    def materialize_plane(self, bits: int) -> PackedPlane:
+        """`materialize` packaged as the PackedPlane the kernels consume."""
+        words, alpha_r, beta_r = self.materialize(bits)
+        return PackedPlane(words=words, alpha=alpha_r, beta=beta_r,
+                           bits=bits, pack_axis=self.pack_axis)
 
-def packed_nbytes(k: int, n: int, bits: int) -> int:
-    """HBM bytes of one packed (k, n) plane -- roofline accounting."""
-    words_k = int(np.ceil(k / codes_per_word(bits)))
-    return words_k * n * 4
+    def layer(self, idx: int) -> "PackedLinear":
+        """The parent of ONE stacked layer: index the leading dim.
+
+        A (L, ..., k, n) parent becomes the (..., k, n) parent of layer
+        `idx`; (k, n) and pack_axis are unchanged (both are trailing-dim
+        properties). This is the per-layer slicing step of a packed
+        Mix'n'Match tier: layer l is materialized at its own r."""
+        if self.words.ndim < 3:
+            raise ValueError("layer() needs a stacked (leading-dim) parent")
+        return PackedLinear(words=self.words[idx], alpha=self.alpha[idx],
+                            zero=self.zero[idx], k=self.k, n=self.n,
+                            parent_bits=self.parent_bits,
+                            pack_axis=self.pack_axis)
+
+
+def packed_nbytes(k: int, n: int, bits: int, pack_axis: int = -2) -> int:
+    """HBM bytes of one packed (k, n) plane -- roofline accounting.
+
+    pack_axis selects which dim the int32 words run along: -2 packs the
+    reduction dim k (ceil(k/cpw) x n words), -1 packs the output dim n
+    (k x ceil(n/cpw) words -- down/wo-type planes). The two differ
+    whenever the packed dim is not a multiple of codes-per-word.
+    """
+    cpw = codes_per_word(bits)
+    if pack_axis in (-1, 1):
+        return k * int(np.ceil(n / cpw)) * 4
+    return int(np.ceil(k / cpw)) * n * 4

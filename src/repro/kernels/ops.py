@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from repro.core import packing
 from repro.kernels import ref
 from repro.kernels.fused_quantize import fused_quantize_pallas
-from repro.kernels.quant_matmul import quant_matmul_pallas
+from repro.kernels.quant_matmul import (quant_matmul_experts_pallas,
+                                        quant_matmul_pallas)
 
 
 def _on_tpu() -> bool:
@@ -31,6 +32,20 @@ def _pad_to(x, m, axis):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths), pad
+
+
+def _fit_blocks(M, K, N, cpw, block_m, block_n, block_k):
+    """Shrink requested block sizes to ones the kernel accepts: block_m
+    covers ragged M (padded inside the kernel), block_k must divide K
+    and be a multiple of codes-per-word, block_n must divide N."""
+    bm = min(block_m, max(8, M))
+    bk = min(block_k, K)
+    while K % bk or bk % cpw:
+        bk -= 1
+    bn = min(block_n, N)
+    while N % bn:
+        bn -= 1
+    return bm, bk, bn
 
 
 def quant_matmul(x, words, alpha, beta, *, bits, overflow_words=None,
@@ -48,24 +63,14 @@ def quant_matmul(x, words, alpha, beta, *, bits, overflow_words=None,
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
 
-    cpw = packing.codes_per_word(bits)
-    bm = min(block_m, max(8, M))      # ragged M is padded inside the kernel
-    bk = min(block_k, K)
-    # block_k must divide K and be a multiple of cpw
-    while K % bk or bk % cpw:
-        bk -= 1
-    bn = min(block_n, N)
-    while N % bn:
-        bn -= 1
-
+    bm, bk, bn = _fit_blocks(M, K, N, packing.codes_per_word(bits),
+                             block_m, block_n, block_k)
     y = quant_matmul_pallas(
         x2, words, alpha.astype(jnp.float32), beta.astype(jnp.float32),
         bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     if overflow_words is not None:
-        cpw1 = packing.codes_per_word(1)
-        bk1 = min(block_k, K)
-        while K % bk1 or bk1 % cpw1:
-            bk1 -= 1
+        _, bk1, _ = _fit_blocks(M, K, N, packing.codes_per_word(1),
+                                block_m, block_n, block_k)
         y_over = quant_matmul_pallas(
             x2, overflow_words, alpha.astype(jnp.float32),
             jnp.zeros_like(beta, jnp.float32),
@@ -93,48 +98,120 @@ def fused_quantize(w, *, bitwidths, parent_bits=8, extra_precision=False,
     return outs
 
 
-def plane_matmul(x, plane, *, bits: int, use_kernel: bool = False,
-                 interpret: bool | None = None):
-    """Bits-static entry point for a packed plane {'words','alpha','beta'}.
-
-    The serving integration point: `models.common.qlinear` hands every
-    packed weight plane here with the tier's bitwidth as a static int.
-    K-packed planes route to the Pallas dequant-matmul kernel when
-    `use_kernel` (TPU, or interpret mode elsewhere) and the plane tiles
-    exactly; N-packed planes (down/wo projections, packed along the
-    output dim so their reduction dim stays shardable) and non-tiling
-    shapes take the jnp unpack twin -- identical math, so the two paths
-    are interchangeable per-plane.
-
-    x: (..., K); returns (..., N) in x.dtype (no bias).
+def quant_matmul_experts(x, words, alpha, beta, *, bits,
+                         interpret: bool | None = None,
+                         block_m=128, block_n=128, block_k=512):
+    """Batched-over-experts `quant_matmul`: x (E, M, K) against one
+    packed K-packed plane per expert, words (E, ceil(K/cpw), N). The
+    Pallas kernel runs with its grid extended over E. Returns (E, M, N).
     """
+    if interpret is None:
+        interpret = not _on_tpu()
+    E, M, K = x.shape
+    N = words.shape[-1]
+    bm, bk, bn = _fit_blocks(M, K, N, packing.codes_per_word(bits),
+                             block_m, block_n, block_k)
+    return quant_matmul_experts_pallas(
+        x, words, alpha.astype(jnp.float32), beta.astype(jnp.float32),
+        bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+
+
+def _plane_fields(plane, bits):
+    """(words, alpha, beta, bits, pack_axis) of a packed plane.
+
+    `PackedPlane` carries bits/pack_axis as static metadata -- the
+    authoritative source (a conflicting `bits=` is an error: unpacking
+    at any other width misreads the words). Legacy
+    `{'words','alpha','beta'}` dicts need `bits` passed explicitly and
+    fall back to the shape heuristic `words.shape[-2] != k` for the
+    pack axis (ambiguous only for planes packed along N whose unpacked
+    N happens to equal ceil(k/cpw))."""
+    if isinstance(plane, packing.PackedPlane):
+        if bits is not None and bits != plane.bits:
+            raise ValueError(
+                f"bits={bits} conflicts with the plane's static bitwidth "
+                f"{plane.bits}; the words can only be unpacked at the "
+                f"width they were packed with")
+        return (plane.words, plane.alpha, plane.beta,
+                plane.bits, plane.pack_axis)
     words, alpha, beta = plane["words"], plane["alpha"], plane["beta"]
+    if bits is None:
+        raise ValueError("dict packed planes carry no bitwidth; pass bits=")
+    return words, alpha, beta, bits, None
+
+
+def plane_matmul(x, plane, *, bits: int | None = None,
+                 use_kernel: bool = False, interpret: bool | None = None):
+    """Bits-static entry point for one packed weight plane.
+
+    The serving integration point: `models.common.qlinear` (and
+    `models.ffn.apply_moe` for expert stacks) hands every packed weight
+    plane here. `plane` is a `core.packing.PackedPlane` (bits and
+    pack_axis come from its static metadata; passing a different
+    `bits=` raises) or a legacy `{'words','alpha','beta'}` dict (bits
+    required, pack axis inferred from shape).
+
+    Routing:
+      * K-packed 2-D planes -> the Pallas dequant-matmul kernel when
+        `use_kernel` (TPU, or interpret mode elsewhere);
+      * K-packed expert stacks (words (E, ceil(K/cpw), N) with
+        x (E, M, K)) -> the expert-batched kernel, grid over E;
+      * N-packed planes (down/wo projections, packed along the output
+        dim so their reduction dim stays shardable) and non-tiling
+        shapes -> the jnp unpack twin (vmapped over E for stacks) --
+        identical math, so the paths are interchangeable per-plane.
+
+    x: (..., K), or (E, M, K) against an expert stack; returns (..., N)
+    in x.dtype (no bias).
+    """
+    words, alpha, beta, bits, pack_axis = _plane_fields(plane, bits)
     K, N = x.shape[-1], alpha.shape[-1]
     cpw = packing.codes_per_word(bits)
-    packed_k = words.shape[-2] != K        # else packed along N (down-type)
-    if (use_kernel and packed_k and words.ndim == 2
-            and words.shape[-2] * cpw == K):
-        return quant_matmul(x, words, alpha, beta, bits=bits,
-                            interpret=interpret)
+    if pack_axis is None:              # legacy dict plane: shape heuristic
+        pack_axis = -2 if words.shape[-2] != K else -1
+    packed_k = pack_axis in (-2, words.ndim - 2)
+    if use_kernel and packed_k and words.shape[-2] * cpw == K:
+        if words.ndim == 2:
+            return quant_matmul(x, words, alpha, beta, bits=bits,
+                                interpret=interpret)
+        if words.ndim == 3 and x.ndim == 3 and x.shape[0] == words.shape[0]:
+            return quant_matmul_experts(x, words, alpha, beta, bits=bits,
+                                        interpret=interpret)
     if packed_k:
         codes = packing.unpack_codes(words, bits, K, axis=-2)
     else:
         codes = packing.unpack_codes(words, bits, N, axis=-1)
     w_hat = (alpha * codes.astype(jnp.float32) - beta).astype(x.dtype)
-    return x @ w_hat
+    if words.ndim == 2:
+        return x @ w_hat
+    # expert stack on the jnp twin: vmap the 2-D twin over E
+    return jax.vmap(jnp.matmul)(x, w_hat)
 
 
 def serve_linear(x, packed: packing.PackedLinear, bits: int,
                  extra_precision: bool = False, interpret: bool | None = None):
-    """End-to-end packed serving linear: slice parent -> kernel matmul."""
+    """End-to-end packed serving linear: slice parent -> plane matmul.
+
+    Routes through `plane_matmul`, which honors the parent's pack_axis:
+    K-packed planes hit the Pallas kernel, N-packed (down/wo-type)
+    planes take the jnp unpack twin -- `quant_matmul` alone would read
+    an N-packed (k, ceil(n/cpw)) word array as if it were K-packed.
+    Extra precision adds the 1-bit overflow plane through the same
+    dispatch (full code = clamped base + overflow bit, so the overflow
+    contribution is alpha * bitmap with no beta).
+    """
     mat = packed.materialize(bits, extra_precision=extra_precision)
+    words, alpha, beta = mat[:3]
+    plane = packing.PackedPlane(words=words, alpha=alpha, beta=beta,
+                                bits=bits, pack_axis=packed.pack_axis)
+    y = plane_matmul(x, plane, use_kernel=True, interpret=interpret)
     if extra_precision:
-        words, alpha, beta, over = mat
-        return quant_matmul(x, words, alpha, beta, bits=bits,
-                            overflow_words=over, interpret=interpret)
-    words, alpha, beta = mat
-    return quant_matmul(x, words, alpha, beta, bits=bits, interpret=interpret)
+        over = packing.PackedPlane(
+            words=mat[3], alpha=alpha, beta=jnp.zeros_like(beta),
+            bits=1, pack_axis=packed.pack_axis)
+        y = y + plane_matmul(x, over, use_kernel=True, interpret=interpret)
+    return y
 
 
-__all__ = ["quant_matmul", "plane_matmul", "fused_quantize", "serve_linear",
-           "ref"]
+__all__ = ["quant_matmul", "quant_matmul_experts", "plane_matmul",
+           "fused_quantize", "serve_linear", "ref"]

@@ -26,14 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits, k_steps):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    words = w_ref[...]                              # (bk // cpw, bn) int32
+def _unpack_tile(words, bits):
+    """Vector-op unpack of one packed word tile: (bkw, bn) -> (bk, bn)."""
     cpw = 32 // bits
     mask = (1 << bits) - 1
     # unpack: (bkw, bn) -> (bkw, cpw, bn) -> (bk, bn)
@@ -42,7 +36,17 @@ def _kernel(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits, k_steps):
         jnp.broadcast_to(words[:, None, :], (words.shape[0], cpw, words.shape[1])),
         jnp.broadcast_to(shifts, (words.shape[0], cpw, words.shape[1])),
     ) & mask
-    codes = codes.reshape(words.shape[0] * cpw, words.shape[1])
+    return codes.reshape(words.shape[0] * cpw, words.shape[1])
+
+
+def _kernel(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_tile(w_ref[...], bits)          # (bk // cpw, bn) int32
     w = alpha_ref[...] * codes.astype(jnp.float32) - beta_ref[...]
     x = x_ref[...].astype(jnp.float32)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
@@ -95,4 +99,69 @@ def quant_matmul_pallas(
     )(x, words, alpha, beta)
     if pad_m:
         out = out[:M]
+    return out.astype(x.dtype)
+
+
+def _kernel_experts(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits):
+    """`_kernel` with a leading expert grid dim (blocks carry E=1)."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_tile(w_ref[0], bits)            # (bk // cpw, bn) int32
+    w = alpha_ref[0] * codes.astype(jnp.float32) - beta_ref[0]
+    x = x_ref[0].astype(jnp.float32)
+    o_ref[0, :, :] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_m", "block_n", "block_k", "interpret"),
+)
+def quant_matmul_experts_pallas(
+    x: jax.Array,            # (E, M, K) float
+    words: jax.Array,        # (E, K // cpw, N) int32 packed codes
+    alpha: jax.Array,        # (E, 1, N) f32
+    beta: jax.Array,         # (E, 1, N) f32
+    *,
+    bits: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched-over-experts `quant_matmul_pallas`: one packed plane per
+    expert of a MoE stack, the grid extended with a leading E dim so
+    every (expert, tile) pair is one kernel instance. Same per-tile
+    math as the 2-D kernel (DMA packed words, VPU unpack, MXU matmul)."""
+    E, M, K = x.shape
+    cpw = 32 // bits
+    Ew, Kw, N = words.shape
+    assert Ew == E and Kw * cpw == K, (Ew, E, Kw, cpw, K)
+    assert N % block_n == 0 and K % block_k == 0, (N, K, block_n, block_k)
+    assert block_k % cpw == 0
+    pad_m = (-M) % block_m
+    if pad_m:
+        x = jnp.pad(x, ((0, 0), (0, pad_m), (0, 0)))
+    grid = (E, (M + pad_m) // block_m, N // block_n, K // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_experts, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, block_k // cpw, block_n),
+                         lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, 1, block_n), lambda e, i, j, k: (e, 0, j)),
+            pl.BlockSpec((1, 1, block_n), lambda e, i, j, k: (e, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M + pad_m, N), jnp.float32),
+        interpret=interpret,
+    )(x, words, alpha, beta)
+    if pad_m:
+        out = out[:, :M]
     return out.astype(x.dtype)

@@ -57,13 +57,27 @@ def scan_layers(body, carry, xs, unroll: bool = False):
     counts a while-loop body once regardless of trip count, so the
     roofline harness compiles shallow unrolled variants and
     extrapolates per-layer terms (launch/roofline.py).
+
+    A top-level component of `xs` may also be a Python LIST of
+    per-layer subtrees instead of a stacked pytree -- the layout of
+    packed Mix'n'Match serving params, where each layer's packed planes
+    have bitwidth-dependent shapes and cannot stack. Lists force the
+    unrolled path (heterogeneous shapes cannot scan); list components
+    are indexed per layer, stacked components sliced as usual.
     """
-    if not unroll:
+    comps = xs if isinstance(xs, tuple) else (xs,)
+    has_list = any(isinstance(c, list) for c in comps)
+    if not unroll and not has_list:
         return jax.lax.scan(body, carry, xs)
-    L = jax.tree.leaves(xs)[0].shape[0]
+    if has_list:
+        L = len(next(c for c in comps if isinstance(c, list)))
+    else:
+        L = jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(L):
-        x_i = jax.tree.map(lambda a: a[i], xs)
+        parts = tuple(c[i] if isinstance(c, list)
+                      else jax.tree.map(lambda a: a[i], c) for c in comps)
+        x_i = parts if isinstance(xs, tuple) else parts[0]
         carry, y = body(carry, x_i)
         ys.append(y)
     if all(y is None for y in ys):
@@ -125,17 +139,21 @@ def qlinear(p, x, *, bits, qcfg: QuantConfig, kind: str = "ffn"):
     """x @ W with MatQuant fake-quantization applied per mode/scope.
 
     x: (..., d_in); returns (..., d_out) in x.dtype. If `p` holds a
-    PACKED plane ({'words', 'alpha', 'beta'}, from
-    serve.engine.materialize_packed_params), it routes through
-    kernels.ops.plane_matmul with the tier's bitwidth static: the Pallas
-    dequant-matmul kernel when qcfg.packed_kernel (TPU / interpret
-    tests), else its jnp unpack twin -- identical math either way.
+    PACKED plane (a `core.packing.PackedPlane` from
+    serve.engine.materialize_packed_params, or a legacy
+    {'words', 'alpha', 'beta'} dict), it routes through
+    kernels.ops.plane_matmul with the plane's bitwidth static (per-layer
+    Mix'n'Match planes each carry their own): the Pallas dequant-matmul
+    kernel when qcfg.packed_kernel (TPU / interpret tests), else its jnp
+    unpack twin -- identical math either way.
     """
+    from repro.core.packing import PackedPlane
     pw = p.get("w")
-    if isinstance(pw, dict) and "words" in pw:
+    if isinstance(pw, PackedPlane) or (isinstance(pw, dict) and "words" in pw):
         from repro.kernels import ops as _ops
-        y = _ops.plane_matmul(x, pw, bits=qcfg.packed_bits,
-                              use_kernel=qcfg.packed_kernel)
+        y = _ops.plane_matmul(
+            x, pw, bits=None if isinstance(pw, PackedPlane) else qcfg.packed_bits,
+            use_kernel=qcfg.packed_kernel)
         return y if p.get("b") is None else y + p["b"].astype(y.dtype)
     w = pw
     b = p.get("b")

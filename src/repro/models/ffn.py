@@ -82,15 +82,20 @@ def moe_axes():
     }
 
 
-def _expert_weights(p, *, bits, qcfg: QuantConfig):
-    """Fake-quantize the expert stacks (per-expert, per-out-channel groups)."""
-    if bits is None or qcfg.mode == "bf16":
-        return p["up"]["w"], p["gate"]["w"], p["down"]["w"]
-    def fq(w):
-        # minmax group = the reduction dim (axis 1 of (E, d_in, d_out))
-        return fake_quant(w, qcfg.parent_bits, bits, axis=1,
-                          extra_precision=qcfg.extra_precision)
-    return fq(p["up"]["w"]), fq(p["gate"]["w"]), fq(p["down"]["w"])
+def _expert_plane_matmul(x, plane, *, use_kernel: bool):
+    """Batched-over-experts packed matmul for one MoE projection stack.
+
+    x: (B, E, C, d_in); plane: `PackedPlane` with words (E, ..., .) --
+    one packed plane per expert, sliced from the stacked parent. Routes
+    through kernels.ops.plane_matmul, which grids the Pallas kernel
+    over E for K-packed stacks (up/gate) and vmaps the jnp unpack twin
+    for N-packed ones (down). Returns (B, E, C, d_out).
+    """
+    from repro.kernels import ops as _ops
+    B, E, C, D = x.shape
+    xe = x.transpose(1, 0, 2, 3).reshape(E, B * C, D)
+    ye = _ops.plane_matmul(xe, plane, use_kernel=use_kernel)
+    return ye.reshape(E, B, C, -1).transpose(1, 0, 2, 3)
 
 
 def apply_moe(p, x, *, bits, qcfg: QuantConfig, top_k: int,
@@ -109,10 +114,26 @@ def apply_moe(p, x, *, bits, qcfg: QuantConfig, top_k: int,
       B4 (this) per-row sort -> dispatch local, capacity per (row,
          expert), einsums batched over the sharded row dim.
     """
+    from repro.core.packing import PackedPlane
+
     B, S, d = x.shape
     E = p["router"]["w"].shape[-1]
     C = max(int(capacity_factor * top_k * S / E), 1)
-    w_up, w_gate, w_down = _expert_weights(p, bits=bits, qcfg=qcfg)
+
+    def expert_mm(t, proj_p):
+        """t (B, E, C, k) @ per-expert weights -> (B, E, C, n), honoring
+        each projection's OWN representation: a packed plane routes
+        through the batched plane matmul, a raw stack through the
+        fake-quant einsum -- mixed layers (e.g. one projection served
+        via the dequant fallback) stay servable."""
+        w = proj_p["w"]
+        if isinstance(w, PackedPlane):
+            return _expert_plane_matmul(t, w, use_kernel=qcfg.packed_kernel)
+        if bits is not None and qcfg.mode != "bf16":
+            # minmax group = the reduction dim (axis 1 of (E, k, n))
+            w = fake_quant(w, qcfg.parent_bits, bits, axis=1,
+                           extra_precision=qcfg.extra_precision)
+        return jnp.einsum("beck,ekn->becn", t, w.astype(t.dtype))
 
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"]["w"])
     probs = jax.nn.softmax(logits, axis=-1)                      # (B, S, E)
@@ -148,10 +169,10 @@ def apply_moe(p, x, *, bits, qcfg: QuantConfig, top_k: int,
     # vmap so the batched buffers keep their 'batch' sharding explicit
     bufs, eids, poss, gvs = jax.vmap(dispatch_row)(x, expert_ids, gate_vals)
     bufs = cm.constrain(bufs, "batch", "experts", None, None)
-    up = jnp.einsum("becd,edf->becf", bufs, w_up.astype(x.dtype))
-    gate = jnp.einsum("becd,edf->becf", bufs, w_gate.astype(x.dtype))
+    up = expert_mm(bufs, p["up"])
+    gate = expert_mm(bufs, p["gate"])
     hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
-    out_bufs = jnp.einsum("becf,efd->becd", hidden, w_down.astype(x.dtype))
+    out_bufs = expert_mm(hidden, p["down"])
     out_bufs = cm.constrain(out_bufs, "batch", "experts", None, None)
     out = jax.vmap(combine_row)(out_bufs, eids, poss, gvs)
     out = cm.constrain(out, "batch", "seq", "embed")

@@ -28,11 +28,12 @@ Serving architecture
     backlog pick the served tier (int8 -> int4 -> Mix'n'Match -> int2),
     re-materialized via the functions below and cached per tier
     (TierEntry) so a switch between two decode steps is a dict lookup.
-    With TierCache(packed=True), uniform-int tiers are PACKED r-bit
+    With TierCache(packed=True), every tier -- uniform-int, MoE
+    expert stacks, and per-layer Mix'n'Match -- is PACKED r-bit
     planes sliced from one pre-packed parent (build_packed_parent),
     so a downgrade swaps the plane the kernel reads -- measured HBM
-    weight bytes drop 2x per step -- and the scheduler compiles one
-    step per packed bitwidth.
+    weight bytes drop per step -- and the scheduler compiles one
+    step per packed representation (bitwidth, or per-layer tuple).
   * serve/metrics.py -- TTFT / latency / throughput / tier-occupancy
     counters the benchmarks serialize.
 
@@ -65,7 +66,9 @@ def _path_names(path) -> list[str]:
     for k in path:
         name = getattr(k, "key", None)
         if name is None:
-            name = str(getattr(k, "idx", k))
+            name = getattr(k, "name", None)    # GetAttrKey (PackedPlane)
+        if name is None:
+            name = getattr(k, "idx", k)
         out.append(str(name))
     return out
 
@@ -86,6 +89,25 @@ def quantized_leaf_kind(path) -> str | None:
     return None
 
 
+def _scoped(path, qcfg) -> bool:
+    """Whether this param path is quantized under the config's scope."""
+    kind = quantized_leaf_kind(path)
+    return kind == "ffn" or (kind == "attn" and "attn" in qcfg.scope)
+
+
+def _leaf_group_axis(names, leaf) -> tuple[bool, int]:
+    """(stacked, group_axis) of a scoped leaf: whether its leading axis
+    is the stacked layer dim, and which axis is the minmax reduction
+    dim: (L, E, d_in, d_out) -> 2, (L, d_in, d_out) -> 1,
+    (E, d_in, d_out) -> 1, (d_in, d_out) -> 0. Per-layer slices of a
+    stacked leaf reduce along group_axis - 1."""
+    stacked = names[0] in ("layers", "encoder", "decoder") and leaf.ndim >= 3
+    moe = "moe" in names
+    if stacked:
+        return True, 2 if (moe and leaf.ndim == 4) else 1
+    return False, 1 if (moe and leaf.ndim == 3) else 0
+
+
 def materialize_served_params(params, cfg, bits, extra_precision: bool | None = None):
     """Replace quantized weights with their sliced-dequantized values.
 
@@ -100,20 +122,11 @@ def materialize_served_params(params, cfg, bits, extra_precision: bool | None = 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
-        kind = quantized_leaf_kind(path)
-        scoped = kind == "ffn" or (kind == "attn" and "attn" in qcfg.scope)
-        if not scoped:
+        if not _scoped(path, qcfg):
             out.append(leaf)
             continue
         names = _path_names(path)
-        stacked = names[0] in ("layers", "encoder", "decoder") and leaf.ndim >= 3
-        moe = "moe" in names
-        # minmax group = the reduction dim: (L, E, d_in, d_out) -> 2,
-        # (L, d_in, d_out) -> 1, (E, d_in, d_out) -> 1, (d_in, d_out) -> 0
-        if stacked:
-            group_axis = 2 if (moe and leaf.ndim == 4) else 1
-        else:
-            group_axis = 1 if (moe and leaf.ndim == 3) else 0
+        stacked, group_axis = _leaf_group_axis(names, leaf)
         if per_layer and stacked:
             qd = jax.vmap(
                 lambda w, b: quant.quant_dequant(
@@ -121,7 +134,12 @@ def materialize_served_params(params, cfg, bits, extra_precision: bool | None = 
                     extra_precision=ep)
             )(leaf, bits_arr[: leaf.shape[0]])
         else:
-            b = int(bits) if not per_layer else int(bits[0])
+            # scoped leaves OUTSIDE the stacked layer dim (VLM / enc-dec
+            # projections) under a per-layer vector: serve them at the
+            # MAX of the vector -- the conservative policy (a layer-wise
+            # downgrade never degrades shared projections below the
+            # best-precision layer they feed)
+            b = int(bits) if not per_layer else int(max(int(v) for v in bits))
             qd = quant.quant_dequant(leaf, qcfg.parent_bits, b, axis=group_axis,
                                      extra_precision=ep)
         out.append(qd.astype(leaf.dtype))
@@ -136,19 +154,19 @@ def build_packed_parent(params, cfg):
     packed c-bit parent per plane, from which `materialize_packed_params`
     slices any r <= c tier via `PackedLinear.materialize` -- a cheap
     unpack/slice/re-pack instead of a re-quantization of the float
-    checkpoint per tier. Dense/VLM/encdec projections only (MoE expert
-    stacks keep the fake-quant path; their dispatch dominates serving
-    cost anyway).
+    checkpoint per tier. Covers every scoped leaf regardless of leading
+    dims: dense/VLM/encdec (k, n) projections, stacked-layer (L, k, n)
+    planes, and MoE expert stacks ((E, k, n) / (L, E, k, n)) --
+    `PackedLinear` treats everything before the trailing (k, n) as batch
+    dims, and `apply_moe` consumes the per-expert planes batched.
     """
     from repro.core import packing
     qcfg = cfg.quant
     parent = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
-        kind = quantized_leaf_kind(path)
-        scoped = kind == "ffn" or (kind == "attn" and "attn" in qcfg.scope)
-        names = _path_names(path)
-        if not scoped or "moe" in names or leaf.ndim > 3:
+        if not _scoped(path, qcfg):
             continue
+        names = _path_names(path)
         # down-type projections (out dim = residual 'embed') pack along N
         # so the packed plane stays sharded on its reduction dim under
         # TP; everything else packs along K and shards the out dim.
@@ -159,42 +177,153 @@ def build_packed_parent(params, cfg):
     return parent
 
 
-def materialize_packed_params(params, cfg, bits: int, parent=None):
+def materialize_packed_params(params, cfg, bits, parent=None):
     """Replace quantized weights with PACKED r-bit planes.
 
-    Each scoped 'w' leaf becomes {'words': int32 packed codes (along the
-    reduction dim), 'alpha', 'beta'}: w_hat = alpha * code - beta. The
-    int8 parent is quantized per-output-channel, sliced to `bits` via
-    `PackedLinear.materialize`, and re-packed -- HBM weight bytes drop
-    16/bits x vs bf16. Consumed by kernels.ops.plane_matmul (the Pallas
-    kernel on TPU, its jnp twin elsewhere) through common.qlinear.
+    Each scoped 'w' leaf becomes a `core.packing.PackedPlane` (int32
+    packed codes along the pack axis, plus alpha/beta; bits and
+    pack_axis ride as static metadata): w_hat = alpha * code - beta.
+    The int8 parent is quantized per-output-channel, sliced to `bits`
+    via `PackedLinear.materialize`, and re-packed -- HBM weight bytes
+    drop 16/bits x vs bf16. Consumed by kernels.ops.plane_matmul (the
+    Pallas kernel on TPU, its jnp twin elsewhere) through
+    common.qlinear / ffn.apply_moe.
+
+    `bits` is an int (uniform tier) or a per-layer vector (Mix'n'Match):
+    the per-layer path unstacks `params['layers']` into a Python list of
+    L per-layer subtrees, layer l's planes sliced at bits[l] (packed
+    plane shapes depend on r, so a heterogeneous stack cannot stay
+    stacked; `models.common.scan_layers` unrolls over the list).
+    Scoped leaves outside the layer stack get max(bits) -- the
+    conservative policy, matching `materialize_served_params`.
+
+    Any scoped leaf MISSING from `parent` (a layout the packer cannot
+    handle) is materialized dequantized at the tier's bits with a
+    warning instead of being served raw -- a packed tier must never
+    silently include full-precision projections.
 
     `parent` (from `build_packed_parent`) reuses pre-packed parent
     codes across tiers; by default it is built on the fly.
     """
     if parent is None:
         parent = build_packed_parent(params, cfg)
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    if isinstance(bits, int):
+        return _materialize_packed_uniform(params, cfg, bits, parent)
+    return _materialize_packed_per_layer(
+        params, cfg, [int(b) for b in bits], parent)
+
+
+def _key_of(entry):
+    return getattr(entry, "key", getattr(entry, "idx", None))
+
+
+def _set_path(d, path, value):
+    node = d
+    for k in path[:-1]:
+        node = node[_key_of(k)]
+    node[_key_of(path[-1])] = value
+
+
+def _dequant_fallback(path, leaf, cfg, bits: int):
+    """Satellite guard: a scoped projection with no packed parent is
+    served DEQUANTIZED at the tier's bits (never raw bf16), loudly."""
+    warnings.warn(
+        f"packed tier: scoped projection {jax.tree_util.keystr(path)} has "
+        f"no packed parent plane; serving it dequantized at {bits} bits "
+        f"so the tier's quality numbers do not silently include "
+        f"full-precision weights", stacklevel=3)
+    _, group_axis = _leaf_group_axis(_path_names(path), leaf)
+    return quant.quant_dequant(leaf, cfg.quant.parent_bits, bits,
+                               axis=group_axis).astype(leaf.dtype)
+
+
+def _materialize_packed_uniform(params, cfg, bits: int, parent):
+    qcfg = cfg.quant
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
         pl = parent.get(jax.tree_util.keystr(path))
-        if pl is None:
-            out.append(leaf)
+        if pl is not None:
+            out.append(pl.materialize_plane(bits))
             continue
-        words, alpha_r, beta_r = pl.materialize(bits)
-        out.append({"words": words, "alpha": alpha_r, "beta": beta_r})
+        if _scoped(path, qcfg):
+            out.append(_dequant_fallback(path, leaf, cfg, bits))
+        else:
+            out.append(leaf)
 
     # rebuild by mutating a container-copied tree by key-path (leaf
     # structure changes, so tree_unflatten can't be used directly)
-    def set_path(d, path, value):
-        node = d
-        for k in path[:-1]:
-            node = node[getattr(k, "key", getattr(k, "idx", None))]
-        node[getattr(path[-1], "key", getattr(path[-1], "idx", None))] = value
-
     base = _deep_copy_containers(params)
     for (path, _), new_leaf in zip(flat, out):
-        set_path(base, path, new_leaf)
+        _set_path(base, path, new_leaf)
+    return base
+
+
+def _materialize_packed_per_layer(params, cfg, bits: list[int], parent):
+    """Packed Mix'n'Match tier: per-layer packed planes, layers unstacked.
+
+    `params['layers']` becomes a list of L per-layer subtrees (packed
+    plane shapes depend on each layer's r); every other leaf keeps its
+    place. Scoped leaves outside the stack serve at max(bits)."""
+    qcfg = cfg.quant
+    L = cfg.num_layers
+    if len(bits) != L:
+        raise ValueError(f"per-layer bits {bits} must have one entry per "
+                         f"layer ({L})")
+    base = _deep_copy_containers(params)
+    layers = base.get("layers")
+    if not isinstance(layers, dict):
+        raise NotImplementedError(
+            "packed Mix'n'Match tiers need a stacked 'layers' dict "
+            f"(family {cfg.family!r} stores layers differently)")
+    # unstack the layer stack into per-layer subtrees, skipping the
+    # leaves that become packed planes below (no point materializing L
+    # slices of the big weight stacks just to overwrite them)
+    replaced = {k for k in parent if k.startswith("['layers']")}
+
+    def unstack(path, a, l):
+        if "['layers']" + jax.tree_util.keystr(path) in replaced:
+            return None                    # placeholder, overwritten below
+        return a[l]
+
+    per = [jax.tree_util.tree_map_with_path(
+        lambda p, a: unstack(p, a, l), layers) for l in range(L)]
+    b_shared = max(bits)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = jax.tree_util.keystr(path)
+        pl = parent.get(key)
+        names = _path_names(path)
+        if pl is None:
+            if not _scoped(path, qcfg):
+                continue
+            if names[0] == "layers" and leaf.ndim >= 3:
+                # stacked scoped leaf with no parent: dequantize each
+                # layer at ITS OWN bits[l], matching the dequantized
+                # Mix'n'Match tier (materialize_served_params)
+                warnings.warn(
+                    f"packed tier: scoped projection {key} has no packed "
+                    f"parent plane; serving it dequantized at the "
+                    f"per-layer bits so the tier's quality numbers do "
+                    f"not silently include full-precision weights",
+                    stacklevel=2)
+                _, group_axis = _leaf_group_axis(names, leaf)
+                for l in range(L):
+                    qd_l = quant.quant_dequant(
+                        leaf[l], qcfg.parent_bits, bits[l],
+                        axis=group_axis - 1)
+                    _set_path(per[l], path[1:], qd_l.astype(leaf.dtype))
+            else:
+                _set_path(base, path,
+                          _dequant_fallback(path, leaf, cfg, b_shared))
+            continue
+        # ... then swap each scoped stacked leaf for its layer's plane
+        if names[0] == "layers" and leaf.ndim >= 3:
+            for l in range(L):
+                _set_path(per[l], path[1:],
+                          pl.layer(l).materialize_plane(bits[l]))
+        else:
+            _set_path(base, path, pl.materialize_plane(b_shared))
+    base["layers"] = per
     return base
 
 
@@ -219,8 +348,7 @@ def served_weight_nbytes(params, cfg) -> tuple[int, int]:
             if names[-1] == "words":
                 plane += nb
             continue
-        kind = quantized_leaf_kind(path)
-        if kind == "ffn" or (kind == "attn" and "attn" in qcfg.scope):
+        if _scoped(path, qcfg):
             nb = leaf.size * leaf.dtype.itemsize
             plane += nb
             total += nb
@@ -239,26 +367,38 @@ def _deep_copy_containers(tree):
 
 def packed_axes(axes_tree, params_packed, cfg):
     """Logical-axes tree matching `materialize_packed_params` output:
-    wherever the packed params carry {'words','alpha','beta'}, the axes
-    leaf {'w': (..., a_in, a_out)} becomes the packed trio sharded on
-    a_out (the packed reduction dim stays unsharded)."""
+    wherever the packed params carry a PackedPlane, the axes leaf
+    {'w': (..., a_in, a_out)} becomes a PackedPlane of specs sharded on
+    a_out (the packed dim stays unsharded; N-packed down/wo planes keep
+    their a_in shard instead). Per-layer Mix'n'Match params store
+    'layers' as a list; the stacked axes subtree is replayed per layer
+    with the leading 'layer' axis dropped."""
+    from repro.core import packing
+
+    def drop_layer(t):
+        return t[1:] if t and t[0] == "layer" else t
 
     def walk(ax_node, p_node, path):
-        if isinstance(p_node, dict) and "words" in p_node:
+        if isinstance(p_node, packing.PackedPlane):
             # ax_node is the original 'w' spec tuple (..., a_in, a_out)
             spec = tuple(ax_node)
             rest, a_in, a_out = spec[:-2], spec[-2], spec[-1]
-            # path ends with the 'w' key; the projection name precedes it
-            proj = path[-2] if len(path) >= 2 else ""
-            if proj in ("down", "wo"):        # packed along N: keep K shard
+            if p_node.pack_axis in (-1, 1):   # packed along N: keep K shard
                 words = rest + (a_in, None)
             else:                             # packed along K: keep N shard
                 words = rest + (None, a_out)
             scales = rest + (None, a_out)
-            return {"words": words, "alpha": scales, "beta": scales}
+            return packing.PackedPlane(
+                words=words, alpha=scales, beta=scales,
+                bits=p_node.bits, pack_axis=p_node.pack_axis)
         if isinstance(p_node, dict):
             return {k: walk(ax_node[k], p_node[k], path + [k]) for k in p_node}
         if isinstance(p_node, list):
+            if isinstance(ax_node, dict):     # per-layer params, stacked axes
+                ax_l = jax.tree.map(drop_layer, ax_node,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+                return [walk(ax_l, v, path + [i])
+                        for i, v in enumerate(p_node)]
             return [walk(a, v, path + [i])
                     for i, (a, v) in enumerate(zip(ax_node, p_node))]
         return ax_node
@@ -303,24 +443,29 @@ class Engine:
                 "quant_matmul path is unavailable; serving dequantized "
                 "weights instead", stacklevel=2)
             use_packed = False
-        if use_packed and (not isinstance(serve_cfg.bits, int)
-                           or serve_cfg.extra_precision):
+        if use_packed and serve_cfg.extra_precision:
             warnings.warn(
-                "ServeConfig.use_packed supports uniform integer bits "
-                "without extra_precision; serving dequantized weights "
-                "instead", stacklevel=2)
+                "ServeConfig.use_packed does not support extra_precision; "
+                "serving dequantized weights instead", stacklevel=2)
             use_packed = False
         self.packed = use_packed
+        bits = serve_cfg.bits
+        # hashable representation key: int (uniform) / tuple (Mix'n'Match)
+        self._packed_key = (bits if isinstance(bits, int)
+                            else tuple(int(b) for b in bits)) if use_packed \
+            else None
         if use_packed:
             cfg = cfg.replace(quant=dataclasses.replace(
-                cfg.quant, packed_bits=serve_cfg.bits,
+                cfg.quant,
+                packed_bits=bits if isinstance(bits, int) else 0,
                 # the Pallas kernel itself only pays off where it
                 # compiles; elsewhere packed planes run the jnp twin
                 packed_kernel=jax.default_backend() == "tpu"))
-            self.params = materialize_packed_params(params, cfg, serve_cfg.bits)
+            self.params = materialize_packed_params(
+                params, cfg, bits if isinstance(bits, int) else list(bits))
         else:
             self.params = materialize_served_params(
-                params, cfg, serve_cfg.bits, serve_cfg.extra_precision)
+                params, cfg, bits, serve_cfg.extra_precision)
         self.cfg = cfg
         self._decode = jax.jit(
             lambda p, st, tok, pos: api.decode_step(p, st, tok, pos, cfg, bits=None)
@@ -348,11 +493,12 @@ class Engine:
         serves this engine's fixed tier (packed or dequantized).
 
         `packed` (elastic only; defaults to this engine's use_packed
-        resolution) materializes uniform-int tiers as packed r-bit
-        planes -- a router downgrade then swaps the plane the kernel
-        reads, cutting HBM weight bytes 2x per step, with one compiled
-        prefill/decode closure per bitwidth. Mix'n'Match tiers fall back
-        to dequantized weights behind the same TierCache.get interface.
+        resolution) materializes every tier as packed r-bit planes -- a
+        router downgrade then swaps the plane the kernel reads, cutting
+        HBM weight bytes per step, with one compiled prefill/decode
+        closure per representation key (the bitwidth for uniform tiers,
+        the per-layer bits tuple for Mix'n'Match tiers, whose layers are
+        served as per-layer packed planes).
         """
         from repro.serve import router as router_mod
         from repro.serve import scheduler as sched_mod
@@ -384,21 +530,22 @@ class Engine:
                 # this engine's fixed tier is already materialized --
                 # seed the cache instead of re-quantizing a second copy
                 # (only when the stored representation matches what the
-                # cache would build for that tier)
+                # cache would build for that tier; with packed=True every
+                # tier -- uniform or Mix'n'Match -- is packed)
                 tb = tier.bits if isinstance(tier.bits, int) else tuple(tier.bits)
                 if tb != own:
                     continue
-                tier_packed = packed and isinstance(tier.bits, int)
-                if tier_packed == self.packed:
+                if packed == self.packed:
                     cache.seed(tier, self.params,
-                               packed_bits=own if self.packed else None)
+                               packed_bits=self._packed_key)
             return sched_mod.ContinuousBatchingScheduler(
                 None, self.cfg,
                 router=router_mod.ElasticPrecisionRouter(
                     tiers, thresholds, cooldown=cooldown),
                 tier_cache=cache,
                 **kw)
-        return sched_mod.ContinuousBatchingScheduler(self.params, self.cfg, **kw)
+        return sched_mod.ContinuousBatchingScheduler(
+            self.params, self.cfg, packed_bits=self._packed_key, **kw)
 
     def _batch_scheduler(self, B: int, max_len: int):
         # keep only the latest shape: each cached scheduler pins a full
@@ -417,16 +564,20 @@ class Engine:
         """prompts: (B, S) int32 -> (B, num_tokens) greedy continuation.
 
         Routed through the continuous-batching scheduler as the
-        all-arrive-at-once special case; families whose rows couple
-        through the batch (MoE expert capacity) or need per-request
-        extras keep the legacy fixed-batch loop.
+        all-arrive-at-once special case (dense / vlm / moe -- MoE
+        dispatch is row-local, see `ffn.apply_moe`, so slot rows never
+        couple and the scheduler path matches the legacy loop here,
+        where every prompt shares one length; mixed-length MoE traffic
+        sees the intra-row padding caveat in the scheduler module doc);
+        requests needing per-request extras keep the legacy fixed-batch
+        loop.
 
         The whole batch is admitted in one step, so admission costs one
         bucketed prefill per prompt-length bucket (a single call here,
         where every prompt shares one length) -- same launch count as
         `generate_legacy`, which remains the equivalence oracle.
         """
-        if extras or self.cfg.family not in ("dense", "vlm"):
+        if extras or self.cfg.family not in ("dense", "vlm", "moe"):
             return self.generate_legacy(prompts, num_tokens, extras)
         import numpy as np
         from repro.serve.scheduler import Request

@@ -19,17 +19,20 @@ the scheduler can flip tiers between two decode steps. Two layouts:
   * dequantized (packed=False): every tier shares one pytree structure
     and dtype, so ONE jitted decode step serves all tiers with no
     recompile on a switch.
-  * packed (packed=True): uniform-int tiers become packed r-bit planes
+  * packed (packed=True): every tier becomes packed r-bit planes
     sliced from a single pre-packed int8 parent
     (`engine.build_packed_parent` + `PackedLinear.materialize`) -- the
     representation the Pallas kernel actually reads, so a downgrade
-    cuts HBM weight bytes 2x per step. Packed plane shapes depend on
-    the bitwidth, so the scheduler keeps one compiled step per packed
-    bitwidth (lazily warmed, cached by `TierEntry.packed_bits`);
-    Mix'n'Match tiers fall back to the dequantized layout behind the
-    same `get` interface.
+    cuts HBM weight bytes per step. Uniform-int tiers keep stacked
+    planes (incl. MoE expert stacks, consumed batched-over-experts);
+    Mix'n'Match tiers store per-layer planes, each layer sliced at its
+    own r (layers unstacked into a list -- plane shapes depend on r).
+    Packed plane shapes depend on the representation, so the scheduler
+    keeps one compiled step per `TierEntry.packed_bits` key (an int for
+    uniform tiers, the per-layer bits tuple for Mix'n'Match; lazily
+    warmed, a dict lookup on revisit).
 
-`get` returns a `TierEntry` carrying the params, the packed bitwidth
+`get` returns a `TierEntry` carrying the params, the packed key
 (None on the dequantized path) and measured weight bytes, so the
 scheduler/benchmarks report the bytes claim instead of asserting it.
 """
@@ -124,17 +127,20 @@ class ElasticPrecisionRouter:
 class TierEntry:
     """One materialized, servable tier.
 
-    packed_bits: the static bitwidth of the packed planes (selects the
-      scheduler's compiled closure), or None for the dequantized layout.
+    packed_bits: hashable key of the packed representation (selects the
+      scheduler's compiled closure): the static bitwidth for a uniform
+      tier, the per-layer bits TUPLE for a packed Mix'n'Match tier, or
+      None for the dequantized layout.
     packed_nbytes: bytes of the sliced weight planes as served -- the
-      HBM weight traffic of one decode step, 2x smaller per packed tier
-      step down (int8 -> int4 -> int2).
+      HBM weight traffic of one decode step, shrinking with the tier's
+      per-layer bit sum (2x per uniform step down int8 -> int4 -> int2,
+      in between for Mix'n'Match).
     weight_nbytes: packed_nbytes plus the tier-independent per-channel
       scales (alpha/beta).
     """
     name: str
     params: object = dataclasses.field(repr=False)
-    packed_bits: int | None = None
+    packed_bits: int | tuple[int, ...] | None = None
     packed_nbytes: int = 0
     weight_nbytes: int = 0
 
@@ -142,10 +148,11 @@ class TierEntry:
 class TierCache:
     """Lazily materialized served params per tier, keyed by tier name.
 
-    packed=True serves uniform-int tiers as packed r-bit planes sliced
-    from one pre-packed int8 parent (built once, on first use); per-layer
-    Mix'n'Match tiers fall back to dequantized weights behind the same
-    `get` interface. `get` returns a TierEntry.
+    packed=True serves EVERY tier as packed r-bit planes sliced from
+    one pre-packed int8 parent (built once, on first use): uniform-int
+    tiers as stacked planes, per-layer Mix'n'Match tiers as per-layer
+    planes (each layer at its own r, layers unstacked into a list).
+    `get` returns a TierEntry.
     """
 
     def __init__(self, parent_params, cfg, *, extra_precision: bool = False,
@@ -170,14 +177,16 @@ class TierCache:
 
     def get(self, tier: PrecisionTier) -> TierEntry:
         if tier.name not in self._cache:
-            if self.packed and isinstance(tier.bits, int):
+            if self.packed:
                 if self._packed_parent is None:
                     self._packed_parent = self._engine.build_packed_parent(
                         self.parent_params, self.cfg)
+                uniform = isinstance(tier.bits, int)
                 params = self._engine.materialize_packed_params(
-                    self.parent_params, self.cfg, tier.bits,
+                    self.parent_params, self.cfg,
+                    tier.bits if uniform else list(tier.bits),
                     parent=self._packed_parent)
-                packed_bits = tier.bits
+                packed_bits = tier.bits if uniform else tuple(tier.bits)
             else:
                 bits = (tier.bits if isinstance(tier.bits, int)
                         else list(tier.bits))
@@ -187,7 +196,7 @@ class TierCache:
             self._cache[tier.name] = self._entry(tier, params, packed_bits)
         return self._cache[tier.name]
 
-    def seed(self, tier: PrecisionTier, params, packed_bits: int | None = None):
+    def seed(self, tier: PrecisionTier, params, packed_bits=None):
         """Adopt already-materialized served params for `tier` (e.g. the
         engine's own fixed tier) instead of building a second copy."""
         self._cache[tier.name] = self._entry(tier, params, packed_bits)

@@ -40,9 +40,14 @@ Single-batch equivalence: with every request admitted at step 0 at the
 same prompt length and a fixed tier, the per-slot math is identical to
 the legacy fixed-batch `Engine.generate` loop (same prefill, same
 per-position decode attention), so outputs are token-identical for
-batch-independent families (dense/vlm; MoE couples rows through expert
-capacity -- for MoE, batched admission and padding rows can additionally
-perturb expert-capacity buckets, see the constructor warning).
+dense/vlm/moe -- MoE expert dispatch is row-local (per-row sort +
+capacity in ffn.apply_moe), so slot garbage and admission padding ROWS
+never couple into active rows. One MoE caveat remains for mixed-length
+traffic: bucketed admission right-pads each prompt to its bucket, and a
+row's pad tokens compete inside that row's own expert-capacity buckets
+(capacity is computed from the padded length), so under a tight
+capacity_factor a padded row can drop real tokens that an unpadded
+prefill would have kept.
 """
 
 from __future__ import annotations
@@ -50,7 +55,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -134,19 +138,17 @@ class ContinuousBatchingScheduler:
                  total_pages: int | None = None,
                  router: ElasticPrecisionRouter | None = None,
                  tier_cache: TierCache | None = None,
+                 packed_bits=None,
                  clock=time.perf_counter):
         if cfg.family not in ("dense", "vlm", "moe"):
             raise NotImplementedError(
                 f"continuous batching needs an attention KV cache; "
                 f"family {cfg.family!r} is not slot-addressable")
-        if cfg.family == "moe":
-            warnings.warn(
-                "continuous batching over a MoE family: slot rows share "
-                "expert-capacity buckets, so garbage tokens in free slots "
-                "(and padding rows of a batched admission) can perturb "
-                "active requests' routing unless capacity_factor is high "
-                "enough to avoid drops",
-                stacklevel=2)
+        # MoE is safe here: expert dispatch is ROW-LOCAL (per-row sort +
+        # capacity in ffn.apply_moe), so garbage tokens in free slots and
+        # padding rows of a batched admission never perturb other rows'
+        # routing. Only intra-row prompt padding can shift a row's own
+        # capacity buckets, and only when capacity_factor is tight.
         if router is not None and tier_cache is None:
             raise ValueError("router requires a tier_cache")
         self.cfg = cfg
@@ -160,9 +162,10 @@ class ContinuousBatchingScheduler:
         self.capacity = self.pool.slot_capacity
         self.num_slots = num_slots
         # one (prefill, decode) jitted closure pair per served weight
-        # representation: key = packed bitwidth (int) or None for
-        # dequantized params. Lazily built, kept across reset().
-        self._fns: dict[int | None, dict] = {}
+        # representation: key = packed bitwidth (int), a per-layer bits
+        # tuple (packed Mix'n'Match), or None for dequantized params.
+        # Lazily built, kept across reset().
+        self._fns: dict[object, dict] = {}
         self.prefill_calls = 0          # jitted prefill launches (O(#buckets)
                                         # per admission burst, not O(N))
         if router is not None:
@@ -171,7 +174,8 @@ class ContinuousBatchingScheduler:
             assert params is not None
             self.tier = None
             self.params = params
-            self.packed_bits = cfg.quant.packed_bits or None
+            self.packed_bits = (packed_bits if packed_bits is not None
+                                else cfg.quant.packed_bits or None)
         self.state = api.init_state(cfg, num_slots, self.capacity)
         self.pos = np.zeros((num_slots,), np.int32)
         self.queue: collections.deque[Request] = collections.deque()
@@ -181,14 +185,16 @@ class ContinuousBatchingScheduler:
 
     # -- per-representation compiled closures -------------------------------
 
-    def _step_fns(self, key: int | None) -> dict:
+    def _step_fns(self, key) -> dict:
         """(prefill, decode) jitted closures for one weight representation.
 
-        `key` is the packed bitwidth serving right now (None =
-        dequantized). The bitwidth is baked statically into the closure's
-        cfg (qlinear unpacks with it), so each packed tier gets its own
-        compile -- warmed on first visit, reused forever after; switching
-        back to an already-visited bitwidth never recompiles.
+        `key` is the packed representation serving right now: a bitwidth
+        int for a uniform tier, the per-layer bits tuple for a packed
+        Mix'n'Match tier, None for dequantized. The bitwidths themselves
+        ride statically on each PackedPlane, so each packed tier gets its
+        own compile -- warmed on first visit, reused forever after;
+        switching back to an already-visited representation never
+        recompiles.
         """
         fns = self._fns.get(key)
         if fns is not None:
@@ -196,7 +202,8 @@ class ContinuousBatchingScheduler:
         cfg = self.cfg
         if key:
             qc = dataclasses.replace(
-                cfg.quant, packed_bits=key,
+                cfg.quant,
+                packed_bits=key if isinstance(key, int) else 0,
                 # the Pallas kernel where it compiles; jnp twin elsewhere
                 packed_kernel=(cfg.quant.packed_kernel
                                or jax.default_backend() == "tpu"))

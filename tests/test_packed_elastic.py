@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.packing import PackedPlane
 from repro.models import api
 from repro.serve import (Engine, Request, ServeConfig, TierCache,
                          default_tiers, materialize_packed_params,
@@ -57,7 +58,7 @@ def test_packed_decode_step_matches_dequant_on_interpret_kernel(served, bits):
                                   np.asarray(jnp.argmax(ld, -1)))
 
 
-def test_tier_cache_packed_bytes_halve_and_mnm_falls_back(served):
+def test_tier_cache_packed_bytes_halve_and_mnm_packs_per_layer(served):
     params, cfg, _ = served
     cache = TierCache(params, cfg, packed=True)
     e8 = cache.get(_tier(cfg, "int8"))
@@ -68,14 +69,18 @@ def test_tier_cache_packed_bytes_halve_and_mnm_falls_back(served):
     assert (e8.packed_bits, e4.packed_bits, e2.packed_bits) == (8, 4, 2)
     # packed planes really replaced the scoped projections
     up = e4.params["layers"]["ffn"]["up"]["w"]
-    assert set(up) == {"words", "alpha", "beta"}
-    # Mix'n'Match (per-layer bits) falls back to the dequantized layout
-    # behind the same get() interface
+    assert isinstance(up, PackedPlane) and up.bits == 4
+    # Mix'n'Match (per-layer bits) serves PER-LAYER packed planes behind
+    # the same get() interface: layers unstacked, layer l at bits[l],
+    # plane bytes between the uniform tiers per the per-layer bit sum
     mnm = next(t for t in default_tiers(cfg.num_layers)
                if not isinstance(t.bits, int))
     em = cache.get(mnm)
-    assert em.packed_bits is None
-    assert not isinstance(em.params["layers"]["ffn"]["up"]["w"], dict)
+    assert em.packed_bits == tuple(mnm.bits)
+    for l, b in enumerate(mnm.bits):
+        plane = em.params["layers"][l]["ffn"]["up"]["w"]
+        assert isinstance(plane, PackedPlane) and plane.bits == b
+    assert e8.packed_nbytes > em.packed_nbytes > e2.packed_nbytes
     # cached: a second get is the same entry
     assert cache.get(_tier(cfg, "int4")) is e4
 

@@ -1,0 +1,283 @@
+"""Packed planes for MoE expert stacks and Mix'n'Match tiers, plus the
+N-packed serving-path fixes: serve_linear honors the pack axis, packed
+MoE decode equals the dequantized oracle through the expert-batched
+interpret kernel, packed MnM tiers switch mid-flight without recompiles,
+and per-tier packed bytes match the per-layer analytic sum."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import packing, quant
+from repro.core.packing import PackedLinear, PackedPlane
+from repro.kernels import ops
+from repro.models import api
+from repro.serve import (Engine, Request, ServeConfig, TierCache,
+                         default_tiers, materialize_packed_params)
+from repro.serve.engine import build_packed_parent
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def moe_served():
+    cfg = get_config("granite_moe_1b_a400m").reduced()
+    params = api.init(KEY, cfg)
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=4,
+                                          page_size=8))
+    return params, cfg, eng
+
+
+def _prompts(cfg, B, S, seed):
+    return jax.random.randint(jax.random.fold_in(KEY, seed), (B, S), 0,
+                              cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# N-packed serving path (serve_linear / plane_matmul / packed_nbytes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_n_packed_serve_linear_matches_dequant_oracle(bits):
+    """serve_linear on a pack_axis=-1 parent equals the dequant oracle;
+    quant_matmul alone would read the (k, ceil(n/cpw)) words as K-packed."""
+    k, n = 48, 40
+    w = jax.random.normal(KEY, (k, n), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (3, k), jnp.float32)
+    pl = PackedLinear.from_weights(w, pack_axis=-1)
+    y = ops.serve_linear(x, pl, bits)
+    ref = x @ quant.quant_dequant(w, 8, bits, axis=0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_n_packed_serve_linear_extra_precision_matches_oracle():
+    k, n = 32, 24
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (k, n), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (2, k), jnp.float32)
+    pl = PackedLinear.from_weights(w, pack_axis=-1)
+    y = ops.serve_linear(x, pl, 2, extra_precision=True)
+    ref = x @ quant.quant_dequant(w, 8, 2, axis=0, extra_precision=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_plane_matmul_uses_explicit_pack_axis_not_shape_heuristic():
+    """A square N-packed plane (k == n) defeats any shape guess; the
+    explicit pack_axis carried on PackedPlane routes it correctly."""
+    k = n = 32
+    bits = 4
+    w = jax.random.normal(jax.random.fold_in(KEY, 4), (k, n), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 5), (2, k), jnp.float32)
+    ref = x @ quant.quant_dequant(w, 8, bits, axis=0)
+    for pack_axis in (-2, -1):
+        plane = PackedLinear.from_weights(w, pack_axis=pack_axis) \
+            .materialize_plane(bits)
+        assert plane.pack_axis == pack_axis
+        y = ops.plane_matmul(x, plane, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_packed_nbytes_honors_pack_axis():
+    """The roofline byte count matches the actual word-array size on
+    both axes, including ragged (non-multiple-of-cpw) packed dims."""
+    k, n, bits = 5, 6, 4           # cpw = 8: both dims ragged
+    codes = jnp.zeros((k, n), jnp.int32)
+    for axis, pack_axis in ((0, -2), (1, -1)):
+        words = packing.pack_codes(codes, bits, axis=axis)
+        assert packing.packed_nbytes(k, n, bits, pack_axis) == \
+            words.size * words.dtype.itemsize
+    # K-packed default unchanged
+    assert packing.packed_nbytes(k, n, bits) == \
+        packing.packed_nbytes(k, n, bits, -2)
+
+
+# ---------------------------------------------------------------------------
+# packed MoE expert stacks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_moe_packed_decode_matches_dequant_on_interpret_kernel(moe_served, bits):
+    """Packed expert-stack decode (expert-batched Pallas kernel in
+    interpret mode for up/gate, jnp twin for the N-packed down) equals
+    the dequantized fake-quant decode step."""
+    params, cfg, _ = moe_served
+    cfg_k = cfg.replace(quant=dataclasses.replace(
+        cfg.quant, packed_bits=bits, packed_kernel=True))
+    pp = materialize_packed_params(params, cfg_k, bits)
+    up = pp["layers"]["moe"]["up"]["w"]
+    down = pp["layers"]["moe"]["down"]["w"]
+    assert isinstance(up, PackedPlane) and up.pack_axis == -2
+    assert isinstance(down, PackedPlane) and down.pack_axis == -1
+    assert up.words.ndim == 4      # (L, E, ceil(k/cpw), n) expert stacks
+    from repro.serve.engine import materialize_served_params
+    sp = materialize_served_params(params, cfg, bits)
+    state = api.init_state(cfg, 2, 16)
+    tok = _prompts(cfg, 2, 1, seed=bits)
+    pos = jnp.asarray([3, 7], jnp.int32)
+    lk, _ = api.decode_step_slots(pp, state, tok, pos, cfg_k, bits=None)
+    ld, _ = api.decode_step_slots(sp, state, tok, pos, cfg, bits=None)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(ld),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(lk, -1)),
+                                  np.asarray(jnp.argmax(ld, -1)))
+
+
+def test_moe_generate_routes_through_scheduler_and_matches_legacy(moe_served):
+    """MoE no longer detours to generate_legacy: the scheduler path is
+    token-identical (row-local dispatch, ample reduced capacity)."""
+    params, cfg, eng = moe_served
+    prompts = _prompts(cfg, 3, 8, seed=6)
+    out = np.asarray(eng.generate(prompts, 5))
+    assert eng._schedulers                     # scheduler path was taken
+    legacy = np.asarray(eng.generate_legacy(prompts, 5))
+    np.testing.assert_array_equal(out, legacy)
+
+
+def test_packed_parent_covers_moe_and_serves_no_raw_expert(moe_served):
+    """Every scoped MoE projection has a packed parent plane, and the
+    packed tier contains no raw bf16 expert stack (the old silent
+    unquantized-expert hole)."""
+    params, cfg, _ = moe_served
+    parent = build_packed_parent(params, cfg)
+    assert any("moe" in k and "up" in k for k in parent)
+    assert any("moe" in k and "down" in k for k in parent)
+    pp = materialize_packed_params(params, cfg, 4, parent=parent)
+    for proj in ("up", "gate", "down"):
+        assert isinstance(pp["layers"]["moe"][proj]["w"], PackedPlane)
+
+
+def test_scoped_leaf_without_parent_serves_dequantized_and_warns(moe_served):
+    """Satellite guard: a scoped projection missing from the packed
+    parent is materialized dequantized at the tier's bits (with a
+    warning), never raw bf16 -- and the resulting MIXED-representation
+    MoE layer (dequantized up, packed gate/down) still decodes, equal to
+    the fully dequantized tier (apply_moe dispatches per projection)."""
+    params, cfg, _ = moe_served
+    parent = build_packed_parent(params, cfg)
+    dropped = next(k for k in parent if "moe" in k and "up" in k)
+    parent = {k: v for k, v in parent.items() if k != dropped}
+    cfg_k = cfg.replace(quant=dataclasses.replace(
+        cfg.quant, packed_bits=2, packed_kernel=True))
+    with pytest.warns(UserWarning, match="no packed parent"):
+        pp = materialize_packed_params(params, cfg_k, 2, parent=parent)
+    served = pp["layers"]["moe"]["up"]["w"]
+    raw = params["layers"]["moe"]["up"]["w"]
+    assert not isinstance(served, PackedPlane)
+    assert isinstance(pp["layers"]["moe"]["gate"]["w"], PackedPlane)
+    ref = quant.quant_dequant(raw, cfg.quant.parent_bits, 2, axis=2)
+    np.testing.assert_allclose(np.asarray(served), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    from repro.serve.engine import materialize_served_params
+    sp = materialize_served_params(params, cfg, 2)
+    state = api.init_state(cfg, 2, 16)
+    tok = _prompts(cfg, 2, 1, seed=12)
+    pos = jnp.asarray([3, 7], jnp.int32)
+    lk, _ = api.decode_step_slots(pp, state, tok, pos, cfg_k, bits=None)
+    ld, _ = api.decode_step_slots(sp, state, tok, pos, cfg, bits=None)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(ld),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_per_layer_fallback_matches_dequant_mnm_tier(moe_served):
+    """The per-layer dequant fallback applies bits[l] per layer, exactly
+    like the dequantized Mix'n'Match tier -- not a uniform max(bits)."""
+    params, cfg, _ = moe_served
+    parent = build_packed_parent(params, cfg)
+    dropped = next(k for k in parent if "moe" in k and "up" in k)
+    parent = {k: v for k, v in parent.items() if k != dropped}
+    bits = [2, 4]
+    with pytest.warns(UserWarning, match="no packed parent"):
+        pp = materialize_packed_params(params, cfg, bits, parent=parent)
+    from repro.serve.engine import materialize_served_params
+    sp = materialize_served_params(params, cfg, bits)
+    for l in range(len(bits)):
+        served = pp["layers"][l]["moe"]["up"]["w"]
+        assert not isinstance(served, PackedPlane)
+        np.testing.assert_allclose(
+            np.asarray(served),
+            np.asarray(sp["layers"]["moe"]["up"]["w"][l]),
+            rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# packed Mix'n'Match tiers: mid-flight switching, no recompile on revisit
+# ---------------------------------------------------------------------------
+
+
+def _drive(sched, cfg, indices, gen_extra=1):
+    rng = np.random.default_rng(11)
+    for i in range(2):
+        sched.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                             max_new_tokens=len(indices) + gen_extra))
+    for idx in indices:
+        sched.router.index = idx
+        sched.step()
+    sched.router.index = 0
+    return sched.run_until_idle()
+
+
+def test_mnm_packed_tier_switch_no_recompile_and_exact(moe_served):
+    """A packed Mix'n'Match tier serves mid-flight like any uniform
+    tier: one lazily-warmed compiled closure keyed by the per-layer bits
+    tuple, reused on revisit, token-identical to the dequantized path --
+    on the MoE config, so expert stacks switch precision too."""
+    params, cfg, eng = moe_served
+    mnm = next(t for t in default_tiers(cfg.num_layers)
+               if not isinstance(t.bits, int))
+    switches = [0, 2, 3, 2, 0]             # int8 -> mnm -> int2 -> mnm ...
+    sp = eng.scheduler(elastic=True, packed=True, cooldown=10_000)
+    sd = eng.scheduler(elastic=True, packed=False, cooldown=10_000)
+    rp = _drive(sp, cfg, switches)
+    rd = _drive(sd, cfg, switches)
+    for uid in rd:
+        np.testing.assert_array_equal(rp[uid], rd[uid])
+    key = tuple(mnm.bits)
+    assert key in sp._fns and set(sd._fns) == {None}
+    # revisiting the MnM tier reused its closure: exactly one compile
+    assert sp._fns[key]["decode"]._cache_size() == 1
+    # and the MnM tier really served per-layer packed planes
+    em = sp.tier_cache.get(mnm)
+    assert em.packed_bits == key
+    assert isinstance(em.params["layers"], list)
+
+
+# ---------------------------------------------------------------------------
+# per-tier packed bytes == per-layer analytic sum
+# ---------------------------------------------------------------------------
+
+
+def _expected_tier_nbytes(cfg, bits_per_layer):
+    """Sum packing.packed_nbytes over layers x projections (x experts)."""
+    d, f = cfg.d_model, cfg.d_ff
+    E = cfg.num_experts or 1
+    total = 0
+    for b in bits_per_layer:
+        per_proj = (packing.packed_nbytes(d, f, b, -2) * 2 +   # up, gate
+                    packing.packed_nbytes(f, d, b, -1))        # down (N-packed)
+        total += E * per_proj
+    return total
+
+
+@pytest.mark.parametrize("arch", ["granite_moe_1b_a400m", "qwen3_1_7b"])
+def test_per_tier_packed_nbytes_match_per_layer_sum(arch):
+    cfg = get_config(arch).reduced()
+    params = api.init(KEY, cfg)
+    cache = TierCache(params, cfg, packed=True)
+    entries = {t.name: (cache.get(t), t) for t in default_tiers(cfg.num_layers)}
+    for name, (entry, tier) in entries.items():
+        bits = ([tier.bits] * cfg.num_layers if isinstance(tier.bits, int)
+                else list(tier.bits))
+        assert entry.packed_nbytes == _expected_tier_nbytes(cfg, bits), name
+    # strictly decreasing per the per-layer bit sum: int8 > int4 > mnm > int2
+    ordered = [e.packed_nbytes for e, t in
+               sorted(entries.values(),
+                      key=lambda et: -et[1].effective_bits)]
+    assert all(a > b for a, b in zip(ordered, ordered[1:]))

@@ -54,13 +54,13 @@ def test_packed_down_projection_packs_along_n():
     up = pp["layers"]["ffn"]["up"]["w"]
     down = pp["layers"]["ffn"]["down"]["w"]
     K, N = cfg.d_model, cfg.d_ff
-    assert up["words"].shape[-2] * 8 == K          # packed along K
-    assert down["words"].shape[-2] == N            # packed along N
+    assert up.words.shape[-2] * 8 == K             # packed along K
+    assert down.words.shape[-2] == N               # packed along N
     ax = packed_axes(api.axes(cfg), jax.eval_shape(
         lambda k: materialize_packed_params(api.init(k, cfg_p), cfg_p, 4), KEY),
         cfg_p)
-    assert ax["layers"]["ffn"]["down"]["w"]["words"][-2] == "mlp"
-    assert ax["layers"]["ffn"]["up"]["w"]["words"][-1] == "mlp"
+    assert ax["layers"]["ffn"]["down"]["w"].words[-2] == "mlp"
+    assert ax["layers"]["ffn"]["up"]["w"].words[-1] == "mlp"
 
 
 def test_packed_bytes_shrink_with_bits():

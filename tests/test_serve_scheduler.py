@@ -272,8 +272,9 @@ def test_use_packed_routes_through_packed_planes(served, monkeypatch):
                                               use_packed=True))
     assert eng.packed and eng.cfg.quant.packed_bits == 4
     # scoped dense projections became packed planes
+    from repro.core.packing import PackedPlane
     w = eng.params["layers"]["ffn"]["up"]["w"]
-    assert set(w) == {"words", "alpha", "beta"}
+    assert isinstance(w, PackedPlane) and w.bits == 4
     # generate/score run through the packed qlinear path and agree with
     # the dequantized engine
     ref = Engine(params, cfg, ServeConfig(bits=4, max_len=24))
@@ -284,12 +285,33 @@ def test_use_packed_routes_through_packed_planes(served, monkeypatch):
     assert abs(eng.score(prompts, labels) - ref.score(prompts, labels)) < 1e-2
 
 
-def test_use_packed_rejects_mixnmatch_bits(served, monkeypatch):
+def test_use_packed_serves_mixnmatch_bits_per_layer(served, monkeypatch):
+    """A per-layer bits vector no longer forces the dequantized detour:
+    the engine serves per-layer packed planes (layers unstacked)."""
+    from repro.core.packing import PackedPlane
     params, cfg, _ = served
     monkeypatch.setattr(engine_mod, "_packed_backend_ok", lambda: True)
-    with pytest.warns(UserWarning, match="uniform integer bits"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")             # no fallback warning
         eng = Engine(params, cfg, ServeConfig(bits=[8, 4], max_len=24,
                                               use_packed=True))
+    assert eng.packed and eng._packed_key == (8, 4)
+    assert isinstance(eng.params["layers"], list)
+    assert eng.params["layers"][1]["ffn"]["up"]["w"].bits == 4
+    ref = Engine(params, cfg, ServeConfig(bits=[8, 4], max_len=24))
+    prompts = _prompts(cfg, 2, 8, seed=11)
+    np.testing.assert_array_equal(np.asarray(eng.generate(prompts, 4)),
+                                  np.asarray(ref.generate(prompts, 4)))
+    assert isinstance(eng.params["layers"][0]["ffn"]["down"]["w"], PackedPlane)
+
+
+def test_use_packed_rejects_extra_precision(served, monkeypatch):
+    params, cfg, _ = served
+    monkeypatch.setattr(engine_mod, "_packed_backend_ok", lambda: True)
+    with pytest.warns(UserWarning, match="extra_precision"):
+        eng = Engine(params, cfg, ServeConfig(bits=4, max_len=24,
+                                              use_packed=True,
+                                              extra_precision=True))
     assert not eng.packed
 
 
