@@ -10,7 +10,8 @@ test:
 	python -m pytest -x -q
 
 # fast lane: everything not marked `slow` (includes the packed
-# MoE / Mix'n'Match serving regressions in tests/test_packed_moe_mnm.py)
+# MoE / Mix'n'Match / extra-precision serving regressions in
+# tests/test_packed_moe_mnm.py and tests/test_packed_ep.py)
 test-fast:
 	python -m pytest -x -q -m "not slow"
 
@@ -18,7 +19,8 @@ bench-serve:
 	python benchmarks/serve_throughput.py --reduced --out BENCH_serve.json
 
 lint:
-	python -m compileall -q src tests benchmarks examples
+	python -m compileall -q src tests benchmarks examples tools
 	@python -c "import pyflakes" 2>/dev/null \
-	    && python -m pyflakes src/repro tests benchmarks examples \
+	    && python -m pyflakes src/repro tests benchmarks examples tools \
 	    || echo "pyflakes not installed; ran syntax check only"
+	python tools/check_docs.py

@@ -9,19 +9,28 @@ scheduler changes show up as numbers.
 Runs reported side by side on the SAME trace:
 
   * elastic        -- router downgrades int8 -> int4 -> Mix'n'Match ->
-    int2 as the queue builds, recovers as it drains (dequantized tiers);
+    int2+ep -> int2 as the queue builds, recovers as it drains
+    (dequantized tiers);
   * fixed          -- int8 only (the quality-maximal baseline);
   * packed A/B     -- the same elastic replay twice, once over PACKED
     r-bit tier planes and once over dequantized tiers, with measured
     per-tier HBM weight bytes (`packed_nbytes`, shrinking per downgrade
-    step with the per-layer bit sum: int8 -> int4 -> Mix'n'Match ~3.3 ->
-    int2, every tier packed incl. the per-layer MnM planes) and tok/s --
-    the paper's Section 5.4 bytes claim as a reported number instead of
-    an assertion;
+    step with the per-layer bit sum) and tok/s -- the paper's Section
+    5.4 bytes claim as a reported number instead of an assertion;
   * MoE packed A/B -- the same packed-vs-dequant elastic replay on a
     granite_moe config (expert stacks served as per-expert packed
     planes), so the bytes claim also covers the MoE layout
-    (`packed_ab_moe` in BENCH_serve.json).
+    (`packed_ab_moe` in BENCH_serve.json);
+  * packed ep A/B  -- one PINNED-tier packed replay per ladder rung
+    (`packed_ab_ep`): per-tier tok/s next to the measured plane-bytes
+    staircase int8 > int4 > mnm > int2+ep > int2 and the Table-7
+    effective bits of each tier (int2+ep ~2.05: the Errata Eq. 8
+    overflow bitmap costs 1 stored bit/weight but only ~0.05
+    *effective* bits, served in-kernel).
+
+Reduced runs serve 4 layers (`--layers`) so the Mix'n'Match tier lands
+at 3.5 effective bits -- strictly between int4 and the int2+ep rung's
+3.0 stored bits/weight -- keeping the staircase strict.
 
   PYTHONPATH=src python benchmarks/serve_throughput.py --reduced
 """
@@ -37,7 +46,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models import api
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, Request, ServeConfig, ServeMetrics
 from repro.serve.scheduler import poisson_trace
 
 
@@ -48,8 +57,29 @@ def tier_bytes(sched) -> dict:
         e = sched.tier_cache.get(tier)
         out[tier.name] = {"packed_bits": e.packed_bits,
                           "packed_nbytes": e.packed_nbytes,
-                          "weight_nbytes": e.weight_nbytes}
+                          "weight_nbytes": e.weight_nbytes,
+                          "effective_bits": e.effective_bits}
     return out
+
+
+def _row_buckets(num_slots: int) -> list[int]:
+    """Admission-burst row buckets: powers of two up to AND covering
+    num_slots (a 5-admission burst on 6 slots pads to 8 rows, so that
+    shape needs warming too)."""
+    buckets = [1]
+    while buckets[-1] < num_slots:
+        buckets.append(buckets[-1] * 2)
+    return buckets
+
+
+def _pin_router(sched, index: int):
+    """Hold the router at `index`: thresholds at +inf keep the desired
+    index at 0 (< index, the calm branch) and the huge cooldown stops
+    the calm branch from ever recovering upward."""
+    sched.router.thresholds = (float("inf"),) * (len(sched.router.tiers) - 1)
+    sched.router.cooldown = 10**9
+    sched.router.index = index
+    sched._set_tier(sched.router.tier)
 
 
 def run_once(engine, cfg, args, *, elastic: bool, packed: bool | None = None):
@@ -59,27 +89,19 @@ def run_once(engine, cfg, args, *, elastic: bool, packed: bool | None = None):
                           prompt_len=args.prompt_len,
                           gen_tokens=args.gen_tokens,
                           rate=args.arrival_rate, seed=args.seed)
-    # warm the jitted prefill/decode closures (one per packed bitwidth
-    # for packed tiers; one prefill trace per admission-burst row
-    # bucket) and the tier materializations so the replay measures
-    # steady-state serving. Row buckets are powers of two up to AND
-    # covering num_slots (a 5-admission burst on 6 slots pads to 8
-    # rows, so that shape needs warming too).
-    row_buckets = [1]
-    while row_buckets[-1] < args.num_slots:
-        row_buckets.append(row_buckets[-1] * 2)
+    # warm the jitted prefill/decode closures (one per packed
+    # representation for packed tiers; one prefill trace per
+    # admission-burst row bucket) and the tier materializations so the
+    # replay measures steady-state serving.
     if elastic:
         # pin the router: warm bursts would otherwise raise the load
-        # signal and re-route mid-warm, leaving some (bitwidth, rows)
-        # closure shapes cold and compiling inside the timed replay
+        # signal and re-route mid-warm, leaving some (representation,
+        # rows) closure shapes cold and compiling inside the timed replay
         saved = (sched.router.thresholds, sched.router.cooldown)
-        sched.router.thresholds = (float("inf"),) * len(saved[0])
-        sched.router.cooldown = 10**9
     for tier_warm in range(len(sched.router.tiers) if elastic else 1):
         if elastic:
-            sched.router.index = tier_warm
-            sched._set_tier(sched.router.tier)
-        for rows in row_buckets:
+            _pin_router(sched, tier_warm)
+        for rows in _row_buckets(args.num_slots):
             for j in range(min(rows, args.num_slots)):
                 sched.submit(Request(uid=f"_warm{tier_warm}_{rows}_{j}",
                                      prompt=trace[0][1].prompt,
@@ -99,22 +121,70 @@ def run_once(engine, cfg, args, *, elastic: bool, packed: bool | None = None):
     return summary, per_tier
 
 
+def run_per_tier_packed(engine, cfg, args):
+    """`packed_ab_ep`: one pinned-tier packed replay per ladder rung.
+
+    Unlike the elastic A/B (which reports whatever tiers the router
+    visited), this serves the WHOLE trace at each tier of the packed
+    ladder, so every rung -- including the extra-precision int2+ep one
+    -- gets a throughput number next to its measured plane bytes and
+    Table-7 effective bits. Returns (per-tier dict in ladder order,
+    strictly-decreasing-bytes flag).
+    """
+    sched = engine.scheduler(elastic=True, thresholds=args.thresholds,
+                             cooldown=args.cooldown, packed=True)
+    trace = poisson_trace(cfg, requests=args.requests,
+                          prompt_len=args.prompt_len,
+                          gen_tokens=args.gen_tokens,
+                          rate=args.arrival_rate, seed=args.seed)
+    tiers = {}
+    for idx, tier in enumerate(sched.router.tiers):
+        sched.reset()
+        _pin_router(sched, idx)
+        for rows in _row_buckets(args.num_slots):      # warm this tier
+            for j in range(min(rows, args.num_slots)):
+                sched.submit(Request(uid=f"_warm{idx}_{rows}_{j}",
+                                     prompt=trace[0][1].prompt,
+                                     max_new_tokens=2))
+            sched.run_until_idle()
+        sched.results = {}                 # drop the warm-up requests
+        sched.metrics = ServeMetrics()
+        results = sched.run_trace(trace)
+        assert len(results) == args.requests
+        entry = sched.tier_cache.get(tier)
+        tiers[tier.name] = {
+            "packed_bits": entry.packed_bits,
+            "packed_nbytes": entry.packed_nbytes,
+            "weight_nbytes": entry.weight_nbytes,
+            "effective_bits": entry.effective_bits,
+            "throughput_tok_s": sched.metrics.summary()["throughput_tok_s"],
+        }
+    nbytes = [info["packed_nbytes"] for info in tiers.values()]
+    return tiers, all(a > b for a, b in zip(nbytes, nbytes[1:]))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_1_7b")
     ap.add_argument("--reduced", action="store_true",
-                    help="tiny same-family model (CPU-sized)")
+                    help="tiny same-family model (CPU-sized; served at "
+                         "--layers layers so the Mix'n'Match tier sits "
+                         "strictly between int4 and int2+ep in bytes)")
+    ap.add_argument("--layers", type=int, default=4,
+                    help="layer count for --reduced runs")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen-tokens", type=int, default=12)
     ap.add_argument("--arrival-rate", type=float, default=1000.0)
     ap.add_argument("--num-slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--thresholds", type=float, nargs="*", default=(2, 6, 12))
+    ap.add_argument("--thresholds", type=float, nargs="*",
+                    default=(2, 6, 12, 24))
     ap.add_argument("--cooldown", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-packed-ab", action="store_true",
-                    help="skip the packed-vs-dequant elastic A/B replay")
+                    help="skip the packed-vs-dequant elastic A/B replay "
+                         "(and the per-tier packed_ab_ep replays)")
     ap.add_argument("--moe-arch", default="granite_moe_1b_a400m",
                     help="MoE config for the second packed A/B "
                          "('none' skips it)")
@@ -123,7 +193,7 @@ def main(argv=None):
 
     cfg = get_config(args.arch)
     if args.reduced:
-        cfg = cfg.reduced()
+        cfg = cfg.reduced().replace(num_layers=args.layers)
     params = api.init(jax.random.PRNGKey(args.seed), cfg)
     engine = Engine(params, cfg, ServeConfig(
         bits=8, max_len=args.prompt_len + args.gen_tokens,
@@ -141,7 +211,8 @@ def main(argv=None):
         for name, info in tiers.items():
             print(f"  tier {name:16s} packed_bits={info['packed_bits']} "
                   f"packed_nbytes={info['packed_nbytes']:,d} "
-                  f"weight_nbytes={info['weight_nbytes']:,d}")
+                  f"weight_nbytes={info['weight_nbytes']:,d} "
+                  f"effective_bits={info['effective_bits']:.2f}")
 
     packed_ab = None
     if not args.skip_packed_ab:
@@ -164,7 +235,7 @@ def main(argv=None):
         print(f"== MoE packed-vs-dequant elastic A/B ({args.moe_arch}) ==")
         cfg_moe = get_config(args.moe_arch)
         if args.reduced:
-            cfg_moe = cfg_moe.reduced()
+            cfg_moe = cfg_moe.reduced().replace(num_layers=args.layers)
         params_moe = api.init(jax.random.PRNGKey(args.seed), cfg_moe)
         engine_moe = Engine(params_moe, cfg_moe, ServeConfig(
             bits=8, max_len=args.prompt_len + args.gen_tokens,
@@ -183,6 +254,18 @@ def main(argv=None):
         }
         _print_tiers(moe_packed_tiers)
 
+    packed_ab_ep = None
+    if not args.skip_packed_ab:
+        print("== per-tier pinned packed replays (extra-precision A/B) ==")
+        ep_tiers, decreasing = run_per_tier_packed(engine, cfg, args)
+        packed_ab_ep = {"per_tier": ep_tiers,
+                        "plane_bytes_strictly_decreasing": decreasing}
+        for name, info in ep_tiers.items():
+            print(f"  tier {name:16s} packed_nbytes={info['packed_nbytes']:,d} "
+                  f"effective_bits={info['effective_bits']:.2f} "
+                  f"tok/s={info['throughput_tok_s']:.1f}")
+        print(f"  plane-bytes staircase strictly decreasing: {decreasing}")
+
     report = {
         "bench": "serve_throughput",
         "arch": args.arch + (" (reduced)" if args.reduced else ""),
@@ -195,6 +278,7 @@ def main(argv=None):
         "fixed_int8": fixed,
         "packed_ab": packed_ab,
         "packed_ab_moe": packed_ab_moe,
+        "packed_ab_ep": packed_ab_ep,
         # headline numbers (the acceptance-criterion fields)
         "throughput_tok_s": elastic["throughput_tok_s"],
         "mean_ttft_s": elastic["mean_ttft_s"],

@@ -53,9 +53,13 @@ for name, bits, eff in [
     print(f"{name:28s} {eff:8.2f} {nll:9.3f} {nbytes:17,d}")
 
 # Extra-Precision int2: the overflow bucket at ~0.05 extra bits
+# (served packed, the 1-bit bitmap rides the plane into the kernel;
+# stored cost is 2 + 1 bitmap bits/weight)
 eng_ep = Engine(params, cfg, ServeConfig(bits=2, max_len=96,
                                          extra_precision=True))
-print(f"{'extra-precision int2':28s} {'~2.05':>8s} {eng_ep.score(toks, labels):9.3f}")
+nbytes_ep = packing.packed_nbytes(d_in, d_out, 2, extra_precision=True)
+print(f"{'extra-precision int2':28s} {'~2.05':>8s} "
+      f"{eng_ep.score(toks, labels):9.3f} {nbytes_ep:17,d}")
 
 gen = eng_ep.generate(toks[:2, :16], 8)
 print("\nEP-int2 greedy continuations:", gen.tolist())

@@ -1,16 +1,60 @@
 """Bit-packing of quantized weight planes for the serving path.
 
-Layout: codes are packed little-endian into int32 words along the
-*input* (reduction) dimension so the Pallas dequant-matmul kernel can
+Layout: codes are packed little-endian into int32 words along one of
+the two trailing weight dims so the Pallas dequant-matmul kernel can
 unpack a (block_k, block_n) tile with pure vector ops after one DMA.
 
-For Extra-Precision MatQuant (Errata Eq. 8) codes occupy [0, 2^r]; the
-overflow bucket (code == 2^r) is stored out-of-band as a bitmap plane
-(1 bit/weight) added back at dequant time -- the TPU-friendly analogue
-of the paper's proposed sparse CUDA additions. Effective bits =
-r + 1/32-word bitmap only for blocks containing overflow; we store the
-bitmap densely here for simplicity and report effective bits separately
-(`core.quant.effective_bits`).
+Pack-axis rules
+---------------
+Every plane is logically (..., k, n) with quantization groups along k
+(per-output-channel scales of shape (..., 1, n)). `pack_axis` selects
+which trailing dim the int32 words run along:
+
+  * ``pack_axis=-2`` (**K-packed**, the default): words are
+    (..., ceil(k/cpw), n). This is the layout the Pallas kernel DMAs --
+    the reduction dim is the one the kernel tiles, so up/gate/wq-type
+    projections pack along it and keep their OUTPUT dim shardable
+    under tensor parallelism.
+  * ``pack_axis=-1`` (**N-packed**): words are (..., k, ceil(n/cpw)).
+    Down/wo-type projections pack along the output dim so their
+    REDUCTION dim (the residual width) stays shardable under TP; they
+    are consumed by the jnp unpack twin (`kernels.ops.plane_matmul`
+    routes on the axis).
+
+Leading dims before (k, n) are batch dims: a stacked-layer plane is
+(L, ...), a MoE expert stack (E, ...) or (L, E, ...).
+
+PackedPlane static-metadata contract
+------------------------------------
+`PackedPlane` is the unit the serving stack passes around. It is a
+registered pytree whose `bits`, `pack_axis`, and `extra_precision`
+ride as STATIC metadata (aux data, not leaves). The contract:
+
+  * the words of a plane can only be unpacked at the width they were
+    packed with, so `bits` must be compile-time static -- under
+    `jax.jit` it stays a Python int and the kernels never see a traced
+    bitwidth;
+  * two planes with different (bits, pack_axis, extra_precision) have
+    different treedefs, so a jitted step closure traced for one packed
+    representation cannot silently consume another -- the scheduler
+    keys one compiled closure per representation
+    (`core.packing.packed_rep_key`) and a tier switch retraces exactly
+    once per representation, never on revisit;
+  * per-layer Mix'n'Match planes each carry their own static r, which
+    is what makes a heterogeneous-precision layer stack servable.
+
+Extra precision (Errata Eq. 8)
+------------------------------
+For Extra-Precision MatQuant the sliced codes occupy [0, 2^r]; the
+overflow bucket (code == 2^r) is exactly bit r of the (r+1)-bit code,
+so it is stored out-of-band as a 1-bit bitmap plane packed along the
+same axis: full code = (low r bits) + 2^r * bitmap. The kernels add
+the 2^r-valued overflow term in the same pass that dequantizes the
+base plane -- the TPU-friendly analogue of the paper's proposed sparse
+CUDA additions. We store the bitmap densely (1 bit/weight) for
+simplicity; the paper's Table 7 *effective* bits (r + overflow
+fraction, bits only for weights that clip) are reported separately
+(`core.quant.effective_bits`, `serve.engine.served_effective_bits`).
 """
 
 from __future__ import annotations
@@ -63,17 +107,29 @@ def unpack_codes(words: jax.Array, bits: int, n: int, axis: int = 0) -> jax.Arra
     return jnp.moveaxis(codes.astype(jnp.int32), 0, axis)
 
 
+def packed_rep_key(bits, extra_precision: bool = False):
+    """Hashable key of ONE packed serving representation.
+
+    The single source of truth tying the router's tier ladder, the
+    tier cache, and the scheduler's per-representation compiled
+    closures together: an int for a uniform r-bit tier, the per-layer
+    bits tuple for a packed Mix'n'Match tier, and `(key, "ep")` when
+    the representation carries the extra-precision overflow bitmap
+    (a different pytree structure, hence its own compile).
+    """
+    key = bits if isinstance(bits, int) else tuple(int(b) for b in bits)
+    return (key, "ep") if extra_precision else key
+
+
 @dataclasses.dataclass(eq=False)
 class PackedPlane:
     """A served r-bit packed plane: what the kernels actually consume.
 
-    Registered as a pytree with `bits` and `pack_axis` as STATIC
-    metadata (aux data, not leaves): under `jax.jit` they stay Python
-    ints, so `kernels.ops.plane_matmul` can unpack without a traced
-    bitwidth, and two tiers with different bits/pack_axis have different
-    treedefs (a tier switch retraces exactly once per representation).
-    This is also what makes per-layer Mix'n'Match planes servable: each
-    layer's plane carries its own static r.
+    Registered as a pytree with `bits`, `pack_axis`, and
+    `extra_precision` as STATIC metadata (see the module docstring for
+    the full contract). `overflow`, present iff `extra_precision`, is
+    the 1-bit packed overflow bitmap of Extra-Precision MatQuant
+    (Errata Eq. 8): full code = base + 2^bits * bitmap.
 
     Dequant is always `w_hat = alpha * code - beta`.
     """
@@ -81,14 +137,16 @@ class PackedPlane:
     words: jax.Array        # packed r-bit codes, int32
     alpha: jax.Array        # (..., 1, n) scale (grid re-scale folded in)
     beta: jax.Array         # (..., 1, n) alpha_parent * zero_point
+    overflow: jax.Array | None = None   # packed 1-bit bitmap (ep only)
     bits: int = 8           # static: the plane's bitwidth r
     pack_axis: int = -2     # static: -2 = K-packed, -1 = N-packed
+    extra_precision: bool = False       # static: overflow bitmap present
 
 
 jax.tree_util.register_dataclass(
     PackedPlane,
-    data_fields=("words", "alpha", "beta"),
-    meta_fields=("bits", "pack_axis"),
+    data_fields=("words", "alpha", "beta", "overflow"),
+    meta_fields=("bits", "pack_axis", "extra_precision"),
 )
 
 
@@ -139,6 +197,12 @@ class PackedLinear:
         dequant is w_hat = alpha_r * (codes * 2^(c-r) - z)  -- we fold
         the 2^(c-r) grid re-scale into alpha_r so the kernel's dequant
         is always `alpha * code - beta` regardless of r.
+
+        With `extra_precision` (Errata Eq. 8) the sliced codes occupy
+        [0, 2^r] and are split bit-exactly: the base plane keeps the
+        low r bits, the 1-bit bitmap plane is bit r (the overflow
+        bucket), so full code = base + 2^r * bitmap and the kernels
+        add the 2^r-valued overflow term in the same dequant pass.
         """
         from repro.core import quant
 
@@ -150,8 +214,8 @@ class PackedLinear:
         alpha_r = self.alpha * scale
         beta_r = self.alpha * self.zero
         if extra_precision:
-            overflow = (codes >= 2**bits).astype(jnp.int32)
-            base = jnp.minimum(codes, 2**bits - 1)
+            overflow = codes >> bits          # bit r: the overflow bucket
+            base = codes & (2**bits - 1)      # low r bits
             return (
                 pack_codes(base, bits, axis=self.pack_axis),
                 alpha_r,
@@ -160,11 +224,15 @@ class PackedLinear:
             )
         return pack_codes(codes, bits, axis=self.pack_axis), alpha_r, beta_r
 
-    def materialize_plane(self, bits: int) -> PackedPlane:
+    def materialize_plane(self, bits: int,
+                          extra_precision: bool = False) -> PackedPlane:
         """`materialize` packaged as the PackedPlane the kernels consume."""
-        words, alpha_r, beta_r = self.materialize(bits)
+        mat = self.materialize(bits, extra_precision=extra_precision)
+        words, alpha_r, beta_r = mat[:3]
         return PackedPlane(words=words, alpha=alpha_r, beta=beta_r,
-                           bits=bits, pack_axis=self.pack_axis)
+                           overflow=mat[3] if extra_precision else None,
+                           bits=bits, pack_axis=self.pack_axis,
+                           extra_precision=extra_precision)
 
     def layer(self, idx: int) -> "PackedLinear":
         """The parent of ONE stacked layer: index the leading dim.
@@ -181,15 +249,24 @@ class PackedLinear:
                             pack_axis=self.pack_axis)
 
 
-def packed_nbytes(k: int, n: int, bits: int, pack_axis: int = -2) -> int:
+def packed_nbytes(k: int, n: int, bits: int, pack_axis: int = -2,
+                  extra_precision: bool = False) -> int:
     """HBM bytes of one packed (k, n) plane -- roofline accounting.
 
     pack_axis selects which dim the int32 words run along: -2 packs the
     reduction dim k (ceil(k/cpw) x n words), -1 packs the output dim n
     (k x ceil(n/cpw) words -- down/wo-type planes). The two differ
     whenever the packed dim is not a multiple of codes-per-word.
+    `extra_precision` adds the densely stored 1-bit overflow bitmap
+    (cpw = 32) packed along the same axis.
     """
     cpw = codes_per_word(bits)
     if pack_axis in (-1, 1):
-        return k * int(np.ceil(n / cpw)) * 4
-    return int(np.ceil(k / cpw)) * n * 4
+        nbytes = k * int(np.ceil(n / cpw)) * 4
+        if extra_precision:
+            nbytes += k * int(np.ceil(n / 32)) * 4
+        return nbytes
+    nbytes = int(np.ceil(k / cpw)) * n * 4
+    if extra_precision:
+        nbytes += int(np.ceil(k / 32)) * n * 4
+    return nbytes

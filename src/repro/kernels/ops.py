@@ -6,7 +6,9 @@
   math) is what the dry-run lowers, keeping XLA cost analysis honest.
 
 Wrappers also handle padding to block multiples and the Extra-Precision
-composition (base plane + 1-bit overflow plane through the same kernel).
+composition: the 1-bit overflow bitmap rides into the SAME kernel call
+as the base plane and contributes its 2^bits-valued term inside the
+dequant step (full code = base + 2^bits * bitmap).
 """
 
 from __future__ import annotations
@@ -51,7 +53,10 @@ def _fit_blocks(M, K, N, cpw, block_m, block_n, block_k):
 def quant_matmul(x, words, alpha, beta, *, bits, overflow_words=None,
                  interpret: bool | None = None,
                  block_m=128, block_n=128, block_k=512):
-    """y = x @ dequant(words). Extra precision adds the overflow plane.
+    """y = x @ dequant(words). Extra precision composes the 1-bit
+    overflow bitmap in the SAME kernel call: full code = base +
+    2^bits * bitmap, so an ep plane costs one extra word DMA per tile
+    instead of a second kernel launch.
 
     x: (..., K); words: (ceil(K/cpw), N). Returns (..., N).
     """
@@ -63,19 +68,14 @@ def quant_matmul(x, words, alpha, beta, *, bits, overflow_words=None,
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
 
-    bm, bk, bn = _fit_blocks(M, K, N, packing.codes_per_word(bits),
-                             block_m, block_n, block_k)
+    # with an overflow bitmap the K tile must also cover whole 1-bit
+    # words: cpw(bits) always divides 32, so fit against cpw = 32
+    cpw = 32 if overflow_words is not None else packing.codes_per_word(bits)
+    bm, bk, bn = _fit_blocks(M, K, N, cpw, block_m, block_n, block_k)
     y = quant_matmul_pallas(
         x2, words, alpha.astype(jnp.float32), beta.astype(jnp.float32),
+        overflow_words,
         bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
-    if overflow_words is not None:
-        _, bk1, _ = _fit_blocks(M, K, N, packing.codes_per_word(1),
-                                block_m, block_n, block_k)
-        y_over = quant_matmul_pallas(
-            x2, overflow_words, alpha.astype(jnp.float32),
-            jnp.zeros_like(beta, jnp.float32),
-            bits=1, block_m=bm, block_n=bn, block_k=bk1, interpret=interpret)
-        y = y + y_over
     return y.reshape(lead + (N,)).astype(x.dtype)
 
 
@@ -98,46 +98,49 @@ def fused_quantize(w, *, bitwidths, parent_bits=8, extra_precision=False,
     return outs
 
 
-def quant_matmul_experts(x, words, alpha, beta, *, bits,
+def quant_matmul_experts(x, words, alpha, beta, *, bits, overflow_words=None,
                          interpret: bool | None = None,
                          block_m=128, block_n=128, block_k=512):
     """Batched-over-experts `quant_matmul`: x (E, M, K) against one
     packed K-packed plane per expert, words (E, ceil(K/cpw), N). The
-    Pallas kernel runs with its grid extended over E. Returns (E, M, N).
+    Pallas kernel runs with its grid extended over E; an extra-precision
+    expert stack passes its (E, K/32, N) bitmap into the same call.
+    Returns (E, M, N).
     """
     if interpret is None:
         interpret = not _on_tpu()
     E, M, K = x.shape
     N = words.shape[-1]
-    bm, bk, bn = _fit_blocks(M, K, N, packing.codes_per_word(bits),
-                             block_m, block_n, block_k)
+    cpw = 32 if overflow_words is not None else packing.codes_per_word(bits)
+    bm, bk, bn = _fit_blocks(M, K, N, cpw, block_m, block_n, block_k)
     return quant_matmul_experts_pallas(
         x, words, alpha.astype(jnp.float32), beta.astype(jnp.float32),
+        overflow_words,
         bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
 
 
 def _plane_fields(plane, bits):
-    """(words, alpha, beta, bits, pack_axis) of a packed plane.
+    """(words, alpha, beta, overflow, bits, pack_axis) of a packed plane.
 
-    `PackedPlane` carries bits/pack_axis as static metadata -- the
-    authoritative source (a conflicting `bits=` is an error: unpacking
-    at any other width misreads the words). Legacy
-    `{'words','alpha','beta'}` dicts need `bits` passed explicitly and
-    fall back to the shape heuristic `words.shape[-2] != k` for the
-    pack axis (ambiguous only for planes packed along N whose unpacked
-    N happens to equal ceil(k/cpw))."""
+    `PackedPlane` carries bits/pack_axis/extra_precision as static
+    metadata -- the authoritative source (a conflicting `bits=` is an
+    error: unpacking at any other width misreads the words). Legacy
+    `{'words','alpha','beta'}` dicts need `bits` passed explicitly,
+    carry no overflow bitmap, and fall back to the shape heuristic
+    `words.shape[-2] != k` for the pack axis (ambiguous only for planes
+    packed along N whose unpacked N happens to equal ceil(k/cpw))."""
     if isinstance(plane, packing.PackedPlane):
         if bits is not None and bits != plane.bits:
             raise ValueError(
                 f"bits={bits} conflicts with the plane's static bitwidth "
                 f"{plane.bits}; the words can only be unpacked at the "
                 f"width they were packed with")
-        return (plane.words, plane.alpha, plane.beta,
+        return (plane.words, plane.alpha, plane.beta, plane.overflow,
                 plane.bits, plane.pack_axis)
     words, alpha, beta = plane["words"], plane["alpha"], plane["beta"]
     if bits is None:
         raise ValueError("dict packed planes carry no bitwidth; pass bits=")
-    return words, alpha, beta, bits, None
+    return words, alpha, beta, None, bits, None
 
 
 def plane_matmul(x, plane, *, bits: int | None = None,
@@ -146,41 +149,63 @@ def plane_matmul(x, plane, *, bits: int | None = None,
 
     The serving integration point: `models.common.qlinear` (and
     `models.ffn.apply_moe` for expert stacks) hands every packed weight
-    plane here. `plane` is a `core.packing.PackedPlane` (bits and
-    pack_axis come from its static metadata; passing a different
-    `bits=` raises) or a legacy `{'words','alpha','beta'}` dict (bits
-    required, pack axis inferred from shape).
+    plane here. `plane` is a `core.packing.PackedPlane` (bits,
+    pack_axis, and extra_precision come from its static metadata;
+    passing a different `bits=` raises) or a legacy
+    `{'words','alpha','beta'}` dict (bits required, pack axis inferred
+    from shape, no overflow plane).
 
-    Routing:
-      * K-packed 2-D planes -> the Pallas dequant-matmul kernel when
-        `use_kernel` (TPU, or interpret mode elsewhere);
-      * K-packed expert stacks (words (E, ceil(K/cpw), N) with
-        x (E, M, K)) -> the expert-batched kernel, grid over E;
-      * N-packed planes (down/wo projections, packed along the output
-        dim so their reduction dim stays shardable) and non-tiling
-        shapes -> the jnp unpack twin (vmapped over E for stacks) --
-        identical math, so the paths are interchangeable per-plane.
+    Dispatch table (rows checked in order; `use_kernel` means TPU, or
+    interpret mode in kernel tests):
+
+      plane layout            x shape     use_kernel  executes
+      ----------------------  ----------  ----------  ----------------------
+      K-packed 2-D,           (..., K)    yes         Pallas dequant-matmul
+      K % block constraints                           (`quant_matmul`)
+      hold (incl. K % 32
+      for the ep bitmap)
+      K-packed expert stack   (E, M, K)   yes         expert-batched Pallas
+      words (E, ceil(K/cpw),                          kernel, grid over E
+      N), same constraints                            (`quant_matmul_experts`)
+      N-packed (down/wo),     any         --          jnp unpack twin
+      non-tiling shapes, or                           (vmapped over E for
+      use_kernel=False                                stacks)
+
+    The jnp twin is identical math, so the paths are interchangeable
+    per-plane. Extra-precision planes compose their overflow bitmap on
+    EVERY path: the kernels add the 2^bits-valued term in the dequant
+    tile, the twin adds it to the unpacked codes.
 
     x: (..., K), or (E, M, K) against an expert stack; returns (..., N)
     in x.dtype (no bias).
     """
-    words, alpha, beta, bits, pack_axis = _plane_fields(plane, bits)
+    words, alpha, beta, overflow, bits, pack_axis = _plane_fields(plane, bits)
     K, N = x.shape[-1], alpha.shape[-1]
     cpw = packing.codes_per_word(bits)
     if pack_axis is None:              # legacy dict plane: shape heuristic
         pack_axis = -2 if words.shape[-2] != K else -1
     packed_k = pack_axis in (-2, words.ndim - 2)
-    if use_kernel and packed_k and words.shape[-2] * cpw == K:
+    # the ep bitmap packs 32 codes/word, so the kernel additionally
+    # needs K to tile in whole bitmap words
+    ep_ok = overflow is None or K % 32 == 0
+    if use_kernel and packed_k and words.shape[-2] * cpw == K and ep_ok:
         if words.ndim == 2:
             return quant_matmul(x, words, alpha, beta, bits=bits,
-                                interpret=interpret)
+                                overflow_words=overflow, interpret=interpret)
         if words.ndim == 3 and x.ndim == 3 and x.shape[0] == words.shape[0]:
             return quant_matmul_experts(x, words, alpha, beta, bits=bits,
+                                        overflow_words=overflow,
                                         interpret=interpret)
     if packed_k:
         codes = packing.unpack_codes(words, bits, K, axis=-2)
+        if overflow is not None:
+            codes = codes + (packing.unpack_codes(overflow, 1, K, axis=-2)
+                             << bits)
     else:
         codes = packing.unpack_codes(words, bits, N, axis=-1)
+        if overflow is not None:
+            codes = codes + (packing.unpack_codes(overflow, 1, N, axis=-1)
+                             << bits)
     w_hat = (alpha * codes.astype(jnp.float32) - beta).astype(x.dtype)
     if words.ndim == 2:
         return x @ w_hat
@@ -196,21 +221,11 @@ def serve_linear(x, packed: packing.PackedLinear, bits: int,
     K-packed planes hit the Pallas kernel, N-packed (down/wo-type)
     planes take the jnp unpack twin -- `quant_matmul` alone would read
     an N-packed (k, ceil(n/cpw)) word array as if it were K-packed.
-    Extra precision adds the 1-bit overflow plane through the same
-    dispatch (full code = clamped base + overflow bit, so the overflow
-    contribution is alpha * bitmap with no beta).
+    Extra precision rides the 1-bit overflow bitmap on the plane itself
+    (PackedPlane.overflow), composed in the same dispatch.
     """
-    mat = packed.materialize(bits, extra_precision=extra_precision)
-    words, alpha, beta = mat[:3]
-    plane = packing.PackedPlane(words=words, alpha=alpha, beta=beta,
-                                bits=bits, pack_axis=packed.pack_axis)
-    y = plane_matmul(x, plane, use_kernel=True, interpret=interpret)
-    if extra_precision:
-        over = packing.PackedPlane(
-            words=mat[3], alpha=alpha, beta=jnp.zeros_like(beta),
-            bits=1, pack_axis=packed.pack_axis)
-        y = y + plane_matmul(x, over, use_kernel=True, interpret=interpret)
-    return y
+    plane = packed.materialize_plane(bits, extra_precision=extra_precision)
+    return plane_matmul(x, plane, use_kernel=True, interpret=interpret)
 
 
 __all__ = ["quant_matmul", "quant_matmul_experts", "plane_matmul",

@@ -13,8 +13,12 @@ HBM->VMEM DMA. Per (block_k, block_n) tile the kernel:
 
 Block shapes default to MXU-aligned (128, 128) tiles with K-innermost
 grid order; the fp32 accumulator lives in the revisited output block.
-Extra-Precision MatQuant (Errata) composes this same kernel at bits=1
-for the overflow bitmap plane (see ops.quant_matmul with overflow=).
+
+Extra-Precision MatQuant (Errata Eq. 8): pass `overflow` (the 1-bit
+packed bitmap plane, block (block_k/32, block_n)) and the kernel adds
+the 2^bits-valued overflow term IN the dequant step -- full code =
+base + 2^bits * bitmap -- so an ep tier costs one extra word DMA per
+tile instead of a second kernel launch over the whole plane.
 """
 
 from __future__ import annotations
@@ -39,6 +43,15 @@ def _unpack_tile(words, bits):
     return codes.reshape(words.shape[0] * cpw, words.shape[1])
 
 
+def _dequant_tile(words, ovf_words, alpha, beta, bits):
+    """One tile's dequantized weights: alpha * code - beta, where code
+    composes the base plane with the 2^bits-valued overflow bit."""
+    codes = _unpack_tile(words, bits)                # (bk, bn) int32
+    if ovf_words is not None:
+        codes = codes + (_unpack_tile(ovf_words, 1) << bits)
+    return alpha * codes.astype(jnp.float32) - beta
+
+
 def _kernel(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits, k_steps):
     k = pl.program_id(2)
 
@@ -46,8 +59,21 @@ def _kernel(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits, k_steps):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    codes = _unpack_tile(w_ref[...], bits)          # (bk // cpw, bn) int32
-    w = alpha_ref[...] * codes.astype(jnp.float32) - beta_ref[...]
+    w = _dequant_tile(w_ref[...], None, alpha_ref[...], beta_ref[...], bits)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _kernel_ep(x_ref, w_ref, ovf_ref, alpha_ref, beta_ref, o_ref, *, bits,
+               k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_tile(w_ref[...], ovf_ref[...], alpha_ref[...], beta_ref[...],
+                      bits)
     x = x_ref[...].astype(jnp.float32)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -61,6 +87,7 @@ def quant_matmul_pallas(
     words: jax.Array,        # (K // cpw, N) int32 packed codes
     alpha: jax.Array,        # (1, N) f32
     beta: jax.Array,         # (1, N) f32   (beta = alpha * zero_point)
+    overflow: jax.Array | None = None,   # (K // 32, N) int32 1-bit bitmap
     *,
     bits: int,
     block_m: int = 128,
@@ -78,25 +105,39 @@ def quant_matmul_pallas(
     assert N % block_n == 0 and K % block_k == 0, (
         N, K, block_n, block_k)
     assert block_k % cpw == 0
+    if overflow is not None:
+        assert overflow.shape == (K // 32, N), (overflow.shape, K, N)
+        assert block_k % 32 == 0, block_k   # the bitmap tile must be whole
     pad_m = (-M) % block_m
     if pad_m:
         x = jnp.pad(x, ((0, pad_m), (0, 0)))
     k_steps = K // block_k
     grid = ((M + pad_m) // block_m, N // block_n, k_steps)
 
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_k // cpw, block_n), lambda i, j, k: (k, j)),
+    ]
+    operands = [x, words]
+    if overflow is not None:
+        in_specs.append(
+            pl.BlockSpec((block_k // 32, block_n), lambda i, j, k: (k, j)))
+        operands.append(overflow)
+    in_specs += [
+        pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+    ]
+    operands += [alpha, beta]
+    body = _kernel_ep if overflow is not None else _kernel
+
     out = pl.pallas_call(
-        functools.partial(_kernel, bits=bits, k_steps=k_steps),
+        functools.partial(body, bits=bits, k_steps=k_steps),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_k // cpw, block_n), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
-            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M + pad_m, N), jnp.float32),
         interpret=interpret,
-    )(x, words, alpha, beta)
+    )(*operands)
     if pad_m:
         out = out[:M]
     return out.astype(x.dtype)
@@ -110,8 +151,20 @@ def _kernel_experts(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    codes = _unpack_tile(w_ref[0], bits)            # (bk // cpw, bn) int32
-    w = alpha_ref[0] * codes.astype(jnp.float32) - beta_ref[0]
+    w = _dequant_tile(w_ref[0], None, alpha_ref[0], beta_ref[0], bits)
+    x = x_ref[0].astype(jnp.float32)
+    o_ref[0, :, :] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _kernel_experts_ep(x_ref, w_ref, ovf_ref, alpha_ref, beta_ref, o_ref, *,
+                       bits):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_tile(w_ref[0], ovf_ref[0], alpha_ref[0], beta_ref[0], bits)
     x = x_ref[0].astype(jnp.float32)
     o_ref[0, :, :] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -125,6 +178,7 @@ def quant_matmul_experts_pallas(
     words: jax.Array,        # (E, K // cpw, N) int32 packed codes
     alpha: jax.Array,        # (E, 1, N) f32
     beta: jax.Array,         # (E, 1, N) f32
+    overflow: jax.Array | None = None,   # (E, K // 32, N) 1-bit bitmap
     *,
     bits: int,
     block_m: int = 128,
@@ -135,33 +189,49 @@ def quant_matmul_experts_pallas(
     """Batched-over-experts `quant_matmul_pallas`: one packed plane per
     expert of a MoE stack, the grid extended with a leading E dim so
     every (expert, tile) pair is one kernel instance. Same per-tile
-    math as the 2-D kernel (DMA packed words, VPU unpack, MXU matmul)."""
+    math as the 2-D kernel (DMA packed words, VPU unpack, MXU matmul),
+    including the in-kernel 2^bits-valued overflow term when the
+    expert stack carries an extra-precision bitmap."""
     E, M, K = x.shape
     cpw = 32 // bits
     Ew, Kw, N = words.shape
     assert Ew == E and Kw * cpw == K, (Ew, E, Kw, cpw, K)
     assert N % block_n == 0 and K % block_k == 0, (N, K, block_n, block_k)
     assert block_k % cpw == 0
+    if overflow is not None:
+        assert overflow.shape == (E, K // 32, N), (overflow.shape, E, K, N)
+        assert block_k % 32 == 0, block_k
     pad_m = (-M) % block_m
     if pad_m:
         x = jnp.pad(x, ((0, 0), (0, pad_m), (0, 0)))
     grid = (E, (M + pad_m) // block_m, N // block_n, K // block_k)
 
+    in_specs = [
+        pl.BlockSpec((1, block_m, block_k), lambda e, i, j, k: (e, i, k)),
+        pl.BlockSpec((1, block_k // cpw, block_n),
+                     lambda e, i, j, k: (e, k, j)),
+    ]
+    operands = [x, words]
+    if overflow is not None:
+        in_specs.append(pl.BlockSpec((1, block_k // 32, block_n),
+                                     lambda e, i, j, k: (e, k, j)))
+        operands.append(overflow)
+    in_specs += [
+        pl.BlockSpec((1, 1, block_n), lambda e, i, j, k: (e, 0, j)),
+        pl.BlockSpec((1, 1, block_n), lambda e, i, j, k: (e, 0, j)),
+    ]
+    operands += [alpha, beta]
+    body = _kernel_experts_ep if overflow is not None else _kernel_experts
+
     out = pl.pallas_call(
-        functools.partial(_kernel_experts, bits=bits),
+        functools.partial(body, bits=bits),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_m, block_k), lambda e, i, j, k: (e, i, k)),
-            pl.BlockSpec((1, block_k // cpw, block_n),
-                         lambda e, i, j, k: (e, k, j)),
-            pl.BlockSpec((1, 1, block_n), lambda e, i, j, k: (e, 0, j)),
-            pl.BlockSpec((1, 1, block_n), lambda e, i, j, k: (e, 0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_m, block_n),
                                lambda e, i, j, k: (e, i, j)),
         out_shape=jax.ShapeDtypeStruct((E, M + pad_m, N), jnp.float32),
         interpret=interpret,
-    )(x, words, alpha, beta)
+    )(*operands)
     if pad_m:
         out = out[:, :M]
     return out.astype(x.dtype)

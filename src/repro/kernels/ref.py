@@ -21,12 +21,14 @@ def quant_matmul_ref(x, words, alpha, beta, *, bits: int):
 
 
 def quant_matmul_ep_ref(x, words, alpha, beta, overflow_words, *, bits: int):
-    """Extra-Precision variant: codes may carry a 2^bits overflow stored
-    as a 1-bit plane; value = alpha * (base + overflow) - beta."""
+    """Extra-Precision variant: the base plane keeps the low `bits` bits
+    of the [0, 2^bits] sliced code; the 1-bit bitmap plane is bit `bits`
+    (the overflow bucket), so value = alpha * (base + 2^bits * bitmap)
+    - beta -- the decomposition the kernels compose in-tile."""
     K = x.shape[1]
     codes = packing.unpack_codes(words, bits, K, axis=0).astype(jnp.float32)
     over = packing.unpack_codes(overflow_words, 1, K, axis=0).astype(jnp.float32)
-    w = alpha * (codes + over) - beta
+    w = alpha * (codes + float(2**bits) * over) - beta
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
 
 

@@ -4,8 +4,10 @@ Demonstrates the paper's deployment story (Section 5.4) as a *runtime*
 behavior: one int8 parent checkpoint; requests arrive as an open-loop
 Poisson process, the continuous-batching scheduler admits them into KV
 slots as capacity frees up, and (with --elastic) the precision router
-downgrades int8 -> int4 -> Mix'n'Match -> int2 while the queue is deep
-and recovers when it drains.
+downgrades int8 -> int4 -> Mix'n'Match -> int2+ep -> int2 while the
+queue is deep and recovers when it drains. See docs/serving.md for the
+full operator guide (every flag, the tier ladder, and how to read
+BENCH_serve.json).
 
   # elastic precision under load
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --reduced \
@@ -70,12 +72,19 @@ def main(argv=None):
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--mixnmatch-bits", type=float, default=None,
                     help="effective-bits budget; overrides --bits")
-    ap.add_argument("--extra-precision", action="store_true")
+    ap.add_argument("--extra-precision", action="store_true",
+                    help="Errata Eq. 8 overflow bucket: serve every tier "
+                         "with the 1-bit overflow bitmap on top of its "
+                         "base bits (~+0.05 Table-7 effective bits); "
+                         "composes with --packed (the bitmap rides the "
+                         "plane into the kernel). The elastic ladder "
+                         "always carries an int2+ep rung regardless")
     ap.add_argument("--packed", action="store_true",
                     help="serve packed r-bit planes (Pallas kernel on TPU, "
                          "jnp twin elsewhere); with --elastic, every "
-                         "uniform-int tier becomes a packed plane so a "
-                         "downgrade cuts HBM weight bytes 2x per step")
+                         "tier -- uniform, Mix'n'Match, extra-precision "
+                         "-- becomes packed planes so a downgrade cuts "
+                         "HBM weight bytes per step")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=16)
@@ -85,7 +94,8 @@ def main(argv=None):
                     help="concurrent decode slots (continuous batching)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--elastic", action="store_true",
-                    help="load-adaptive precision tiers (int8..int2)")
+                    help="load-adaptive precision tiers (int8 -> int4 -> "
+                         "Mix'n'Match -> int2+ep -> int2)")
     ap.add_argument("--legacy", action="store_true",
                     help="old fixed-batch run-to-completion loop")
     ap.add_argument("--ckpt", default="", help="checkpoint dir to serve from")

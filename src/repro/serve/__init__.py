@@ -2,6 +2,7 @@ from repro.serve.engine import (Engine, ServeConfig,  # noqa: F401
                                 build_packed_parent,
                                 materialize_packed_params,
                                 materialize_served_params,
+                                served_effective_bits,
                                 served_weight_nbytes)
 from repro.serve.kv_cache import PagePool  # noqa: F401
 from repro.serve.metrics import ServeMetrics  # noqa: F401

@@ -52,6 +52,7 @@ import warnings
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing as packing_lib
 from repro.core import quant
 from repro.models import api
 
@@ -177,7 +178,8 @@ def build_packed_parent(params, cfg):
     return parent
 
 
-def materialize_packed_params(params, cfg, bits, parent=None):
+def materialize_packed_params(params, cfg, bits, parent=None,
+                              extra_precision: bool = False):
     """Replace quantized weights with PACKED r-bit planes.
 
     Each scoped 'w' leaf becomes a `core.packing.PackedPlane` (int32
@@ -188,6 +190,11 @@ def materialize_packed_params(params, cfg, bits, parent=None):
     drop 16/bits x vs bf16. Consumed by kernels.ops.plane_matmul (the
     Pallas kernel on TPU, its jnp twin elsewhere) through
     common.qlinear / ffn.apply_moe.
+
+    `extra_precision` (Errata Eq. 8) additionally packs the 1-bit
+    overflow bitmap onto every plane (PackedPlane.overflow, composed
+    in-kernel as the 2^bits-valued term); the dequant fallback path
+    applies the overflow bucket numerically instead.
 
     `bits` is an int (uniform tier) or a per-layer vector (Mix'n'Match):
     the per-layer path unstacks `params['layers']` into a Python list of
@@ -208,9 +215,10 @@ def materialize_packed_params(params, cfg, bits, parent=None):
     if parent is None:
         parent = build_packed_parent(params, cfg)
     if isinstance(bits, int):
-        return _materialize_packed_uniform(params, cfg, bits, parent)
+        return _materialize_packed_uniform(params, cfg, bits, parent,
+                                           extra_precision)
     return _materialize_packed_per_layer(
-        params, cfg, [int(b) for b in bits], parent)
+        params, cfg, [int(b) for b in bits], parent, extra_precision)
 
 
 def _key_of(entry):
@@ -224,7 +232,7 @@ def _set_path(d, path, value):
     node[_key_of(path[-1])] = value
 
 
-def _dequant_fallback(path, leaf, cfg, bits: int):
+def _dequant_fallback(path, leaf, cfg, bits: int, extra_precision=False):
     """Satellite guard: a scoped projection with no packed parent is
     served DEQUANTIZED at the tier's bits (never raw bf16), loudly."""
     warnings.warn(
@@ -234,20 +242,22 @@ def _dequant_fallback(path, leaf, cfg, bits: int):
         f"full-precision weights", stacklevel=3)
     _, group_axis = _leaf_group_axis(_path_names(path), leaf)
     return quant.quant_dequant(leaf, cfg.quant.parent_bits, bits,
-                               axis=group_axis).astype(leaf.dtype)
+                               axis=group_axis,
+                               extra_precision=extra_precision
+                               ).astype(leaf.dtype)
 
 
-def _materialize_packed_uniform(params, cfg, bits: int, parent):
+def _materialize_packed_uniform(params, cfg, bits: int, parent, ep: bool):
     qcfg = cfg.quant
     flat, _ = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
         pl = parent.get(jax.tree_util.keystr(path))
         if pl is not None:
-            out.append(pl.materialize_plane(bits))
+            out.append(pl.materialize_plane(bits, extra_precision=ep))
             continue
         if _scoped(path, qcfg):
-            out.append(_dequant_fallback(path, leaf, cfg, bits))
+            out.append(_dequant_fallback(path, leaf, cfg, bits, ep))
         else:
             out.append(leaf)
 
@@ -259,7 +269,8 @@ def _materialize_packed_uniform(params, cfg, bits: int, parent):
     return base
 
 
-def _materialize_packed_per_layer(params, cfg, bits: list[int], parent):
+def _materialize_packed_per_layer(params, cfg, bits: list[int], parent,
+                                  ep: bool):
     """Packed Mix'n'Match tier: per-layer packed planes, layers unstacked.
 
     `params['layers']` becomes a list of L per-layer subtrees (packed
@@ -310,19 +321,21 @@ def _materialize_packed_per_layer(params, cfg, bits: list[int], parent):
                 for l in range(L):
                     qd_l = quant.quant_dequant(
                         leaf[l], qcfg.parent_bits, bits[l],
-                        axis=group_axis - 1)
+                        axis=group_axis - 1, extra_precision=ep)
                     _set_path(per[l], path[1:], qd_l.astype(leaf.dtype))
             else:
                 _set_path(base, path,
-                          _dequant_fallback(path, leaf, cfg, b_shared))
+                          _dequant_fallback(path, leaf, cfg, b_shared, ep))
             continue
         # ... then swap each scoped stacked leaf for its layer's plane
         if names[0] == "layers" and leaf.ndim >= 3:
             for l in range(L):
                 _set_path(per[l], path[1:],
-                          pl.layer(l).materialize_plane(bits[l]))
+                          pl.layer(l).materialize_plane(
+                              bits[l], extra_precision=ep))
         else:
-            _set_path(base, path, pl.materialize_plane(b_shared))
+            _set_path(base, path,
+                      pl.materialize_plane(b_shared, extra_precision=ep))
     base["layers"] = per
     return base
 
@@ -331,9 +344,11 @@ def served_weight_nbytes(params, cfg) -> tuple[int, int]:
     """(plane_bytes, total_bytes) of the served quantized weights.
 
     plane_bytes counts only the sliced code planes -- packed int32
-    words, or the full dequantized 'w' arrays on the fallback path --
-    i.e. the term that shrinks 2x per packed tier step (int8 -> int4 ->
-    int2). total_bytes adds the per-channel alpha/beta scales, which are
+    words plus the extra-precision overflow bitmaps, or the full
+    dequantized 'w' arrays on the fallback path -- i.e. the term that
+    shrinks 2x per packed tier step (int8 -> int4 -> int2, with
+    int2+ep's dense bitmap landing at 3 bits/weight in between).
+    total_bytes adds the per-channel alpha/beta scales, which are
     tier-independent. Both are the HBM weight traffic of one decode
     step, the quantity the elastic downgrade is supposed to cut.
     """
@@ -342,10 +357,10 @@ def served_weight_nbytes(params, cfg) -> tuple[int, int]:
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         names = _path_names(path)
         if (len(names) >= 2 and names[-2] == "w"
-                and names[-1] in ("words", "alpha", "beta")):
+                and names[-1] in ("words", "overflow", "alpha", "beta")):
             nb = leaf.size * leaf.dtype.itemsize
             total += nb
-            if names[-1] == "words":
+            if names[-1] in ("words", "overflow"):
                 plane += nb
             continue
         if _scoped(path, qcfg):
@@ -353,6 +368,48 @@ def served_weight_nbytes(params, cfg) -> tuple[int, int]:
             plane += nb
             total += nb
     return plane, total
+
+
+def served_effective_bits(params) -> float | None:
+    """Measured Table 7 effective bits/weight of the served PLANES.
+
+    The paper's extra-precision accounting (Errata Eq. 8 / Table 7):
+    every weight costs its plane's base r bits, plus ONE extra bit for
+    each weight that actually lands in the overflow bucket -- i.e.
+    r + popcount(bitmap)/weights, ~2.05-2.2 for int2+ep -- not the
+    dense 1-bit-per-weight bitmap we store for simplicity. Weighted
+    over all `PackedPlane` leaves (uniform tiers give back their r,
+    Mix'n'Match tiers the per-layer weighted mean). Returns None when
+    the params carry no packed planes (the dequantized layout).
+
+    Plane sizes are inferred from the word/scale shapes; for a
+    K-packed plane the reduction dim is recovered as
+    ceil(k/cpw) * cpw, exact whenever k is a multiple of
+    codes-per-word (always true for the MXU-aligned model dims the
+    kernels require).
+    """
+    from repro.core import packing
+
+    weights = 0
+    bit_sum = 0.0
+    planes = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, packing.PackedPlane))
+    for plane in planes:
+        if not isinstance(plane, packing.PackedPlane):
+            continue
+        cpw = packing.codes_per_word(plane.bits)
+        if plane.pack_axis in (-2, plane.words.ndim - 2):
+            size = plane.words.size * cpw            # lead * k_padded * n
+        else:
+            n = plane.alpha.shape[-1]                # N-packed: n is exact
+            size = plane.words.size // plane.words.shape[-1] * n
+        weights += size
+        bit_sum += plane.bits * size
+        if plane.overflow is not None:
+            ovf = plane.overflow.view(jnp.uint32)
+            bit_sum += float(jnp.sum(
+                jax.lax.population_count(ovf).astype(jnp.float32)))
+    return bit_sum / weights if weights else None
 
 
 def _deep_copy_containers(tree):
@@ -390,7 +447,10 @@ def packed_axes(axes_tree, params_packed, cfg):
             scales = rest + (None, a_out)
             return packing.PackedPlane(
                 words=words, alpha=scales, beta=scales,
-                bits=p_node.bits, pack_axis=p_node.pack_axis)
+                # the overflow bitmap shards exactly like the words
+                overflow=words if p_node.overflow is not None else None,
+                bits=p_node.bits, pack_axis=p_node.pack_axis,
+                extra_precision=p_node.extra_precision)
         if isinstance(p_node, dict):
             return {k: walk(ax_node[k], p_node[k], path + [k]) for k in p_node}
         if isinstance(p_node, list):
@@ -443,17 +503,12 @@ class Engine:
                 "quant_matmul path is unavailable; serving dequantized "
                 "weights instead", stacklevel=2)
             use_packed = False
-        if use_packed and serve_cfg.extra_precision:
-            warnings.warn(
-                "ServeConfig.use_packed does not support extra_precision; "
-                "serving dequantized weights instead", stacklevel=2)
-            use_packed = False
         self.packed = use_packed
         bits = serve_cfg.bits
-        # hashable representation key: int (uniform) / tuple (Mix'n'Match)
-        self._packed_key = (bits if isinstance(bits, int)
-                            else tuple(int(b) for b in bits)) if use_packed \
-            else None
+        # hashable representation key: int (uniform) / per-layer tuple
+        # (Mix'n'Match) / (key, "ep") with the overflow bitmap
+        self._packed_key = packing_lib.packed_rep_key(
+            bits, serve_cfg.extra_precision) if use_packed else None
         if use_packed:
             cfg = cfg.replace(quant=dataclasses.replace(
                 cfg.quant,
@@ -462,7 +517,8 @@ class Engine:
                 # compiles; elsewhere packed planes run the jnp twin
                 packed_kernel=jax.default_backend() == "tpu"))
             self.params = materialize_packed_params(
-                params, cfg, bits if isinstance(bits, int) else list(bits))
+                params, cfg, bits if isinstance(bits, int) else list(bits),
+                extra_precision=serve_cfg.extra_precision)
         else:
             self.params = materialize_served_params(
                 params, cfg, bits, serve_cfg.extra_precision)
@@ -516,9 +572,6 @@ class Engine:
                                  "parent checkpoint, which this engine was "
                                  "built without (keep_parent=False)")
             packed = self.packed if packed is None else packed
-            if packed and self.serve_cfg.extra_precision:
-                raise ValueError("packed elastic tiers do not support "
-                                 "extra_precision")
             tiers = tiers or router_mod.default_tiers(self.cfg.num_layers)
             cache = router_mod.TierCache(
                 self._parent_params, self.cfg,
@@ -526,14 +579,18 @@ class Engine:
                 packed=packed)
             own = self.serve_cfg.bits
             own = tuple(own) if isinstance(own, (list, tuple)) else own
+            own_ep = self.serve_cfg.extra_precision
             for tier in tiers:
                 # this engine's fixed tier is already materialized --
                 # seed the cache instead of re-quantizing a second copy
                 # (only when the stored representation matches what the
-                # cache would build for that tier; with packed=True every
-                # tier -- uniform or Mix'n'Match -- is packed)
+                # cache would build for that tier: same bits AND same
+                # effective extra-precision -- the cache-wide ep flag
+                # promotes every tier; with packed=True every tier --
+                # uniform, Mix'n'Match, or ep -- is packed)
                 tb = tier.bits if isinstance(tier.bits, int) else tuple(tier.bits)
-                if tb != own:
+                tier_ep = tier.extra_precision or self.serve_cfg.extra_precision
+                if tb != own or tier_ep != own_ep:
                     continue
                 if packed == self.packed:
                     cache.seed(tier, self.params,

@@ -72,14 +72,17 @@ class ServeMetrics:
         rec.generated_tokens = generated_tokens
 
     def on_tier_bytes(self, tier: str, *, packed_bits, packed_nbytes: int,
-                      weight_nbytes: int):
+                      weight_nbytes: int, effective_bits: float = 0.0):
         """Record the measured HBM weight footprint of a served tier
         (fed by the scheduler on every tier activation, so the
-        downgrade -> fewer-weight-bytes claim is a reported number)."""
+        downgrade -> fewer-weight-bytes claim is a reported number).
+        `effective_bits` is the Table 7 accounting of the served planes
+        (base bits + overflow fraction for extra-precision tiers)."""
         self.tier_weight_bytes[tier] = {
             "packed_bits": packed_bits,
             "packed_nbytes": int(packed_nbytes),
             "weight_nbytes": int(weight_nbytes),
+            "effective_bits": float(effective_bits),
         }
 
     # -- per-step counters -------------------------------------------------

@@ -4,8 +4,13 @@ The MatQuant deployment story (paper §5.4) stores ONE int8 parent
 checkpoint; any sliced precision of it is a valid model. That turns
 precision into a runtime knob: when the request queue grows past what
 the current tier can drain, the router downgrades (int8 -> int4 ->
-Mix'n'Match ~3.x -> int2), trading quality for ~2x decode-arithmetic
-savings per step down; when load subsides it recovers toward int8.
+Mix'n'Match ~3.x -> extra-precision int2 -> int2), trading quality for
+~2x decode-arithmetic savings per step down; when load subsides it
+recovers toward int8. The extra-precision rung (Errata Eq. 8) spends a
+1-bit overflow bitmap on the int2 plane -- the paper's strongest
+low-bit representation, ~6% better than plain int2 at ~2.05 effective
+bits -- so the ladder degrades through it before giving up the
+overflow bucket entirely.
 
 Downgrades apply immediately (load spikes need an immediate response);
 upgrades require the measured load to sit below the lower tier's
@@ -26,22 +31,25 @@ the scheduler can flip tiers between two decode steps. Two layouts:
     cuts HBM weight bytes per step. Uniform-int tiers keep stacked
     planes (incl. MoE expert stacks, consumed batched-over-experts);
     Mix'n'Match tiers store per-layer planes, each layer sliced at its
-    own r (layers unstacked into a list -- plane shapes depend on r).
-    Packed plane shapes depend on the representation, so the scheduler
-    keeps one compiled step per `TierEntry.packed_bits` key (an int for
-    uniform tiers, the per-layer bits tuple for Mix'n'Match; lazily
-    warmed, a dict lookup on revisit).
+    own r (layers unstacked into a list -- plane shapes depend on r);
+    extra-precision tiers additionally carry the packed 1-bit overflow
+    bitmap on every plane (PackedPlane.overflow), composed in-kernel.
+    Packed plane shapes/structures depend on the representation, so
+    the scheduler keeps one compiled step per `TierEntry.packed_bits`
+    key (`PrecisionTier.packed_key`; lazily warmed, a dict lookup on
+    revisit).
 
 `get` returns a `TierEntry` carrying the params, the packed key
-(None on the dequantized path) and measured weight bytes, so the
-scheduler/benchmarks report the bytes claim instead of asserting it.
+(None on the dequantized path) and measured weight bytes/effective
+bits, so the scheduler/benchmarks report the bytes claim instead of
+asserting it.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core import mixnmatch
+from repro.core import mixnmatch, packing
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,24 +57,51 @@ class PrecisionTier:
     """A servable precision of the parent checkpoint.
 
     bits: int (uniform slice) or a per-layer tuple (Mix'n'Match).
+    extra_precision: Errata Eq. 8 -- serve the overflow bucket as a
+      1-bit bitmap plane on top of the `bits`-bit base plane.
+
+    This dataclass is the ONE place a tier's identity lives: the
+    router ladder orders instances of it, `TierCache` materializes
+    from its fields, and `packed_key` is the representation key the
+    scheduler compiles one step closure per. Adding a tier to the
+    ladder is a single `default_tiers` edit.
     """
     name: str
     bits: int | tuple[int, ...]
+    extra_precision: bool = False
 
     @property
     def effective_bits(self) -> float:
-        if isinstance(self.bits, int):
-            return float(self.bits)
-        return mixnmatch.effective_bits(self.bits)
+        """STORED bits/weight of the tier (ladder ordering + roofline).
+
+        For an extra-precision tier this counts the densely stored
+        1-bit bitmap (r + 1); the paper's Table 7 effective bits
+        (r + overflow fraction, ~2.05 for int2+ep) depend on the
+        weights and are measured at materialization time
+        (`TierEntry.effective_bits`).
+        """
+        base = (float(self.bits) if isinstance(self.bits, int)
+                else mixnmatch.effective_bits(self.bits))
+        return base + 1.0 if self.extra_precision else base
+
+    @property
+    def packed_key(self):
+        """Hashable packed-representation key (see packing.packed_rep_key)."""
+        return packing.packed_rep_key(self.bits, self.extra_precision)
 
 
 def default_tiers(num_layers: int) -> tuple[PrecisionTier, ...]:
-    """int8 -> int4 -> Mix'n'Match ~3.3 -> int2, best quality first."""
+    """int8 -> int4 -> Mix'n'Match ~3.3 -> int2+ep -> int2, best first.
+
+    The int2+ep rung stores 3 bits/weight (2-bit plane + dense 1-bit
+    overflow bitmap) -- between Mix'n'Match ~3.3 and int2 in HBM bytes
+    -- and serves ~2.05 Table-7 effective bits."""
     mnm = tuple(mixnmatch.assign(num_layers, 3.3, "pyramid"))
     return (
         PrecisionTier("int8", 8),
         PrecisionTier("int4", 4),
         PrecisionTier(f"mixnmatch{mixnmatch.effective_bits(mnm):.1f}", mnm),
+        PrecisionTier("int2+ep", 2, extra_precision=True),
         PrecisionTier("int2", 2),
     )
 
@@ -75,11 +110,11 @@ class ElasticPrecisionRouter:
     """Maps a scalar load signal to a tier index with hysteresis.
 
     thresholds[i] is the load above which tier i is insufficient: with
-    tiers (int8, int4, mnm, int2) and thresholds (4, 8, 16), load <= 4
-    serves int8, 4 < load <= 8 serves int4, ..., load > 16 serves int2.
-    The load signal the scheduler feeds is queue depth + a backlog term
-    (queued prompt tokens / slot capacity), so both many small requests
-    and few huge ones push precision down.
+    tiers (int8, int4, mnm, int2+ep, int2) and thresholds (4, 8, 16,
+    32), load <= 4 serves int8, 4 < load <= 8 serves int4, ..., load >
+    32 serves int2. The load signal the scheduler feeds is queue depth
+    + a backlog term (queued prompt tokens / slot capacity), so both
+    many small requests and few huge ones push precision down.
     """
 
     def __init__(self, tiers, thresholds=None, cooldown: int = 4):
@@ -128,21 +163,29 @@ class TierEntry:
     """One materialized, servable tier.
 
     packed_bits: hashable key of the packed representation (selects the
-      scheduler's compiled closure): the static bitwidth for a uniform
-      tier, the per-layer bits TUPLE for a packed Mix'n'Match tier, or
-      None for the dequantized layout.
-    packed_nbytes: bytes of the sliced weight planes as served -- the
-      HBM weight traffic of one decode step, shrinking with the tier's
-      per-layer bit sum (2x per uniform step down int8 -> int4 -> int2,
-      in between for Mix'n'Match).
+      scheduler's compiled closure; `PrecisionTier.packed_key`): the
+      static bitwidth for a uniform tier, the per-layer bits TUPLE for
+      a packed Mix'n'Match tier, `(key, "ep")` for an extra-precision
+      tier, or None for the dequantized layout.
+    packed_nbytes: bytes of the sliced weight planes as served
+      (including the ep overflow bitmaps) -- the HBM weight traffic of
+      one decode step, shrinking with the tier's per-layer bit sum
+      (2x per uniform step down int8 -> int4 -> int2; Mix'n'Match and
+      int2+ep land in between).
     weight_nbytes: packed_nbytes plus the tier-independent per-channel
       scales (alpha/beta).
+    effective_bits: measured bits/weight of the served planes under the
+      paper's Table 7 accounting -- plane bits plus one bit per weight
+      that actually lands in the overflow bucket (~2.05 for int2+ep),
+      NOT the dense bitmap storage cost. Falls back to the tier's
+      nominal effective bits on the dequantized path.
     """
     name: str
     params: object = dataclasses.field(repr=False)
-    packed_bits: int | tuple[int, ...] | None = None
+    packed_bits: int | tuple | None = None
     packed_nbytes: int = 0
     weight_nbytes: int = 0
+    effective_bits: float = 0.0
 
 
 class TierCache:
@@ -151,47 +194,68 @@ class TierCache:
     packed=True serves EVERY tier as packed r-bit planes sliced from
     one pre-packed int8 parent (built once, on first use): uniform-int
     tiers as stacked planes, per-layer Mix'n'Match tiers as per-layer
-    planes (each layer at its own r, layers unstacked into a list).
-    `get` returns a TierEntry.
+    planes (each layer at its own r, layers unstacked into a list),
+    extra-precision tiers with the packed overflow bitmap on each
+    plane. `get` returns a TierEntry.
+
+    `extra_precision=True` (the cache-wide flag, from
+    ServeConfig.extra_precision) promotes EVERY tier to its ep variant
+    -- tiers that flag ep themselves (the ladder's int2+ep rung) get it
+    regardless.
     """
 
     def __init__(self, parent_params, cfg, *, extra_precision: bool = False,
                  packed: bool = False):
         from repro.serve import engine as _engine   # avoid import cycle
-        if packed and extra_precision:
-            raise ValueError("packed tier serving does not support "
-                             "extra_precision")
         self._engine = _engine
         self.parent_params = parent_params
         self.cfg = cfg
         self.extra_precision = extra_precision
         self.packed = packed
         self._cache: dict[str, TierEntry] = {}
+        # packed representation key -> first tier name serving it: two
+        # rungs that normalize to the SAME representation (e.g. int2 and
+        # int2+ep under the cache-wide ep flag) share one params copy
+        # instead of materializing byte-identical planes twice
+        self._by_key: dict[object, str] = {}
         self._packed_parent = None      # {path: PackedLinear}, built once
 
     def _entry(self, tier: PrecisionTier, params, packed_bits):
         plane, total = self._engine.served_weight_nbytes(params, self.cfg)
+        eff = self._engine.served_effective_bits(params)
         return TierEntry(name=tier.name, params=params,
                          packed_bits=packed_bits,
-                         packed_nbytes=plane, weight_nbytes=total)
+                         packed_nbytes=plane, weight_nbytes=total,
+                         effective_bits=(tier.effective_bits if eff is None
+                                         else eff))
 
     def get(self, tier: PrecisionTier) -> TierEntry:
+        if self.extra_precision and not tier.extra_precision:
+            tier = dataclasses.replace(tier, extra_precision=True)
         if tier.name not in self._cache:
             if self.packed:
-                if self._packed_parent is None:
-                    self._packed_parent = self._engine.build_packed_parent(
-                        self.parent_params, self.cfg)
-                uniform = isinstance(tier.bits, int)
-                params = self._engine.materialize_packed_params(
-                    self.parent_params, self.cfg,
-                    tier.bits if uniform else list(tier.bits),
-                    parent=self._packed_parent)
-                packed_bits = tier.bits if uniform else tuple(tier.bits)
+                packed_bits = tier.packed_key
+                alias = self._by_key.get(packed_bits)
+                if alias is not None:
+                    # same representation already materialized under
+                    # another rung name: share its params
+                    params = self._cache[alias].params
+                else:
+                    if self._packed_parent is None:
+                        self._packed_parent = self._engine.build_packed_parent(
+                            self.parent_params, self.cfg)
+                    uniform = isinstance(tier.bits, int)
+                    params = self._engine.materialize_packed_params(
+                        self.parent_params, self.cfg,
+                        tier.bits if uniform else list(tier.bits),
+                        parent=self._packed_parent,
+                        extra_precision=tier.extra_precision)
+                    self._by_key[packed_bits] = tier.name
             else:
                 bits = (tier.bits if isinstance(tier.bits, int)
                         else list(tier.bits))
                 params = self._engine.materialize_served_params(
-                    self.parent_params, self.cfg, bits, self.extra_precision)
+                    self.parent_params, self.cfg, bits, tier.extra_precision)
                 packed_bits = None
             self._cache[tier.name] = self._entry(tier, params, packed_bits)
         return self._cache[tier.name]
@@ -199,6 +263,10 @@ class TierCache:
     def seed(self, tier: PrecisionTier, params, packed_bits=None):
         """Adopt already-materialized served params for `tier` (e.g. the
         engine's own fixed tier) instead of building a second copy."""
+        if self.extra_precision and not tier.extra_precision:
+            tier = dataclasses.replace(tier, extra_precision=True)
+        if self.packed and packed_bits is not None:
+            self._by_key.setdefault(packed_bits, tier.name)
         self._cache[tier.name] = self._entry(tier, params, packed_bits)
 
     @property

@@ -14,9 +14,11 @@ The loop per `step()`:
      step serves them without recompiling; PACKED tiers (TierEntry.
      packed_bits set) swap the r-bit planes the kernel reads, and the
      scheduler keeps one jitted prefill/decode closure per packed
-     bitwidth -- lazily compiled on the first visit, a dict lookup on
-     every revisit, so a downgrade also cuts HBM weight bytes instead
-     of only changing quality.
+     representation key (bitwidth / per-layer bits tuple / `(key,
+     "ep")` with the overflow bitmap -- see `_step_fns`) -- lazily
+     compiled on the first visit, a dict lookup on every revisit, so a
+     downgrade also cuts HBM weight bytes instead of only changing
+     quality.
   2. ADMIT -- pop queued requests while the page pool can seat them.
      All same-step admissions are BATCHED: grouped by padded
      prompt-length bucket, each bucket runs ONE jitted
@@ -188,13 +190,36 @@ class ContinuousBatchingScheduler:
     def _step_fns(self, key) -> dict:
         """(prefill, decode) jitted closures for one weight representation.
 
-        `key` is the packed representation serving right now: a bitwidth
-        int for a uniform tier, the per-layer bits tuple for a packed
-        Mix'n'Match tier, None for dequantized. The bitwidths themselves
-        ride statically on each PackedPlane, so each packed tier gets its
-        own compile -- warmed on first visit, reused forever after;
-        switching back to an already-visited representation never
-        recompiles.
+        WHY a keyed cache exists at all: packed tiers differ in pytree
+        STRUCTURE, not just values. Every `core.packing.PackedPlane`
+        carries (bits, pack_axis, extra_precision) as static aux data,
+        so two tiers' params have different treedefs and a single
+        jitted closure cannot serve both -- XLA would need a retrace
+        anyway, and tracing through the wrong closure would misread the
+        packed words. Keying one closure pair per representation turns
+        that forced retrace into: compile once on the FIRST visit of a
+        representation, dict lookup on every revisit (the no-recompile-
+        on-revisit guarantee the tier-switch tests pin down).
+
+        `key` is `core.packing.packed_rep_key` of the tier serving right
+        now (== `TierEntry.packed_bits`):
+
+          * int          -- uniform packed tier (e.g. 4);
+          * tuple[int]   -- packed Mix'n'Match tier, the per-layer bits
+                            (layers are unstacked lists of planes, each
+                            with its own static r);
+          * (key, "ep")  -- extra-precision variant of either: every
+                            plane additionally carries the 1-bit
+                            overflow bitmap leaf, a different treedef
+                            from the plain tier at the same bits;
+          * None         -- dequantized params. ALL dequantized tiers
+                            share one pytree structure and dtype, so
+                            this single closure serves every one of
+                            them with no retrace on a switch.
+
+        The closure only needs cfg.quant.packed_bits for legacy dict
+        planes (PackedPlane is self-describing), hence the int-only
+        passthrough below.
         """
         fns = self._fns.get(key)
         if fns is not None:
@@ -240,7 +265,8 @@ class ContinuousBatchingScheduler:
         self.packed_bits = entry.packed_bits
         self.metrics.on_tier_bytes(tier.name, packed_bits=entry.packed_bits,
                                    packed_nbytes=entry.packed_nbytes,
-                                   weight_nbytes=entry.weight_nbytes)
+                                   weight_nbytes=entry.weight_nbytes,
+                                   effective_bits=entry.effective_bits)
 
     def reset(self):
         """Clear all requests/bookkeeping but keep the compiled closures.

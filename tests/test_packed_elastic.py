@@ -106,7 +106,9 @@ def _drive(sched, cfg, indices):
 def test_tier_switch_no_recompile_within_bitwidth_and_exact_results(served):
     params, cfg, eng = served
     # cooldown is huge so the router holds whatever index the test sets
-    switches = [0, 1, 3, 1, 0, 3]           # int8 -> int4 -> int2 -> ...
+    # (index 4 = int2 on the 5-rung ladder; int2+ep is covered in
+    # tests/test_packed_ep.py)
+    switches = [0, 1, 4, 1, 0, 4]           # int8 -> int4 -> int2 -> ...
     sp = eng.scheduler(elastic=True, packed=True, cooldown=10_000)
     sd = eng.scheduler(elastic=True, packed=False, cooldown=10_000)
     rp = _drive(sp, cfg, switches)

@@ -1,0 +1,232 @@
+"""Packed extra-precision (overflow-bitmap) serving: the interpret-mode
+kernel composes the 2^r-valued overflow term in-tile and matches the
+dequantized Errata-Eq.-8 oracle on every plane layout (dense K-packed,
+MoE expert stacks, N-packed down projections); TierCache reports the
+dense bitmap in packed bytes and the Table-7 effective bits; the
+elastic scheduler downgrades into the int2+ep rung mid-flight with one
+compile per representation key."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import packing, quant
+from repro.core.packing import PackedLinear, PackedPlane, packed_rep_key
+from repro.kernels import ops
+from repro.models import api
+from repro.serve import (Engine, Request, ServeConfig, TierCache,
+                         default_tiers, materialize_packed_params,
+                         materialize_served_params)
+from repro.serve.engine import build_packed_parent
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen3_1_7b").reduced()
+    params = api.init(KEY, cfg)
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=4,
+                                          page_size=8))
+    return params, cfg, eng
+
+
+# ---------------------------------------------------------------------------
+# interpret-kernel oracle: plane_matmul(ep) == dequantized ep matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_plane_matmul_ep_dense_matches_dequant_oracle(bits):
+    """One kernel call composes base plane + 2^r-valued overflow term;
+    K is a multiple of 32, so this runs the Pallas kernel (interpret)."""
+    k, n = 128, 64
+    w = jax.random.normal(jax.random.fold_in(KEY, bits), (k, n), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, bits + 1), (3, k),
+                          jnp.float32)
+    plane = PackedLinear.from_weights(w).materialize_plane(
+        bits, extra_precision=True)
+    assert plane.extra_precision and plane.overflow is not None
+    assert plane.overflow.shape == (k // 32, n)
+    y = ops.plane_matmul(x, plane, use_kernel=True)
+    ref = x @ quant.quant_dequant(w, 8, bits, axis=0, extra_precision=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # the jnp twin is the same math
+    y_twin = ops.plane_matmul(x, plane, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_twin), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_plane_matmul_ep_expert_stack_matches_oracle(bits):
+    """Extra-precision MoE expert stack through the expert-batched
+    kernel: the (E, K/32, N) bitmap rides the same grid over E."""
+    E, M, k, n = 3, 5, 64, 32
+    w = jax.random.normal(jax.random.fold_in(KEY, 10 + bits), (E, k, n),
+                          jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 11 + bits), (E, M, k),
+                          jnp.float32)
+    plane = PackedLinear.from_weights(w).materialize_plane(
+        bits, extra_precision=True)
+    assert plane.overflow.shape == (E, k // 32, n)
+    y = ops.plane_matmul(x, plane, use_kernel=True)
+    ref = jax.vmap(
+        lambda xe, we: xe @ quant.quant_dequant(we, 8, bits, axis=0,
+                                                extra_precision=True))(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_plane_matmul_ep_n_packed_matches_oracle():
+    """N-packed (down/wo-type) ep plane: the jnp twin adds the overflow
+    term to codes unpacked along the OUTPUT dim."""
+    k, n = 48, 40                      # ragged vs cpw on both dims
+    w = jax.random.normal(jax.random.fold_in(KEY, 20), (k, n), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 21), (2, k), jnp.float32)
+    plane = PackedLinear.from_weights(w, pack_axis=-1).materialize_plane(
+        2, extra_precision=True)
+    assert plane.pack_axis == -1
+    y = ops.plane_matmul(x, plane, use_kernel=True)
+    ref = x @ quant.quant_dequant(w, 8, 2, axis=0, extra_precision=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ep_decode_step_matches_dequant_on_interpret_kernel(served):
+    """Full packed ep decode step == dequantized ep decode step."""
+    params, cfg, _ = served
+    cfg_k = cfg.replace(quant=dataclasses.replace(
+        cfg.quant, packed_bits=2, packed_kernel=True))
+    pp = materialize_packed_params(params, cfg_k, 2, extra_precision=True)
+    up = pp["layers"]["ffn"]["up"]["w"]
+    assert isinstance(up, PackedPlane) and up.extra_precision
+    sp = materialize_served_params(params, cfg, 2, True)
+    state = api.init_state(cfg, 2, 16)
+    tok = jax.random.randint(jax.random.fold_in(KEY, 30), (2, 1), 0,
+                             cfg.vocab_size)
+    pos = jnp.asarray([3, 7], jnp.int32)
+    lk, _ = api.decode_step_slots(pp, state, tok, pos, cfg_k, bits=None)
+    ld, _ = api.decode_step_slots(sp, state, tok, pos, cfg, bits=None)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(ld),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(lk, -1)),
+                                  np.asarray(jnp.argmax(ld, -1)))
+
+
+def test_moe_ep_decode_matches_dequant_on_interpret_kernel():
+    """Packed ep on the MoE layout: expert-batched ep kernel for the
+    K-packed up/gate stacks, ep jnp twin for the N-packed down."""
+    cfg = get_config("granite_moe_1b_a400m").reduced()
+    params = api.init(KEY, cfg)
+    cfg_k = cfg.replace(quant=dataclasses.replace(
+        cfg.quant, packed_bits=2, packed_kernel=True))
+    pp = materialize_packed_params(params, cfg_k, 2, extra_precision=True)
+    up = pp["layers"]["moe"]["up"]["w"]
+    down = pp["layers"]["moe"]["down"]["w"]
+    assert up.extra_precision and up.pack_axis == -2 and up.words.ndim == 4
+    assert down.extra_precision and down.pack_axis == -1
+    sp = materialize_served_params(params, cfg, 2, True)
+    state = api.init_state(cfg, 2, 16)
+    tok = jax.random.randint(jax.random.fold_in(KEY, 31), (2, 1), 0,
+                             cfg.vocab_size)
+    pos = jnp.asarray([3, 7], jnp.int32)
+    lk, _ = api.decode_step_slots(pp, state, tok, pos, cfg_k, bits=None)
+    ld, _ = api.decode_step_slots(sp, state, tok, pos, cfg, bits=None)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(ld),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# effective bytes/bits == the analytic quant.py Table 7 accounting
+# ---------------------------------------------------------------------------
+
+
+def test_tier_bytes_and_effective_bits_match_table7_accounting(served):
+    params, cfg, _ = served
+    cfg4 = cfg.replace(num_layers=4)
+    params4 = api.init(KEY, cfg4)
+    cache = TierCache(params4, cfg4, packed=True)
+    tiers = {t.name: t for t in default_tiers(cfg4.num_layers)}
+    ep = cache.get(tiers["int2+ep"])
+    assert ep.packed_bits == (2, "ep") == packed_rep_key(2, True)
+    # stored bytes: 2-bit plane + dense 1-bit bitmap on every projection
+    d, f, L = cfg4.d_model, cfg4.d_ff, cfg4.num_layers
+    expected = L * (
+        packing.packed_nbytes(d, f, 2, -2, extra_precision=True) * 2 +
+        packing.packed_nbytes(f, d, 2, -1, extra_precision=True))
+    assert ep.packed_nbytes == expected
+    # measured effective bits == analytic Table 7 accounting over the
+    # SAME parent codes each plane was sliced from: r + overflow frac
+    parent = build_packed_parent(params4, cfg4)
+    num = den = 0.0
+    for pl in parent.values():
+        codes = packing.unpack_codes(pl.words, 8, pl._packed_len,
+                                     axis=pl.pack_axis)
+        num += float(quant.effective_bits(codes, 8, 2)) * codes.size
+        den += codes.size
+    np.testing.assert_allclose(ep.effective_bits, num / den, rtol=1e-6)
+    assert 2.0 <= ep.effective_bits <= 2.2
+    # the bytes staircase is strict: int8 > int4 > mnm3.5 > int2+ep > int2
+    ladder = [cache.get(t).packed_nbytes for t in default_tiers(L)]
+    assert all(a > b for a, b in zip(ladder, ladder[1:]))
+
+
+# ---------------------------------------------------------------------------
+# mid-flight downgrade into int2+ep: exact, one compile per key
+# ---------------------------------------------------------------------------
+
+
+def _drive(sched, cfg, indices):
+    rng = np.random.default_rng(11)
+    for i in range(2):
+        sched.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                             max_new_tokens=len(indices) + 1))
+    for idx in indices:
+        sched.router.index = idx
+        sched.step()
+    sched.router.index = 0
+    return sched.run_until_idle()
+
+
+def test_midflight_downgrade_into_int2_ep_no_recompile_on_revisit(served):
+    params, cfg, eng = served
+    switches = [0, 3, 4, 3, 0, 3]          # int8 -> int2+ep -> int2 -> ...
+    sp = eng.scheduler(elastic=True, packed=True, cooldown=10_000)
+    sd = eng.scheduler(elastic=True, packed=False, cooldown=10_000)
+    rp = _drive(sp, cfg, switches)
+    rd = _drive(sd, cfg, switches)
+    # packed ep planes and dequantized ep weights decode the same tokens
+    for uid in rd:
+        np.testing.assert_array_equal(rp[uid], rd[uid])
+    # one closure per representation: the ep rung keys (2, "ep"),
+    # distinct from plain int2's 2 -- and revisiting either never
+    # recompiled (exactly one decode trace per key)
+    assert {8, 2, (2, "ep")} <= set(sp._fns)
+    assert set(sd._fns) == {None}
+    for key in (8, 2, (2, "ep")):
+        assert sp._fns[key]["decode"]._cache_size() == 1
+
+
+def test_engine_packed_ep_generate_matches_dequant(served, monkeypatch):
+    """The engine-level fixed tier: use_packed + extra_precision serves
+    (no fallback) and generates the same tokens as the dequant ep path."""
+    params, cfg, _ = served
+    import repro.serve.engine as engine_mod
+    monkeypatch.setattr(engine_mod, "_packed_backend_ok", lambda: True)
+    eng = Engine(params, cfg, ServeConfig(bits=2, max_len=32, num_slots=2,
+                                          page_size=8, use_packed=True,
+                                          extra_precision=True))
+    assert eng.packed and eng._packed_key == (2, "ep")
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 40), (2, 8), 0,
+                                 cfg.vocab_size)
+    out = np.asarray(eng.generate(prompts, 4))
+    batch_sched = next(iter(eng._schedulers.values()))
+    assert set(batch_sched._fns) == {(2, "ep")}
+    ref = Engine(params, cfg, ServeConfig(bits=2, max_len=32, num_slots=2,
+                                          page_size=8, extra_precision=True))
+    np.testing.assert_array_equal(out, np.asarray(ref.generate(prompts, 4)))

@@ -232,7 +232,7 @@ def test_mnm_packed_tier_switch_no_recompile_and_exact(moe_served):
     params, cfg, eng = moe_served
     mnm = next(t for t in default_tiers(cfg.num_layers)
                if not isinstance(t.bits, int))
-    switches = [0, 2, 3, 2, 0]             # int8 -> mnm -> int2 -> mnm ...
+    switches = [0, 2, 3, 2, 0]             # int8 -> mnm -> int2+ep -> ...
     sp = eng.scheduler(elastic=True, packed=True, cooldown=10_000)
     sd = eng.scheduler(elastic=True, packed=False, cooldown=10_000)
     rp = _drive(sp, cfg, switches)
@@ -254,29 +254,35 @@ def test_mnm_packed_tier_switch_no_recompile_and_exact(moe_served):
 # ---------------------------------------------------------------------------
 
 
-def _expected_tier_nbytes(cfg, bits_per_layer):
+def _expected_tier_nbytes(cfg, bits_per_layer, ep=False):
     """Sum packing.packed_nbytes over layers x projections (x experts)."""
     d, f = cfg.d_model, cfg.d_ff
     E = cfg.num_experts or 1
     total = 0
     for b in bits_per_layer:
-        per_proj = (packing.packed_nbytes(d, f, b, -2) * 2 +   # up, gate
-                    packing.packed_nbytes(f, d, b, -1))        # down (N-packed)
+        per_proj = (packing.packed_nbytes(d, f, b, -2,            # up, gate
+                                          extra_precision=ep) * 2 +
+                    packing.packed_nbytes(f, d, b, -1,            # down
+                                          extra_precision=ep))    # (N-packed)
         total += E * per_proj
     return total
 
 
 @pytest.mark.parametrize("arch", ["granite_moe_1b_a400m", "qwen3_1_7b"])
 def test_per_tier_packed_nbytes_match_per_layer_sum(arch):
-    cfg = get_config(arch).reduced()
+    # 4 layers so the Mix'n'Match tier (3.5 eff bits) sits strictly
+    # between int4 and int2+ep's 3 stored bits/weight in the staircase
+    cfg = get_config(arch).reduced().replace(num_layers=4)
     params = api.init(KEY, cfg)
     cache = TierCache(params, cfg, packed=True)
     entries = {t.name: (cache.get(t), t) for t in default_tiers(cfg.num_layers)}
     for name, (entry, tier) in entries.items():
         bits = ([tier.bits] * cfg.num_layers if isinstance(tier.bits, int)
                 else list(tier.bits))
-        assert entry.packed_nbytes == _expected_tier_nbytes(cfg, bits), name
-    # strictly decreasing per the per-layer bit sum: int8 > int4 > mnm > int2
+        assert entry.packed_nbytes == _expected_tier_nbytes(
+            cfg, bits, ep=tier.extra_precision), name
+    # strictly decreasing per the per-layer (stored) bit sum:
+    # int8 > int4 > mnm3.5 > int2+ep > int2
     ordered = [e.packed_nbytes for e, t in
                sorted(entries.values(),
                       key=lambda et: -et[1].effective_bits)]

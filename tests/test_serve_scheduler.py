@@ -164,16 +164,19 @@ def test_defrag_compacts_and_preserves_outputs(served):
 
 def test_router_downgrades_then_recovers():
     tiers = default_tiers(2)
-    r = ElasticPrecisionRouter(tiers, thresholds=(2, 6, 12), cooldown=2)
+    assert [t.name for t in tiers] == [
+        "int8", "int4", tiers[2].name, "int2+ep", "int2"]
+    r = ElasticPrecisionRouter(tiers, thresholds=(2, 6, 12, 20), cooldown=2)
     assert r.tier.name == "int8"
-    assert r.observe(20.0).name == "int2"          # overload: immediate drop
-    assert r.observe(20.0).name == "int2"
-    # calm load: recover one tier per `cooldown` observations
-    names = [r.observe(0.0).name for _ in range(6)]
-    assert names == ["int2", tiers[2].name, tiers[2].name, "int4",
-                     "int4", "int8"]
+    assert r.observe(30.0).name == "int2"          # overload: immediate drop
+    assert r.observe(30.0).name == "int2"
+    # calm load: recover one tier per `cooldown` observations, stepping
+    # back UP through the extra-precision rung before Mix'n'Match
+    names = [r.observe(0.0).name for _ in range(8)]
+    assert names == ["int2", "int2+ep", "int2+ep", tiers[2].name,
+                     tiers[2].name, "int4", "int4", "int8"]
     # hysteresis: a single calm step does not upgrade
-    r2 = ElasticPrecisionRouter(tiers, thresholds=(2, 6, 12), cooldown=3)
+    r2 = ElasticPrecisionRouter(tiers, thresholds=(2, 6, 12, 20), cooldown=3)
     r2.observe(8.0)
     assert r2.tier.name == tiers[2].name
     r2.observe(1.0)
@@ -185,7 +188,7 @@ def test_elastic_scheduler_downgrades_under_load(served):
     params, cfg, _ = served
     eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=2,
                                           page_size=8))
-    sched = eng.scheduler(elastic=True, thresholds=(1, 3, 6), cooldown=2)
+    sched = eng.scheduler(elastic=True, thresholds=(1, 3, 6, 9), cooldown=2)
     rng = np.random.default_rng(0)
     for i in range(10):
         sched.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
@@ -194,7 +197,7 @@ def test_elastic_scheduler_downgrades_under_load(served):
     occ = sched.metrics.summary()["tier_occupancy"]
     assert "int2" in occ                     # deep queue hit the lowest tier
     assert len(sched.results) == 10
-    assert sched.tier.name != "int2" or sched.router.index != 3
+    assert sched.tier.name != "int2"         # drain started the recovery
     # after the drain the router has begun recovering toward int8
     for _ in range(8):
         sched.router.observe(0.0)
@@ -305,14 +308,20 @@ def test_use_packed_serves_mixnmatch_bits_per_layer(served, monkeypatch):
     assert isinstance(eng.params["layers"][0]["ffn"]["down"]["w"], PackedPlane)
 
 
-def test_use_packed_rejects_extra_precision(served, monkeypatch):
+def test_use_packed_supports_extra_precision(served, monkeypatch):
+    """PR 4: ServeConfig(use_packed=True, extra_precision=True) serves
+    packed planes carrying the overflow bitmap -- no dequant fallback."""
+    from repro.core.packing import PackedPlane
     params, cfg, _ = served
     monkeypatch.setattr(engine_mod, "_packed_backend_ok", lambda: True)
-    with pytest.warns(UserWarning, match="extra_precision"):
-        eng = Engine(params, cfg, ServeConfig(bits=4, max_len=24,
-                                              use_packed=True,
-                                              extra_precision=True))
-    assert not eng.packed
+    eng = Engine(params, cfg, ServeConfig(bits=4, max_len=24,
+                                          use_packed=True,
+                                          extra_precision=True))
+    assert eng.packed
+    assert eng._packed_key == (4, "ep")
+    plane = eng.params["layers"]["ffn"]["up"]["w"]
+    assert isinstance(plane, PackedPlane) and plane.extra_precision
+    assert plane.overflow is not None
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Docs fast-lane checks (CI `docs` job + `make lint`).
+
+Two guards, zero dependencies:
+
+1. Markdown link integrity: every relative link target in README.md,
+   ROADMAP.md, and docs/*.md must exist on disk (anchors stripped;
+   http(s)/mailto links skipped -- CI must not depend on the network).
+2. Serve-flag coverage: every `--flag` registered by
+   src/repro/launch/serve.py's argparse must appear in docs/serving.md,
+   so the operator guide cannot silently drift from the driver.
+
+Exits non-zero listing every failure (not just the first).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FLAG_RE = re.compile(r"add_argument\(\s*\"(--[a-z][a-z0-9-]*)\"")
+
+
+def doc_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md", ROOT / "ROADMAP.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in doc_files():
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                    # pure in-page anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_serve_flags() -> list[str]:
+    serve_py = ROOT / "src" / "repro" / "launch" / "serve.py"
+    serving_md = ROOT / "docs" / "serving.md"
+    if not serving_md.exists():
+        return [f"missing {serving_md.relative_to(ROOT)}"]
+    flags = FLAG_RE.findall(serve_py.read_text())
+    if not flags:
+        return [f"no argparse flags found in {serve_py.relative_to(ROOT)} "
+                f"(pattern drift? fix tools/check_docs.py)"]
+    doc = serving_md.read_text()
+    return [f"docs/serving.md: undocumented launch/serve.py flag {f}"
+            for f in flags if f not in doc]
+
+
+def main() -> int:
+    errors = check_links() + check_serve_flags()
+    for e in errors:
+        print(f"docs check FAILED: {e}")
+    if not errors:
+        n_flags = len(FLAG_RE.findall(
+            (ROOT / "src" / "repro" / "launch" / "serve.py").read_text()))
+        print(f"docs checks OK: {len(doc_files())} markdown files linked "
+              f"cleanly, {n_flags} serve flags documented")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
