@@ -4,7 +4,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast bench-serve lint
+.PHONY: test test-fast test-shard bench-serve lint
 
 test:
 	python -m pytest -x -q
@@ -14,6 +14,13 @@ test:
 # tests/test_packed_moe_mnm.py and tests/test_packed_ep.py)
 test-fast:
 	python -m pytest -x -q -m "not slow"
+
+# TP-sharded packed serving on a forced 8-device CPU host mesh; the
+# device count must be pinned before jax is imported, so these tests
+# skip under the plain `make test` run and get their own invocation
+test-shard:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" JAX_PLATFORMS=cpu \
+	    python -m pytest -x -q tests/test_serve_tp_packed.py
 
 bench-serve:
 	python benchmarks/serve_throughput.py --reduced --out BENCH_serve.json

@@ -26,7 +26,14 @@ Runs reported side by side on the SAME trace:
     staircase int8 > int4 > mnm > int2+ep > int2 and the Table-7
     effective bits of each tier (int2+ep ~2.05: the Errata Eq. 8
     overflow bitmap costs 1 stored bit/weight but only ~0.05
-    *effective* bits, served in-kernel).
+    *effective* bits, served in-kernel);
+  * TP-sharded A/B  -- the same per-tier pinned packed replays on a
+    forced 8-device `(data, model)` host mesh (`packed_ab_tp`, one
+    subprocess per model-parallel degree so XLA_FLAGS can pin the
+    device count before jax initializes): every rung's measured
+    per-device plane bytes are exactly packed_nbytes / model_parallel
+    and the per-device staircase stays strictly decreasing -- the
+    tensor-parallel memory claim as a reported number.
 
 Reduced runs serve 4 layers (`--layers`) so the Mix'n'Match tier lands
 at 3.5 effective bits -- strictly between int4 and the int2+ep rung's
@@ -58,7 +65,8 @@ def tier_bytes(sched) -> dict:
         out[tier.name] = {"packed_bits": e.packed_bits,
                           "packed_nbytes": e.packed_nbytes,
                           "weight_nbytes": e.weight_nbytes,
-                          "effective_bits": e.effective_bits}
+                          "effective_bits": e.effective_bits,
+                          "per_device_plane_nbytes": e.per_device_plane_nbytes}
     return out
 
 
@@ -157,10 +165,94 @@ def run_per_tier_packed(engine, cfg, args):
             "packed_nbytes": entry.packed_nbytes,
             "weight_nbytes": entry.weight_nbytes,
             "effective_bits": entry.effective_bits,
+            "per_device_plane_nbytes": entry.per_device_plane_nbytes,
             "throughput_tok_s": sched.metrics.summary()["throughput_tok_s"],
         }
     nbytes = [info["packed_nbytes"] for info in tiers.values()]
     return tiers, all(a > b for a, b in zip(nbytes, nbytes[1:]))
+
+
+def run_tp_child(args):
+    """`--tp-child MP` mode: the per-tier pinned packed replay on a
+    (data, model) host mesh, run in a SUBPROCESS so the forced host
+    device count (XLA_FLAGS) is set before jax initializes. Writes the
+    `packed_ab_tp` fragment for one model-parallel degree to --out."""
+    from repro.launch.mesh import make_host_mesh
+    mp = args.tp_child
+    mesh = make_host_mesh(mp)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().replace(num_layers=args.layers)
+    params = api.init(jax.random.PRNGKey(args.seed), cfg)
+    engine = Engine(params, cfg, ServeConfig(
+        bits=8, max_len=args.prompt_len + args.gen_tokens,
+        num_slots=args.num_slots, page_size=args.page_size), mesh=mesh)
+    tiers, decreasing = run_per_tier_packed(engine, cfg, args)
+    per_dev = [info["per_device_plane_nbytes"] for info in tiers.values()]
+    fragment = {
+        "model_parallel": mp,
+        "devices": len(jax.devices()),
+        "per_tier": tiers,
+        "plane_bytes_strictly_decreasing": decreasing,
+        "per_device_plane_bytes_strictly_decreasing": all(
+            a > b for a, b in zip(per_dev, per_dev[1:])),
+        # the TP claim as a reported number: every rung's per-device
+        # footprint is exactly its total plane bytes / model_parallel
+        "per_device_equals_total_over_mp": all(
+            info["per_device_plane_nbytes"] * mp == info["packed_nbytes"]
+            for info in tiers.values()),
+    }
+    with open(args.out, "w") as f:
+        json.dump(fragment, f, indent=2)
+    return fragment
+
+
+def run_tp_ab(args) -> dict:
+    """`packed_ab_tp`: re-invoke this benchmark as a subprocess per
+    model-parallel degree on a forced `--tp-devices`-device CPU host
+    mesh (the device count must be pinned before jax is imported, which
+    an in-process run cannot do) and merge the fragments."""
+    import subprocess
+    import sys
+    import tempfile
+
+    # benchmarks/ sits next to src/ (repro is a namespace package, so
+    # its __file__ is None -- derive the import root from this file)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    out = {}
+    with tempfile.TemporaryDirectory() as tmp_dir:
+        for mp in args.tp_model_parallel:
+            frag_path = os.path.join(tmp_dir, f"tp{mp}.json")
+            env = dict(os.environ)
+            env["JAX_PLATFORMS"] = "cpu"
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                                f" --xla_force_host_platform_device_count="
+                                f"{args.tp_devices}").strip()
+            env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+            cmd = [sys.executable, os.path.abspath(__file__),
+                   "--tp-child", str(mp), "--arch", args.arch,
+                   "--layers", str(args.layers),
+                   "--requests", str(args.tp_requests),
+                   "--prompt-len", str(args.prompt_len),
+                   "--gen-tokens", str(args.gen_tokens),
+                   "--arrival-rate", str(args.arrival_rate),
+                   "--num-slots", str(args.num_slots),
+                   "--page-size", str(args.page_size),
+                   "--cooldown", str(args.cooldown),
+                   "--seed", str(args.seed),
+                   "--thresholds", *map(str, args.thresholds),
+                   "--out", frag_path]
+            if args.reduced:
+                cmd.append("--reduced")
+            proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+            if proc.returncode != 0:
+                raise RuntimeError(
+                    f"packed_ab_tp child (model_parallel={mp}) failed:\n"
+                    + proc.stderr[-2000:])
+            with open(frag_path) as f:
+                out[f"mp{mp}"] = json.load(f)
+    return out
 
 
 def main(argv=None):
@@ -188,8 +280,23 @@ def main(argv=None):
     ap.add_argument("--moe-arch", default="granite_moe_1b_a400m",
                     help="MoE config for the second packed A/B "
                          "('none' skips it)")
+    ap.add_argument("--tp-model-parallel", type=int, nargs="*",
+                    default=(2, 4),
+                    help="model-parallel degrees for the packed_ab_tp "
+                         "section (per-tier pinned packed replays on a "
+                         "forced --tp-devices host mesh; empty skips it)")
+    ap.add_argument("--tp-devices", type=int, default=8,
+                    help="host device count forced (via XLA_FLAGS, in a "
+                         "subprocess) for the packed_ab_tp section")
+    ap.add_argument("--tp-requests", type=int, default=8,
+                    help="trace length for each packed_ab_tp replay "
+                         "(8-device CPU meshes simulate slowly)")
+    ap.add_argument("--tp-child", type=int, default=0, help=argparse.SUPPRESS)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
+
+    if args.tp_child:
+        return run_tp_child(args)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -266,6 +373,24 @@ def main(argv=None):
                   f"tok/s={info['throughput_tok_s']:.1f}")
         print(f"  plane-bytes staircase strictly decreasing: {decreasing}")
 
+    packed_ab_tp = None
+    if not args.skip_packed_ab and args.tp_model_parallel:
+        print(f"== TP-sharded per-tier packed replays "
+              f"({args.tp_devices}-device host mesh, "
+              f"model_parallel={list(args.tp_model_parallel)}) ==")
+        packed_ab_tp = run_tp_ab(args)
+        for mp_key, frag in packed_ab_tp.items():
+            mp = frag["model_parallel"]
+            for name, info in frag["per_tier"].items():
+                print(f"  {mp_key} tier {name:16s} "
+                      f"packed_nbytes={info['packed_nbytes']:,d} "
+                      f"per_device={info['per_device_plane_nbytes']:,d} "
+                      f"tok/s={info['throughput_tok_s']:.1f}")
+            print(f"  {mp_key}: per-device == total/{mp}: "
+                  f"{frag['per_device_equals_total_over_mp']}; per-device "
+                  f"staircase strictly decreasing: "
+                  f"{frag['per_device_plane_bytes_strictly_decreasing']}")
+
     report = {
         "bench": "serve_throughput",
         "arch": args.arch + (" (reduced)" if args.reduced else ""),
@@ -279,6 +404,7 @@ def main(argv=None):
         "packed_ab": packed_ab,
         "packed_ab_moe": packed_ab_moe,
         "packed_ab_ep": packed_ab_ep,
+        "packed_ab_tp": packed_ab_tp,
         # headline numbers (the acceptance-criterion fields)
         "throughput_tok_s": elastic["throughput_tok_s"],
         "mean_ttft_s": elastic["mean_ttft_s"],

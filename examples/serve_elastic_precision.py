@@ -4,8 +4,20 @@ Slices a single int8 parent to uniform int8/4/2, interpolated int6/int3,
 Mix'n'Match budgets, and Extra-Precision int2 (~2.05 bits), serving a
 batch of requests at each and reporting quality + packed HBM footprint.
 
+`--model-parallel N` serves on a `(data, model)` host mesh instead: the
+engine places every served tier with NamedShardings (packed planes
+shard over 'model', KV slots over 'data') and the FFN-up bytes column
+becomes the PER-DEVICE staircase -- total / N at every tier. The
+default N=1 runs the same mesh code degenerately on one device; for a
+real TP split on a CPU-only host, force devices first, e.g.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+      python examples/serve_elastic_precision.py --model-parallel 2
+
   PYTHONPATH=src python examples/serve_elastic_precision.py
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -14,9 +26,23 @@ from repro.configs import get_config
 from repro.core import mixnmatch, packing
 from repro.core.quant import QuantConfig
 from repro.data import DataConfig, SyntheticCorpus
+from repro.launch.mesh import make_host_mesh
 from repro.optim import OptConfig
+from repro.runtime.sharding import mesh_axis_sizes
 from repro.serve import Engine, ServeConfig
 from repro.train import init_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--model-parallel", type=int, default=1,
+                help="model-parallel degree of the (data, model) host mesh "
+                     "every tier is served on; must divide the local device "
+                     "count (XLA_FLAGS=--xla_force_host_platform_device_"
+                     "count=N forces CPU devices). 1 = degenerate mesh, "
+                     "same code path, per-device bytes == total")
+args = ap.parse_args()
+mp = args.model_parallel
+mesh = make_host_mesh(mp)
+print(f"serving mesh: {mesh_axis_sizes(mesh)}\n")
 
 # train a small MatQuant model to serve
 cfg = get_config("gemma2_2b").reduced().replace(
@@ -35,7 +61,7 @@ toks, labels = jnp.asarray(held["tokens"]), jnp.asarray(held["labels"])
 
 d_in, d_out = cfg.d_model, cfg.d_ff
 print(f"{'serving config':28s} {'eff bits':>8s} {'log pplx':>9s} "
-      f"{'FFN-up HBM bytes':>17s}")
+      f"{'FFN-up HBM B/device':>20s}")
 for name, bits, eff in [
     ("uniform int8", 8, 8.0),
     ("interpolated int6", 6, 6.0),
@@ -45,21 +71,26 @@ for name, bits, eff in [
     ("mix'n'match 3.0-bit", mixnmatch.assign(cfg.num_layers, 3.0), 3.0),
     ("mix'n'match 5.0-bit", mixnmatch.assign(cfg.num_layers, 5.0), 5.0),
 ]:
-    eng = Engine(params, cfg, ServeConfig(bits=bits, max_len=96))
+    eng = Engine(params, cfg, ServeConfig(bits=bits, max_len=96), mesh=mesh)
     nll = eng.score(toks, labels)
     b0 = bits if isinstance(bits, int) else min(bits)
     b_pack = next(w for w in (1, 2, 4, 8) if w >= b0)  # storage width
-    nbytes = packing.packed_nbytes(d_in, d_out, b_pack)
-    print(f"{name:28s} {eff:8.2f} {nll:9.3f} {nbytes:17,d}")
+    nbytes = packing.packed_nbytes(d_in, d_out, b_pack, model_parallel=mp)
+    print(f"{name:28s} {eff:8.2f} {nll:9.3f} {nbytes:20,d}")
 
 # Extra-Precision int2: the overflow bucket at ~0.05 extra bits
 # (served packed, the 1-bit bitmap rides the plane into the kernel;
 # stored cost is 2 + 1 bitmap bits/weight)
 eng_ep = Engine(params, cfg, ServeConfig(bits=2, max_len=96,
-                                         extra_precision=True))
-nbytes_ep = packing.packed_nbytes(d_in, d_out, 2, extra_precision=True)
+                                         extra_precision=True), mesh=mesh)
+nbytes_ep = packing.packed_nbytes(d_in, d_out, 2, extra_precision=True,
+                                  model_parallel=mp)
 print(f"{'extra-precision int2':28s} {'~2.05':>8s} "
-      f"{eng_ep.score(toks, labels):9.3f} {nbytes_ep:17,d}")
+      f"{eng_ep.score(toks, labels):9.3f} {nbytes_ep:20,d}")
+if mp > 1:
+    total = packing.packed_nbytes(d_in, d_out, 2, extra_precision=True)
+    print(f"\nper-device bytes are total/{mp} at every tier "
+          f"(e.g. ep-int2: {total:,d} -> {nbytes_ep:,d})")
 
 gen = eng_ep.generate(toks[:2, :16], 8)
 print("\nEP-int2 greedy continuations:", gen.tolist())

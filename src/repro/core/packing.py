@@ -250,7 +250,8 @@ class PackedLinear:
 
 
 def packed_nbytes(k: int, n: int, bits: int, pack_axis: int = -2,
-                  extra_precision: bool = False) -> int:
+                  extra_precision: bool = False,
+                  model_parallel: int = 1) -> int:
     """HBM bytes of one packed (k, n) plane -- roofline accounting.
 
     pack_axis selects which dim the int32 words run along: -2 packs the
@@ -259,13 +260,27 @@ def packed_nbytes(k: int, n: int, bits: int, pack_axis: int = -2,
     whenever the packed dim is not a multiple of codes-per-word.
     `extra_precision` adds the densely stored 1-bit overflow bitmap
     (cpw = 32) packed along the same axis.
+
+    `model_parallel` > 1 returns the PER-DEVICE bytes of the plane on a
+    TP mesh: the UNPACKED trailing dim is the sharded one (the output
+    dim n for K-packed planes, the reduction dim k for N-packed
+    down/wo-type planes -- exactly the placement
+    `serve.engine.packed_axes` resolves). When the sharded dim divides
+    evenly, per-device bytes are total / model_parallel; when it does
+    not, the sharding resolver leaves that plane REPLICATED, so this
+    returns the full plane size to match (per-device == total).
     """
+    mp = model_parallel
+    if mp < 1:
+        raise ValueError(f"model_parallel must be >= 1, got {mp}")
     cpw = codes_per_word(bits)
     if pack_axis in (-1, 1):
+        k = k // mp if k % mp == 0 else k      # ragged -> replicated
         nbytes = k * int(np.ceil(n / cpw)) * 4
         if extra_precision:
             nbytes += k * int(np.ceil(n / 32)) * 4
         return nbytes
+    n = n // mp if n % mp == 0 else n          # ragged -> replicated
     nbytes = int(np.ceil(k / cpw)) * n * 4
     if extra_precision:
         nbytes += int(np.ceil(k / 32)) * n * 4

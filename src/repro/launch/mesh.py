@@ -15,9 +15,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_host_mesh(model_parallel: int = 1):
     """Whatever-is-available mesh for tests/examples (elastic): uses all
-    local devices, model_parallel innermost."""
+    local devices, model_parallel innermost.
+
+    The degenerate 1-device mesh (1 device, model_parallel=1) is valid
+    on purpose: single-device serving goes through the exact same mesh
+    placement code as a real TP deployment, just with every
+    NamedSharding resolving to one shard.
+    """
     import jax
 
     n = len(jax.devices())
-    assert n % model_parallel == 0, (n, model_parallel)
+    if model_parallel < 1 or n % model_parallel != 0:
+        raise ValueError(
+            f"make_host_mesh: cannot fold {n} local device(s) into a "
+            f"(data, model={model_parallel}) mesh -- model_parallel must be "
+            f">= 1 and divide the device count. On a CPU-only host, force "
+            f"more devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"(set it in the environment BEFORE jax is imported; "
+            f"`make test-shard` does this for the sharded serving tests).")
     return make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -37,6 +37,12 @@ from repro.serve.scheduler import poisson_trace
 
 
 def build_engine(args, cfg):
+    mesh = None
+    if args.model_parallel:
+        from repro.launch.mesh import make_host_mesh
+        from repro.runtime.sharding import mesh_axis_sizes
+        mesh = make_host_mesh(args.model_parallel)
+        print(f"serving on a {mesh_axis_sizes(mesh)} host mesh")
     params = api.init(jax.random.PRNGKey(args.seed), cfg)
     if args.ckpt:
         from repro.runtime.checkpoint import CheckpointManager
@@ -55,7 +61,7 @@ def build_engine(args, cfg):
     return Engine(params, cfg, ServeConfig(
         bits=bits, max_len=args.prompt_len + args.gen_tokens,
         extra_precision=args.extra_precision, use_packed=args.packed,
-        num_slots=args.num_slots, page_size=args.page_size))
+        num_slots=args.num_slots, page_size=args.page_size), mesh=mesh)
 
 
 def build_trace(args, cfg):
@@ -85,6 +91,15 @@ def main(argv=None):
                          "tier -- uniform, Mix'n'Match, extra-precision "
                          "-- becomes packed planes so a downgrade cuts "
                          "HBM weight bytes per step")
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="serve on a (data, model) host mesh built from all "
+                         "local devices with this model-parallel degree: "
+                         "packed tier planes shard over 'model' (per-device "
+                         "plane bytes divide by it), KV slots shard over "
+                         "'data'. 0 (default) keeps the single-device path; "
+                         "1 runs the degenerate 1-device mesh through the "
+                         "same sharded code. On CPU, force devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=16)

@@ -83,6 +83,32 @@ def serving_rules() -> dict:
     rules["embed"] = []
     return rules
 
+
+# Slot-array decode state on a serving mesh: the slot (batch) axis
+# shards over 'data' (request parallelism) and the KV heads over
+# 'model' (each TP shard attends over its own heads; a kv-head count
+# that does not divide the model axis leaves the cache replicated).
+# The sequence axis stays UNSHARDED -- the continuous-batching decode
+# writes each slot's new k/v at a *traced* per-slot position
+# (dynamic_update_slice at pos[slot]), which on a seq-sharded buffer
+# would force GSPMD into cross-shard masked updates every step;
+# head-sharding keeps every write local to one shard. (Training/dryrun
+# cells keep the flash-decoding kv_seq@model rule in RULES above.)
+SERVE_STATE_RULES: dict[str, list[tuple[str, ...]]] = {
+    "layer": [],
+    "batch": [("data",)],
+    "kv_seq": [],
+    "kv_heads_cache": [("model",)],
+    # head_dim deliberately has NO rule here: when the kv-head count
+    # does not divide the model axis the cache stays head-replicated
+    # rather than splitting inside a head (sub-head shards force XLA
+    # into layout-thrashing full rematerializations around the GQA
+    # reshapes -- and the projections are head-granular too, see
+    # `tree_shardings(units=)`).
+    "head_dim_cache": [],
+    "heads_cache": [("model",)],
+}
+
 ACT_RULES = {
     "batch": RULES["batch"],
     "seq": [],
@@ -102,9 +128,21 @@ def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
-def resolve_spec(logical_axes, shape, mesh: Mesh, rules=None) -> P:
-    """Map a tuple of logical axis names to a PartitionSpec for `shape`."""
+def resolve_spec(logical_axes, shape, mesh: Mesh, rules=None,
+                 units=None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for `shape`.
+
+    `units` (logical name -> element-group size) constrains a dim to
+    shard only at whole-group boundaries: a candidate is taken only if
+    the number of GROUPS divides the mesh axes. The serving resolver
+    passes {'q_heads': head_dim, 'kv_heads': head_dim} so attention
+    projections shard head-granularly (sub-head column shards are never
+    a sane TP layout -- every downstream (heads, head_dim) reshape
+    would cross shard boundaries); a dim that cannot shard at its
+    granularity falls through to replicated.
+    """
     rules = rules or RULES
+    units = units or {}
     sizes = mesh_axis_sizes(mesh)
     used: set[str] = set()
     out = []
@@ -114,12 +152,14 @@ def resolve_spec(logical_axes, shape, mesh: Mesh, rules=None) -> P:
     logical_axes = tuple(logical_axes) + (None,) * (len(shape) - len(logical_axes))
     for dim, name in zip(shape, logical_axes[: len(shape)]):
         chosen = None
+        unit = units.get(name, 1)
+        groups = dim // unit if unit and dim % unit == 0 else 0
         for cand in rules.get(name, []) if name else []:
             axes = tuple(a for a in cand if a in sizes)
             if not axes or any(a in used for a in axes):
                 continue
             total = int(np.prod([sizes[a] for a in axes]))
-            if dim % total == 0:
+            if groups and groups % total == 0:
                 chosen = axes if len(axes) > 1 else axes[0]
                 used.update(axes)
                 break
@@ -129,18 +169,20 @@ def resolve_spec(logical_axes, shape, mesh: Mesh, rules=None) -> P:
     return P(*out)
 
 
-def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules=None):
-    """NamedSharding pytree from (logical-axes pytree, ShapeDtype pytree)."""
-    is_axes_leaf = lambda x: x is None or (
-        isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
-    )
-    flat_axes = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)[0]
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules=None, units=None):
+    """NamedSharding pytree from (logical-axes pytree, ShapeDtype pytree).
+
+    The axes tree is flattened *up to* the shape tree's treedef, so the
+    two stay aligned even when the axes tree carries structure the
+    shape tree drops -- e.g. a `PackedPlane` of axes tuples whose
+    `overflow` spec is None while the plane's overflow leaf is absent
+    (the non-extra-precision packed serving layout).
+    """
     flat_shapes, treedef = jax.tree.flatten(shape_tree)
-    assert len(flat_axes) == len(flat_shapes), (
-        f"axes/shape tree mismatch: {len(flat_axes)} vs {len(flat_shapes)}"
-    )
+    # flatten_up_to raises on any axes/shape structure mismatch
+    flat_axes = treedef.flatten_up_to(axes_tree)
     shardings = [
-        NamedSharding(mesh, resolve_spec(a, s.shape, mesh, rules))
+        NamedSharding(mesh, resolve_spec(a, s.shape, mesh, rules, units))
         for a, s in zip(flat_axes, flat_shapes)
     ]
     return jax.tree.unflatten(treedef, shardings)

@@ -3,6 +3,9 @@ from repro.serve.engine import (Engine, ServeConfig,  # noqa: F401
                                 materialize_packed_params,
                                 materialize_served_params,
                                 served_effective_bits,
+                                served_nbytes,
+                                served_param_shardings,
+                                served_plane_nbytes_per_device,
                                 served_weight_nbytes)
 from repro.serve.kv_cache import PagePool  # noqa: F401
 from repro.serve.metrics import ServeMetrics  # noqa: F401

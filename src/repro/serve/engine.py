@@ -47,6 +47,7 @@ continuous-batching interface for arrival-stream drivers
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 
 import jax
@@ -340,8 +341,33 @@ def _materialize_packed_per_layer(params, cfg, bits: list[int], parent,
     return base
 
 
-def served_weight_nbytes(params, cfg) -> tuple[int, int]:
-    """(plane_bytes, total_bytes) of the served quantized weights.
+def served_param_shardings(params, cfg, mesh):
+    """NamedSharding tree for served params on a `(data, model)` mesh.
+
+    Works for BOTH served layouts: packed params (every scoped leaf a
+    `PackedPlane`, incl. per-layer Mix'n'Match lists and MoE expert
+    stacks) get their specs from `packed_axes` -- K-packed planes shard
+    their OUTPUT dim over 'model', N-packed down/wo planes keep their
+    reduction-dim shard, overflow bitmaps shard exactly like their
+    words -- and dequantized params fall through `packed_axes`
+    untouched, resolving the plain `api.axes` specs. Resolution uses
+    `runtime.sharding.serving_rules()` (TP-only: no FSDP shard on the
+    embed dim, 'data' reserved for request parallelism) at HEAD
+    granularity for the attention projections: the flattened
+    q_heads/kv_heads dims only shard over 'model' when the head COUNT
+    divides it (a 2-kv-head reduced config on model=4 serves wk/wv
+    replicated instead of splitting inside a head).
+    """
+    from repro.runtime import sharding as shard_lib
+    ax = packed_axes(api.axes(cfg), params, cfg)
+    hd = getattr(cfg, "resolved_head_dim", None) or 1
+    return shard_lib.tree_shardings(ax, params, mesh,
+                                    rules=shard_lib.serving_rules(),
+                                    units={"q_heads": hd, "kv_heads": hd})
+
+
+def served_nbytes(params, cfg) -> tuple[int, int, int]:
+    """(plane_bytes, total_bytes, per_device_plane_bytes), one traversal.
 
     plane_bytes counts only the sliced code planes -- packed int32
     words plus the extra-precision overflow bitmaps, or the full
@@ -351,9 +377,25 @@ def served_weight_nbytes(params, cfg) -> tuple[int, int]:
     total_bytes adds the per-channel alpha/beta scales, which are
     tier-independent. Both are the HBM weight traffic of one decode
     step, the quantity the elastic downgrade is supposed to cut.
+
+    per_device_plane_bytes is the plane term again with each leaf
+    contributing its largest single-device shard
+    (`sharding.shard_shape`) instead of its global size -- on a TP mesh
+    whose 'model' axis divides every plane's sharded dim this is
+    exactly plane_bytes / model_parallel, the footprint the TP shard
+    actually divides. Unsharded (single-device or replicated) leaves
+    contribute their full size, so off-mesh per_device == plane.
     """
     qcfg = cfg.quant
-    plane = total = 0
+
+    def shard_nbytes(leaf):
+        size = leaf.size
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None:
+            size = math.prod(sharding.shard_shape(leaf.shape))
+        return int(size) * leaf.dtype.itemsize
+
+    plane = total = per_device = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         names = _path_names(path)
         if (len(names) >= 2 and names[-2] == "w"
@@ -362,12 +404,24 @@ def served_weight_nbytes(params, cfg) -> tuple[int, int]:
             total += nb
             if names[-1] in ("words", "overflow"):
                 plane += nb
+                per_device += shard_nbytes(leaf)
             continue
         if _scoped(path, qcfg):
             nb = leaf.size * leaf.dtype.itemsize
             plane += nb
             total += nb
-    return plane, total
+            per_device += shard_nbytes(leaf)
+    return plane, total, per_device
+
+
+def served_weight_nbytes(params, cfg) -> tuple[int, int]:
+    """(plane_bytes, total_bytes) of the served weights; `served_nbytes`."""
+    return served_nbytes(params, cfg)[:2]
+
+
+def served_plane_nbytes_per_device(params, cfg) -> int:
+    """Per-device plane bytes of the served weights; `served_nbytes`."""
+    return served_nbytes(params, cfg)[2]
 
 
 def served_effective_bits(params) -> float | None:
@@ -489,10 +543,21 @@ class Engine:
     Holds the materialized served weights for the configured tier and
     the jitted legacy prefill/decode closures; `generate`/`score` keep
     their original signatures.
+
+    `mesh` (optional, a `(data, model)` mesh -- `launch.mesh.
+    make_host_mesh` / `make_production_mesh`) places the served params
+    with `served_param_shardings` and threads through to every
+    scheduler this engine builds: packed tier planes shard their
+    unpacked dim over 'model' (per-device plane bytes divide by the
+    model-parallel degree), the KV slot state shards batch-over-'data'
+    and heads-over-'model', and every tier the elastic cache
+    materializes lands directly in sharded buffers. The degenerate
+    1-device mesh is valid and runs the same code path.
     """
 
-    def __init__(self, params, cfg, serve_cfg: ServeConfig):
+    def __init__(self, params, cfg, serve_cfg: ServeConfig, mesh=None):
         self.serve_cfg = serve_cfg
+        self.mesh = mesh
         # tier re-materialization source; note the extra reference only
         # pins the caller's arrays, it copies nothing
         self._parent_params = params if serve_cfg.keep_parent else None
@@ -522,6 +587,11 @@ class Engine:
         else:
             self.params = materialize_served_params(
                 params, cfg, bits, serve_cfg.extra_precision)
+        if mesh is not None:
+            self._shardings = served_param_shardings(self.params, cfg, mesh)
+            self.params = jax.device_put(self.params, self._shardings)
+        else:
+            self._shardings = None
         self.cfg = cfg
         self._decode = jax.jit(
             lambda p, st, tok, pos: api.decode_step(p, st, tok, pos, cfg, bits=None)
@@ -563,6 +633,7 @@ class Engine:
             max_len=max_len or self.serve_cfg.max_len,
             page_size=self.serve_cfg.page_size,
             total_pages=total_pages,
+            mesh=self.mesh,
         )
         if clock is not None:
             kw["clock"] = clock
@@ -576,7 +647,7 @@ class Engine:
             cache = router_mod.TierCache(
                 self._parent_params, self.cfg,
                 extra_precision=self.serve_cfg.extra_precision,
-                packed=packed)
+                packed=packed, mesh=self.mesh)
             own = self.serve_cfg.bits
             own = tuple(own) if isinstance(own, (list, tuple)) else own
             own_ep = self.serve_cfg.extra_precision
@@ -602,7 +673,8 @@ class Engine:
                 tier_cache=cache,
                 **kw)
         return sched_mod.ContinuousBatchingScheduler(
-            self.params, self.cfg, packed_bits=self._packed_key, **kw)
+            self.params, self.cfg, packed_bits=self._packed_key,
+            param_shardings=self._shardings, **kw)
 
     def _batch_scheduler(self, B: int, max_len: int):
         # keep only the latest shape: each cached scheduler pins a full

@@ -164,7 +164,8 @@ def state_batch_axes(cfg) -> list[int]:
     return [ax.index("batch") for ax in axes_leaves]
 
 
-def insert_slots(state, slot_state, slots, batch_axes: list[int]):
+def insert_slots(state, slot_state, slots, batch_axes: list[int],
+                 shardings=None):
     """Scatter a batch-m prefill state into rows `slots` of the slot array.
 
     One call seats a whole admission burst. `slots` is (m,) int32 and
@@ -172,17 +173,31 @@ def insert_slots(state, slot_state, slots, batch_axes: list[int]):
     scheduler pads bursts to a static bucket with id == num_slots) are
     DROPPED by the scatter, so padding never touches a live slot.
     `batch_axes` comes from `state_batch_axes(cfg)` (static).
+
+    `shardings` (a NamedSharding tree matching `state`, from the
+    scheduler's mesh placement) pins each scattered leaf back to the
+    slot array's sharding: the scatter indexes the batch axis -- which
+    is sharded over 'data' on a serving mesh -- with traced slot ids,
+    and without the constraint GSPMD is free to resolve the update by
+    replicating the multi-megabyte KV buffers. Constraining the output
+    keeps the row writes shard-local (each 'data' shard masks the rows
+    it owns) and keeps the donated buffer's layout stable across steps.
     """
     slots = jnp.asarray(slots, jnp.int32)
     leaves, treedef = jax.tree_util.tree_flatten(state)
     new_leaves = jax.tree_util.tree_flatten(slot_state)[0]
-    assert len(leaves) == len(new_leaves) == len(batch_axes)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+    assert len(leaves) == len(new_leaves) == len(batch_axes) == len(shard_leaves)
     out = []
-    for leaf, new, b in zip(leaves, new_leaves, batch_axes):
+    for leaf, new, b, sh in zip(leaves, new_leaves, batch_axes, shard_leaves):
         # scatter directly on the batch axis (no transposes: with the
         # state buffer donated, this lowers to an in-place row write)
         idx = (slice(None),) * b + (slots,)
-        out.append(leaf.at[idx].set(new.astype(leaf.dtype), mode="drop"))
+        upd = leaf.at[idx].set(new.astype(leaf.dtype), mode="drop")
+        if sh is not None:
+            upd = jax.lax.with_sharding_constraint(upd, sh)
+        out.append(upd)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

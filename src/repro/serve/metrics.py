@@ -72,17 +72,23 @@ class ServeMetrics:
         rec.generated_tokens = generated_tokens
 
     def on_tier_bytes(self, tier: str, *, packed_bits, packed_nbytes: int,
-                      weight_nbytes: int, effective_bits: float = 0.0):
+                      weight_nbytes: int, effective_bits: float = 0.0,
+                      per_device_plane_nbytes: int = 0):
         """Record the measured HBM weight footprint of a served tier
         (fed by the scheduler on every tier activation, so the
         downgrade -> fewer-weight-bytes claim is a reported number).
         `effective_bits` is the Table 7 accounting of the served planes
-        (base bits + overflow fraction for extra-precision tiers)."""
+        (base bits + overflow fraction for extra-precision tiers);
+        `per_device_plane_nbytes` is the largest single-device shard of
+        the plane bytes (== packed_nbytes / model_parallel on a TP
+        serving mesh, == packed_nbytes off-mesh or when 0 is fed)."""
         self.tier_weight_bytes[tier] = {
             "packed_bits": packed_bits,
             "packed_nbytes": int(packed_nbytes),
             "weight_nbytes": int(weight_nbytes),
             "effective_bits": float(effective_bits),
+            "per_device_plane_nbytes": int(per_device_plane_nbytes
+                                           or packed_nbytes),
         }
 
     # -- per-step counters -------------------------------------------------

@@ -179,6 +179,13 @@ class TierEntry:
       that actually lands in the overflow bucket (~2.05 for int2+ep),
       NOT the dense bitmap storage cost. Falls back to the tier's
       nominal effective bits on the dequantized path.
+    per_device_plane_nbytes: largest single-device shard of the plane
+      bytes -- packed_nbytes / model_parallel on a TP mesh whose
+      'model' axis divides every plane's sharded dim, == packed_nbytes
+      off-mesh.
+    shardings: NamedSharding tree the params were placed with (None
+      off-mesh); the scheduler compiles its per-representation step
+      closures against it.
     """
     name: str
     params: object = dataclasses.field(repr=False)
@@ -186,6 +193,8 @@ class TierEntry:
     packed_nbytes: int = 0
     weight_nbytes: int = 0
     effective_bits: float = 0.0
+    per_device_plane_nbytes: int = 0
+    shardings: object = dataclasses.field(default=None, repr=False)
 
 
 class TierCache:
@@ -202,16 +211,26 @@ class TierCache:
     ServeConfig.extra_precision) promotes EVERY tier to its ep variant
     -- tiers that flag ep themselves (the ladder's int2+ep rung) get it
     regardless.
+
+    `mesh` (a `(data, model)` serving mesh) re-materializes every tier
+    DIRECTLY into sharded buffers: the freshly sliced planes are
+    `jax.device_put` with the `engine.served_param_shardings` target
+    tree -- a device-to-device placement, never a host gather -- so a
+    mid-flight tier switch hands the scheduler params that already live
+    where its sharded step closure expects them, and per-device plane
+    bytes (`TierEntry.per_device_plane_nbytes`) divide by the mesh's
+    model-parallel degree.
     """
 
     def __init__(self, parent_params, cfg, *, extra_precision: bool = False,
-                 packed: bool = False):
+                 packed: bool = False, mesh=None):
         from repro.serve import engine as _engine   # avoid import cycle
         self._engine = _engine
         self.parent_params = parent_params
         self.cfg = cfg
         self.extra_precision = extra_precision
         self.packed = packed
+        self.mesh = mesh
         self._cache: dict[str, TierEntry] = {}
         # packed representation key -> first tier name serving it: two
         # rungs that normalize to the SAME representation (e.g. int2 and
@@ -220,26 +239,44 @@ class TierCache:
         self._by_key: dict[object, str] = {}
         self._packed_parent = None      # {path: PackedLinear}, built once
 
-    def _entry(self, tier: PrecisionTier, params, packed_bits):
-        plane, total = self._engine.served_weight_nbytes(params, self.cfg)
+    def _place(self, params):
+        """Shard freshly materialized params onto the serving mesh.
+
+        `device_put` with the resolved NamedSharding tree moves each
+        plane shard device-to-device (no host round-trip); off-mesh it
+        is the identity with shardings=None."""
+        if self.mesh is None:
+            return params, None
+        import jax
+        shardings = self._engine.served_param_shardings(
+            params, self.cfg, self.mesh)
+        return jax.device_put(params, shardings), shardings
+
+    def _entry(self, tier: PrecisionTier, params, packed_bits,
+               shardings=None):
+        plane, total, per_dev = self._engine.served_nbytes(params, self.cfg)
         eff = self._engine.served_effective_bits(params)
         return TierEntry(name=tier.name, params=params,
                          packed_bits=packed_bits,
                          packed_nbytes=plane, weight_nbytes=total,
                          effective_bits=(tier.effective_bits if eff is None
-                                         else eff))
+                                         else eff),
+                         per_device_plane_nbytes=per_dev,
+                         shardings=shardings)
 
     def get(self, tier: PrecisionTier) -> TierEntry:
         if self.extra_precision and not tier.extra_precision:
             tier = dataclasses.replace(tier, extra_precision=True)
         if tier.name not in self._cache:
+            shardings = None
             if self.packed:
                 packed_bits = tier.packed_key
                 alias = self._by_key.get(packed_bits)
                 if alias is not None:
                     # same representation already materialized under
-                    # another rung name: share its params
+                    # another rung name: share its params (+ placement)
                     params = self._cache[alias].params
+                    shardings = self._cache[alias].shardings
                 else:
                     if self._packed_parent is None:
                         self._packed_parent = self._engine.build_packed_parent(
@@ -250,24 +287,31 @@ class TierCache:
                         tier.bits if uniform else list(tier.bits),
                         parent=self._packed_parent,
                         extra_precision=tier.extra_precision)
+                    params, shardings = self._place(params)
                     self._by_key[packed_bits] = tier.name
             else:
                 bits = (tier.bits if isinstance(tier.bits, int)
                         else list(tier.bits))
                 params = self._engine.materialize_served_params(
                     self.parent_params, self.cfg, bits, tier.extra_precision)
+                params, shardings = self._place(params)
                 packed_bits = None
-            self._cache[tier.name] = self._entry(tier, params, packed_bits)
+            self._cache[tier.name] = self._entry(tier, params, packed_bits,
+                                                 shardings)
         return self._cache[tier.name]
 
     def seed(self, tier: PrecisionTier, params, packed_bits=None):
         """Adopt already-materialized served params for `tier` (e.g. the
-        engine's own fixed tier) instead of building a second copy."""
+        engine's own fixed tier) instead of building a second copy. On a
+        mesh the placement is re-resolved; for params the engine already
+        sharded this is a no-op device_put."""
         if self.extra_precision and not tier.extra_precision:
             tier = dataclasses.replace(tier, extra_precision=True)
         if self.packed and packed_bits is not None:
             self._by_key.setdefault(packed_bits, tier.name)
-        self._cache[tier.name] = self._entry(tier, params, packed_bits)
+        params, shardings = self._place(params)
+        self._cache[tier.name] = self._entry(tier, params, packed_bits,
+                                             shardings)
 
     @property
     def materialized(self) -> list[str]:

@@ -38,6 +38,17 @@ prefill-insert and decode update the multi-megabyte KV buffers in place
 instead of allocating a fresh copy of the whole pytree per call -- the
 previous O(B)-copy admission bottleneck on bursty arrivals.
 
+On a `(data, model)` serving mesh (`mesh=`) the whole loop runs
+sharded: tier params live at the placement `engine.
+served_param_shardings` resolves (packed planes shard their unpacked
+dim over 'model'), the slot-array state is placed batch-over-'data' /
+heads-over-'model' (`runtime.sharding.SERVE_STATE_RULES`), and each
+per-representation closure compiles with explicit in/out shardings so
+the donated buffers keep one layout for the life of the session. Tier
+switches behave exactly as off-mesh: one compile per representation
+key, a dict lookup on revisit, with `TierCache` handing over planes
+already placed in sharded buffers.
+
 Single-batch equivalence: with every request admitted at step 0 at the
 same prompt length and a fixed tier, the per-slot math is identical to
 the legacy fixed-batch `Engine.generate` loop (same prefill, same
@@ -133,6 +144,16 @@ class ContinuousBatchingScheduler:
       to whole pages.
     total_pages: optional global page budget (overcommit; see PagePool).
     clock: float-returning time source (injectable for tests).
+    mesh: optional `(data, model)` serving mesh. The slot-array decode
+      state is placed batch-over-'data' / heads-over-'model'
+      (`runtime.sharding.SERVE_STATE_RULES`) and every per-
+      representation step closure compiles with explicit
+      in_shardings/out_shardings (params at their tier's placement,
+      state at the slot placement, scalar-ish operands replicated), so
+      a tier switch on the mesh keeps the one-compile-per-key
+      guarantee and the donated KV buffers never change layout.
+    param_shardings: NamedSharding tree of `params` (fixed-tier path
+      on a mesh; elastic tiers carry theirs in `TierEntry.shardings`).
     """
 
     def __init__(self, params, cfg, *, num_slots: int = 8,
@@ -141,6 +162,7 @@ class ContinuousBatchingScheduler:
                  router: ElasticPrecisionRouter | None = None,
                  tier_cache: TierCache | None = None,
                  packed_bits=None,
+                 mesh=None, param_shardings=None,
                  clock=time.perf_counter):
         if cfg.family not in ("dense", "vlm", "moe"):
             raise NotImplementedError(
@@ -157,6 +179,7 @@ class ContinuousBatchingScheduler:
         self.clock = clock
         self.router = router
         self.tier_cache = tier_cache
+        self.mesh = mesh
         self.metrics = ServeMetrics()
         self.pool = kv_cache.PagePool(
             num_slots, page_size,
@@ -178,7 +201,16 @@ class ContinuousBatchingScheduler:
             self.params = params
             self.packed_bits = (packed_bits if packed_bits is not None
                                 else cfg.quant.packed_bits or None)
+            self._param_shardings = param_shardings
         self.state = api.init_state(cfg, num_slots, self.capacity)
+        if mesh is not None:
+            from repro.runtime import sharding as shard_lib
+            self._state_shardings = shard_lib.tree_shardings(
+                api.state_axes(cfg), self.state, mesh,
+                rules=shard_lib.SERVE_STATE_RULES)
+            self.state = jax.device_put(self.state, self._state_shardings)
+        else:
+            self._state_shardings = None
         self.pos = np.zeros((num_slots,), np.int32)
         self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, _Active] = {}
@@ -237,11 +269,14 @@ class ContinuousBatchingScheduler:
         cfg = cfg.replace(quant=qc)
         capacity, batch_axes = self.capacity, self._batch_axes
 
+        state_shardings = self._state_shardings
+
         def prefill(p, st, toks, slots, lengths):
             logits, slot_state = api.prefill(
                 p, {"tokens": toks}, cfg, bits=None, max_len=capacity,
                 last_pos=lengths)
-            st = kv_cache.insert_slots(st, slot_state, slots, batch_axes)
+            st = kv_cache.insert_slots(st, slot_state, slots, batch_axes,
+                                       shardings=state_shardings)
             return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
 
         def decode(p, st, tok, pos):
@@ -252,8 +287,26 @@ class ContinuousBatchingScheduler:
         # wholesale, so the KV buffers are updated in place instead of
         # copied per call. prefill retraces once per (rows, prompt)
         # bucket shape; decode compiles once per representation.
-        fns = {"prefill": jax.jit(prefill, donate_argnums=(1,)),
-               "decode": jax.jit(decode, donate_argnums=(1,))}
+        if self.mesh is not None:
+            # explicit shardings on the mesh: params at their tier's
+            # placement (captured NOW -- _set_tier updates it before any
+            # step of a new representation, and every tier sharing a
+            # representation resolves equal shardings, so revisits hit
+            # the jit cache), state at the slot-array placement, token/
+            # position vectors replicated. Pinning the state OUTPUT
+            # sharding keeps the donated KV buffers layout-stable.
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            ps, ss = self._param_shardings, state_shardings
+            fns = {"prefill": jax.jit(prefill, donate_argnums=(1,),
+                                      in_shardings=(ps, ss, rep, rep, rep),
+                                      out_shardings=(rep, ss)),
+                   "decode": jax.jit(decode, donate_argnums=(1,),
+                                     in_shardings=(ps, ss, rep, rep),
+                                     out_shardings=(rep, ss))}
+        else:
+            fns = {"prefill": jax.jit(prefill, donate_argnums=(1,)),
+                   "decode": jax.jit(decode, donate_argnums=(1,))}
         self._fns[key] = fns
         return fns
 
@@ -263,10 +316,13 @@ class ContinuousBatchingScheduler:
         self.tier = tier
         self.params = entry.params
         self.packed_bits = entry.packed_bits
-        self.metrics.on_tier_bytes(tier.name, packed_bits=entry.packed_bits,
-                                   packed_nbytes=entry.packed_nbytes,
-                                   weight_nbytes=entry.weight_nbytes,
-                                   effective_bits=entry.effective_bits)
+        self._param_shardings = entry.shardings
+        self.metrics.on_tier_bytes(
+            tier.name, packed_bits=entry.packed_bits,
+            packed_nbytes=entry.packed_nbytes,
+            weight_nbytes=entry.weight_nbytes,
+            effective_bits=entry.effective_bits,
+            per_device_plane_nbytes=entry.per_device_plane_nbytes)
 
     def reset(self):
         """Clear all requests/bookkeeping but keep the compiled closures.

@@ -1,0 +1,210 @@
+"""TP-sharded packed elastic serving on a forced 8-device host mesh.
+
+Run via `make test-shard` (or the CI `shard` job), which sets
+XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax is
+imported; under the plain 1-device tier-1 run this module skips.
+
+What is pinned down here:
+
+  * sharded packed decode is BIT-EXACT (token-identical greedy
+    continuations) vs the single-device oracle at every rung of the
+    ladder -- int8, int4, packed Mix'n'Match, int2+ep (overflow
+    bitmap), int2 -- at model_parallel 2 and 4, for dense and MoE;
+  * a mid-flight tier downgrade on the mesh keeps the one-compile-
+    per-representation-key guarantee (no recompile on revisit);
+  * every tier's per-device plane bytes are exactly
+    packed_nbytes / model_parallel (the HBM footprint the TP shard
+    actually divides), reported through TierEntry and ServeMetrics.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+if len(jax.devices()) < 8:          # pragma: no cover - env-dependent gate
+    pytest.skip(
+        "sharded serving tests need 8 host devices: run `make test-shard` "
+        "or set XLA_FLAGS=--xla_force_host_platform_device_count=8 before "
+        "jax is imported", allow_module_level=True)
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import api
+from repro.runtime.sharding import mesh_axis_sizes
+from repro.serve import Engine, Request, ServeConfig, TierCache, default_tiers
+
+KEY = jax.random.PRNGKey(0)
+N_RUNGS = 5
+
+
+def _model(arch):
+    cfg = get_config(arch).reduced()
+    params = api.init(KEY, cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def dense():
+    return _model("qwen3_1_7b")
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _model("granite_moe_1b_a400m")
+
+
+def _packed_sched(cfg, params, mesh):
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=4,
+                                          page_size=8), mesh=mesh)
+    return eng.scheduler(elastic=True, packed=True)
+
+
+def _pin(sched, index):
+    """Hold the router at `index` for a whole replay (bench recipe)."""
+    sched.router.thresholds = (float("inf"),) * (len(sched.router.tiers) - 1)
+    sched.router.cooldown = 10**9
+    sched.router.index = index
+    sched._set_tier(sched.router.tier)
+
+
+def _pinned_run(sched, cfg, index, gen_tokens=5):
+    sched.reset()
+    _pin(sched, index)
+    rng = np.random.default_rng(5)
+    for i in range(2):
+        sched.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                             max_new_tokens=gen_tokens))
+    return sched.run_until_idle()
+
+
+# single-device oracle continuations, one per (fixture id, rung), shared
+# across the mp=2 and mp=4 parametrizations
+_ORACLE: dict = {}
+
+
+def _oracle(name, cfg, params, index):
+    key = (name, index)
+    if key not in _ORACLE:
+        _ORACLE[key] = _pinned_run(_packed_sched(cfg, params, None), cfg, index)
+    return _ORACLE[key]
+
+
+# ---------------------------------------------------------------------------
+# bit-exact sharded decode at every ladder rung
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mp", [2, 4])
+def test_dense_sharded_packed_ladder_bit_exact(dense, mp):
+    cfg, params = dense
+    sched = _packed_sched(cfg, params, make_host_mesh(mp))
+    for index in range(N_RUNGS):
+        got = _pinned_run(sched, cfg, index)
+        want = _oracle("dense", cfg, params, index)
+        assert set(got) == set(want)
+        for uid in want:
+            np.testing.assert_array_equal(
+                got[uid], want[uid],
+                err_msg=f"mp={mp} rung {sched.router.tiers[index].name}")
+
+
+@pytest.mark.parametrize("mp", [2, 4])
+def test_moe_sharded_packed_decode_bit_exact(moe, mp):
+    """MoE expert stacks shard over 'model' (expert parallelism) and
+    still decode token-identically, incl. the int2+ep overflow rung."""
+    cfg, params = moe
+    sched = _packed_sched(cfg, params, make_host_mesh(mp))
+    for index in (0, 3, 4):            # int8, int2+ep, int2
+        got = _pinned_run(sched, cfg, index)
+        want = _oracle("moe", cfg, params, index)
+        for uid in want:
+            np.testing.assert_array_equal(
+                got[uid], want[uid],
+                err_msg=f"mp={mp} rung {sched.router.tiers[index].name}")
+
+
+def test_fixed_tier_generate_on_mesh_matches_single_device(dense):
+    """The non-elastic path: Engine.generate routes through a scheduler
+    whose fixed-tier params/state are mesh-placed."""
+    cfg, params = dense
+    prompts = jax.random.randint(KEY, (3, 8), 0, cfg.vocab_size)
+    out_tp = Engine(params, cfg, ServeConfig(bits=4, max_len=32),
+                    mesh=make_host_mesh(2)).generate(prompts, 5)
+    out_1d = Engine(params, cfg,
+                    ServeConfig(bits=4, max_len=32)).generate(prompts, 5)
+    np.testing.assert_array_equal(np.asarray(out_tp), np.asarray(out_1d))
+
+
+# ---------------------------------------------------------------------------
+# mid-flight tier switching on the mesh: one compile per representation
+# ---------------------------------------------------------------------------
+
+
+def test_midflight_downgrade_on_mesh_no_recompile(dense):
+    cfg, params = dense
+    sched = _packed_sched(cfg, params, make_host_mesh(2))
+    oracle = _packed_sched(cfg, params, None)
+    switches = [0, 3, 4, 3, 0, 3]      # int8 -> int2+ep -> int2 -> revisits
+    results = {}
+    for s in (sched, oracle):
+        s.router.thresholds = (float("inf"),) * (len(s.router.tiers) - 1)
+        s.router.cooldown = 10**9
+        rng = np.random.default_rng(7)
+        for i in range(2):
+            s.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                             max_new_tokens=len(switches) + 1))
+        for index in switches:
+            s.router.index = index
+            s.step()
+        s.router.index = 0
+        results[s] = s.run_until_idle()
+    for uid in results[oracle]:
+        np.testing.assert_array_equal(results[sched][uid],
+                                      results[oracle][uid])
+    # the mesh does not change representation keying: one closure per
+    # packed key, one decode compile per closure even after revisits
+    assert {8, 2, (2, "ep")} <= set(sched._fns)
+    for key in (8, 2, (2, "ep")):
+        assert sched._fns[key]["decode"]._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# per-device plane bytes == total / model_parallel, every rung
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mp", [2, 4])
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "granite_moe_1b_a400m"])
+def test_per_device_plane_bytes_divide_by_model_parallel(arch, mp):
+    """Materialization-only (no decode): every ladder rung's sharded
+    planes put exactly packed_nbytes / mp on each device. 4 layers so
+    the Mix'n'Match rung (3.5 eff bits) keeps the per-device staircase
+    strictly decreasing, matching the BENCH packed_ab_tp section."""
+    cfg = get_config(arch).reduced().replace(num_layers=4)
+    params = api.init(KEY, cfg)
+    cache = TierCache(params, cfg, packed=True, mesh=make_host_mesh(mp))
+    per_dev = []
+    for tier in default_tiers(cfg.num_layers):
+        entry = cache.get(tier)
+        assert entry.per_device_plane_nbytes * mp == entry.packed_nbytes, \
+            (tier.name, mp, entry.per_device_plane_nbytes, entry.packed_nbytes)
+        per_dev.append(entry.per_device_plane_nbytes)
+    assert all(a > b for a, b in zip(per_dev, per_dev[1:])), per_dev
+
+
+def test_scheduler_metrics_report_per_device_bytes(dense):
+    cfg, params = dense
+    mp = 2
+    sched = _packed_sched(cfg, params, make_host_mesh(mp))
+    _pinned_run(sched, cfg, 1)         # serve the int4 rung
+    rec = sched.metrics.summary()["tier_weight_bytes"]["int4"]
+    assert rec["per_device_plane_nbytes"] * mp == rec["packed_nbytes"] > 0
+
+
+def test_make_host_mesh_names_the_cpu_escape_hatch():
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_host_mesh(3)              # 8 % 3 != 0
+    mesh = make_host_mesh(1)           # degenerate model axis is valid
+    assert mesh_axis_sizes(mesh) == {"data": 8, "model": 1}
