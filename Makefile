@@ -20,7 +20,8 @@ test-fast:
 # skip under the plain `make test` run and get their own invocation
 test-shard:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" JAX_PLATFORMS=cpu \
-	    python -m pytest -x -q tests/test_serve_tp_packed.py
+	    python -m pytest -x -q tests/test_serve_tp_packed.py \
+	    tests/test_specdecode.py::test_spec_decode_token_exact_on_mesh
 
 bench-serve:
 	python benchmarks/serve_throughput.py --reduced --out BENCH_serve.json

@@ -27,6 +27,14 @@ Runs reported side by side on the SAME trace:
     effective bits of each tier (int2+ep ~2.05: the Errata Eq. 8
     overflow bitmap costs 1 stored bit/weight but only ~0.05
     *effective* bits, served in-kernel);
+  * spec-decode A/B -- plain packed-int8 replay vs Matryoshka
+    self-speculative replays of the same trace (`specdecode_ab`), one
+    per draft rung (int4, int2): the draft slice ALIASES the resident
+    int8 planes (`extra_plane_nbytes` == 0), greedy acceptance keeps
+    the output token-exact (`token_exact`, checked per request), and
+    the acceptance bookkeeping -- acceptance rate, mean accepted
+    prefix length, verify-model steps vs emitted tokens -- is the
+    reported speed story;
   * TP-sharded A/B  -- the same per-tier pinned packed replays on a
     forced 8-device `(data, model)` host mesh (`packed_ab_tp`, one
     subprocess per model-parallel degree so XLA_FLAGS can pin the
@@ -51,10 +59,14 @@ import time
 
 import jax
 
+import numpy as np
+
 from repro.configs import get_config
 from repro.models import api
-from repro.serve import Engine, Request, ServeConfig, ServeMetrics
+from repro.serve import (Engine, Request, ServeConfig, ServeMetrics,
+                         SpecDecodeConfig)
 from repro.serve.scheduler import poisson_trace
+from repro.serve.specdecode import extra_plane_nbytes
 
 
 def tier_bytes(sched) -> dict:
@@ -170,6 +182,78 @@ def run_per_tier_packed(engine, cfg, args):
         }
     nbytes = [info["packed_nbytes"] for info in tiers.values()]
     return tiers, all(a > b for a, b in zip(nbytes, nbytes[1:]))
+
+
+def _replay_pinned_int8(engine, args, trace, spec=None):
+    """One packed int8-pinned replay of `trace` (warmed), optionally
+    self-speculative. Returns (scheduler, results, summary)."""
+    sched = engine.scheduler(elastic=True, thresholds=args.thresholds,
+                             cooldown=args.cooldown, packed=True,
+                             spec_decode=spec)
+    _pin_router(sched, 0)                        # int8 = top of the ladder
+    for rows in _row_buckets(args.num_slots):    # warm closures (draft/
+        for j in range(min(rows, args.num_slots)):   # verify ones too)
+            sched.submit(Request(uid=f"_warm_{rows}_{j}",
+                                 prompt=trace[0][1].prompt,
+                                 max_new_tokens=2))
+        sched.run_until_idle()
+    sched.results = {}
+    sched.metrics = ServeMetrics()
+    t0 = time.perf_counter()
+    results = sched.run_trace(trace)
+    wall = time.perf_counter() - t0
+    assert len(results) == args.requests
+    summary = sched.metrics.summary()
+    summary["wall_s"] = wall
+    return sched, results, summary
+
+
+def run_specdecode_ab(engine, cfg, args):
+    """`specdecode_ab`: plain packed-int8 replay vs Matryoshka
+    self-speculative replays of the SAME trace, one per draft rung.
+
+    Greedy acceptance makes each spec replay token-exact vs the plain
+    one (reported as `token_exact`, checked per request), so the A/B
+    isolates the speed bookkeeping: acceptance rate, mean accepted
+    prefix length (> 1.0 means drafts help), verify-model steps vs
+    emitted tokens, and the aliased draft plane's extra bytes (0 on the
+    packed path -- the draft is a `sliced_view` of the resident int8
+    planes).
+    """
+    trace = poisson_trace(cfg, requests=args.requests,
+                          prompt_len=args.prompt_len,
+                          gen_tokens=args.gen_tokens,
+                          rate=args.arrival_rate, seed=args.seed)
+    _, plain_results, plain_summary = _replay_pinned_int8(engine, args, trace)
+    out = {"verify_tier": "int8 (packed)",
+           "draft_len": args.draft_len,
+           "plain": {"summary": plain_summary,
+                     "throughput_tok_s": plain_summary["throughput_tok_s"]}}
+    for tier_name in args.draft_tiers:
+        from repro.launch.serve import parse_draft_tier
+        bits, ep = parse_draft_tier(tier_name)
+        spec = SpecDecodeConfig(draft_bits=bits, draft_extra_precision=ep,
+                                draft_len=args.draft_len)
+        sched, results, summary = _replay_pinned_int8(engine, args, trace,
+                                                      spec=spec)
+        draft_params, _ = sched._spec_draft()
+        spec_sum = summary["spec"]
+        out[tier_name] = {
+            "summary": summary,
+            "throughput_tok_s": summary["throughput_tok_s"],
+            "token_exact": all(
+                np.array_equal(results[uid], plain_results[uid])
+                for uid in plain_results),
+            "acceptance_rate": spec_sum["acceptance_rate"],
+            "mean_accepted_prefix_len": spec_sum["mean_accepted_prefix_len"],
+            "verify_steps": spec_sum["verify_steps"],
+            "emitted_tokens": spec_sum["emitted_tokens"],
+            "verify_steps_below_tokens": (
+                spec_sum["verify_steps"] < spec_sum["emitted_tokens"]),
+            "extra_plane_nbytes": extra_plane_nbytes(draft_params,
+                                                     sched.params),
+        }
+    return out
 
 
 def run_tp_child(args):
@@ -291,6 +375,11 @@ def main(argv=None):
     ap.add_argument("--tp-requests", type=int, default=8,
                     help="trace length for each packed_ab_tp replay "
                          "(8-device CPU meshes simulate slowly)")
+    ap.add_argument("--draft-tiers", nargs="*", default=("int4", "int2"),
+                    help="draft rungs for the specdecode_ab section "
+                         "(intN / intN+ep; empty skips it)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="k, draft tokens per verify step (specdecode_ab)")
     ap.add_argument("--tp-child", type=int, default=0, help=argparse.SUPPRESS)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
@@ -373,6 +462,19 @@ def main(argv=None):
                   f"tok/s={info['throughput_tok_s']:.1f}")
         print(f"  plane-bytes staircase strictly decreasing: {decreasing}")
 
+    specdecode_ab = None
+    if not args.skip_packed_ab and args.draft_tiers:
+        print("== self-speculative decoding A/B (packed int8 verify) ==")
+        specdecode_ab = run_specdecode_ab(engine, cfg, args)
+        for name in args.draft_tiers:
+            info = specdecode_ab[name]
+            print(f"  draft {name:8s} accept={info['acceptance_rate']:.2f} "
+                  f"mean_prefix={info['mean_accepted_prefix_len']:.2f} "
+                  f"verify_steps={info['verify_steps']} "
+                  f"emitted={info['emitted_tokens']} "
+                  f"token_exact={info['token_exact']} "
+                  f"extra_plane_bytes={info['extra_plane_nbytes']}")
+
     packed_ab_tp = None
     if not args.skip_packed_ab and args.tp_model_parallel:
         print(f"== TP-sharded per-tier packed replays "
@@ -404,6 +506,7 @@ def main(argv=None):
         "packed_ab": packed_ab,
         "packed_ab_moe": packed_ab_moe,
         "packed_ab_ep": packed_ab_ep,
+        "specdecode_ab": specdecode_ab,
         "packed_ab_tp": packed_ab_tp,
         # headline numbers (the acceptance-criterion fields)
         "throughput_tok_s": elastic["throughput_tok_s"],

@@ -39,6 +39,14 @@ ap.add_argument("--model-parallel", type=int, default=1,
                      "count (XLA_FLAGS=--xla_force_host_platform_device_"
                      "count=N forces CPU devices). 1 = degenerate mesh, "
                      "same code path, per-device bytes == total")
+ap.add_argument("--spec-decode", action="store_true",
+                help="demo Matryoshka self-speculative decoding: each draft "
+                     "rung (int4 / int2+ep / int2) drafts against the int8 "
+                     "verify tier, printing acceptance rate, mean accepted "
+                     "prefix, and verify steps per token -- output is "
+                     "token-identical to plain int8 decode at every rung")
+ap.add_argument("--draft-len", type=int, default=4,
+                help="k, tokens drafted per verify step (--spec-decode)")
 args = ap.parse_args()
 mp = args.model_parallel
 mesh = make_host_mesh(mp)
@@ -94,3 +102,27 @@ if mp > 1:
 
 gen = eng_ep.generate(toks[:2, :16], 8)
 print("\nEP-int2 greedy continuations:", gen.tolist())
+
+if args.spec_decode:
+    # self-speculative decoding: the draft rungs alias the int8 verify
+    # tier's parent, so each row below is a FREE draft model -- output
+    # stays token-identical to plain int8 decode, only the verify-step
+    # count changes
+    from repro.serve import SpecDecodeConfig
+    eng8 = Engine(params, cfg, ServeConfig(bits=8, max_len=96, num_slots=4),
+                  mesh=mesh)
+    prompts, n_new = toks[:4, :16], 24
+    plain = eng8.generate(prompts, n_new)
+    print(f"\nself-speculative decoding (int8 verify, k={args.draft_len}):")
+    print(f"{'draft rung':16s} {'accept rate':>11s} {'mean prefix':>11s} "
+          f"{'verify steps/tok':>17s} {'token-exact':>12s}")
+    for rung, dbits, ep in [("int4", 4, False), ("int2+ep", 2, True),
+                            ("int2", 2, False)]:
+        sd = SpecDecodeConfig(draft_bits=dbits, draft_extra_precision=ep,
+                              draft_len=args.draft_len)
+        out = eng8.generate(prompts, n_new, spec_decode=sd)
+        spec = next(iter(eng8._schedulers.values())).metrics.summary()["spec"]
+        exact = bool((out == plain).all())
+        print(f"{rung:16s} {spec['acceptance_rate']:11.2f} "
+              f"{spec['mean_accepted_prefix_len']:11.2f} "
+              f"{spec['verify_steps_per_token']:17.2f} {str(exact):>12s}")

@@ -141,13 +141,68 @@ class PackedPlane:
     bits: int = 8           # static: the plane's bitwidth r
     pack_axis: int = -2     # static: -2 = K-packed, -1 = N-packed
     extra_precision: bool = False       # static: overflow bitmap present
+    # Aliased-slice view (self-speculative decoding): `slice_bits` set
+    # means the words stay packed at the PARENT width `bits` but are
+    # consumed at the sliced width r = slice_bits -- the kernels apply
+    # Eq. 4/6 (or Errata Eq. 8 when `slice_ep`) on the fly after the
+    # unpack, so the draft plane shares the verify plane's bytes.
+    slice_bits: int | None = None       # static: on-the-fly slice width
+    slice_ep: bool = False              # static: slice without clamp
 
 
 jax.tree_util.register_dataclass(
     PackedPlane,
     data_fields=("words", "alpha", "beta", "overflow"),
-    meta_fields=("bits", "pack_axis", "extra_precision"),
+    meta_fields=("bits", "pack_axis", "extra_precision", "slice_bits",
+                 "slice_ep"),
 )
+
+
+def slice_codes_on_grid(codes: jax.Array, c: int, r: int,
+                        extra_precision: bool = False) -> jax.Array:
+    """Eq. 4/6 slice of c-bit codes to r bits, vector-op form.
+
+    `(2q + 2^(c-r)) >> (c-r+1)` is the round-half-up slice of the top r
+    bits; without `extra_precision` the result clamps to [0, 2^r - 1]
+    (Eq. 4/6), with it the 2^r overflow bucket survives (Errata Eq. 8).
+    Bit-identical to `core.quant.sliced_codes` but built from shifts so
+    the Pallas dequant tile can run it on the VPU.
+    """
+    if r == c:
+        return codes
+    sliced = (2 * codes + (1 << (c - r))) >> (c - r + 1)
+    if extra_precision:
+        return sliced
+    return jnp.minimum(sliced, (1 << r) - 1)
+
+
+def sliced_view(plane: PackedPlane, bits: int,
+                extra_precision: bool = False) -> PackedPlane:
+    """Zero-copy r-bit draft view of a resident parent plane.
+
+    The returned plane ALIASES `plane.words` (and `beta` -- the paper's
+    `beta_r = alpha_parent * zero` is r-independent); only `alpha` is a
+    new (..., 1, n) array, rescaled by the exact power of two
+    `2^(c - r)` so float dequant stays bit-identical to a materialized
+    r-bit plane. The kernels see `slice_bits`/`slice_ep` as static
+    metadata and apply the MSB slice after the unpack: this is how the
+    int2 draft model of self-speculative decoding costs zero extra
+    plane bytes on top of the resident int8 tier.
+    """
+    c = plane.bits
+    if plane.slice_bits is not None:
+        raise ValueError("cannot re-slice an already-sliced view")
+    if plane.extra_precision:
+        raise ValueError("sliced_view needs a base (non-ep) parent plane")
+    if not 1 <= bits <= c:
+        raise ValueError(f"slice width {bits} not in [1, {c}]")
+    if bits == c and not extra_precision:
+        return plane
+    scale = jnp.asarray(2 ** (c - bits), plane.alpha.dtype)
+    return PackedPlane(words=plane.words, alpha=plane.alpha * scale,
+                       beta=plane.beta, overflow=None, bits=c,
+                       pack_axis=plane.pack_axis, extra_precision=False,
+                       slice_bits=bits, slice_ep=extra_precision)
 
 
 @dataclasses.dataclass

@@ -51,6 +51,7 @@ def _fit_blocks(M, K, N, cpw, block_m, block_n, block_k):
 
 
 def quant_matmul(x, words, alpha, beta, *, bits, overflow_words=None,
+                 slice_bits=None, slice_ep=False,
                  interpret: bool | None = None,
                  block_m=128, block_n=128, block_k=512):
     """y = x @ dequant(words). Extra precision composes the 1-bit
@@ -75,7 +76,8 @@ def quant_matmul(x, words, alpha, beta, *, bits, overflow_words=None,
     y = quant_matmul_pallas(
         x2, words, alpha.astype(jnp.float32), beta.astype(jnp.float32),
         overflow_words,
-        bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+        bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+        slice_bits=slice_bits, slice_ep=slice_ep)
     return y.reshape(lead + (N,)).astype(x.dtype)
 
 
@@ -99,6 +101,7 @@ def fused_quantize(w, *, bitwidths, parent_bits=8, extra_precision=False,
 
 
 def quant_matmul_experts(x, words, alpha, beta, *, bits, overflow_words=None,
+                         slice_bits=None, slice_ep=False,
                          interpret: bool | None = None,
                          block_m=128, block_n=128, block_k=512):
     """Batched-over-experts `quant_matmul`: x (E, M, K) against one
@@ -116,19 +119,25 @@ def quant_matmul_experts(x, words, alpha, beta, *, bits, overflow_words=None,
     return quant_matmul_experts_pallas(
         x, words, alpha.astype(jnp.float32), beta.astype(jnp.float32),
         overflow_words,
-        bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+        bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+        slice_bits=slice_bits, slice_ep=slice_ep)
 
 
 def _plane_fields(plane, bits):
-    """(words, alpha, beta, overflow, bits, pack_axis) of a packed plane.
+    """(words, alpha, beta, overflow, bits, pack_axis, slice_bits,
+    slice_ep) of a packed plane.
 
     `PackedPlane` carries bits/pack_axis/extra_precision as static
     metadata -- the authoritative source (a conflicting `bits=` is an
-    error: unpacking at any other width misreads the words). Legacy
-    `{'words','alpha','beta'}` dicts need `bits` passed explicitly,
-    carry no overflow bitmap, and fall back to the shape heuristic
-    `words.shape[-2] != k` for the pack axis (ambiguous only for planes
-    packed along N whose unpacked N happens to equal ceil(k/cpw))."""
+    error: unpacking at any other width misreads the words). A plane
+    with `slice_bits` set is an aliased draft view
+    (`core.packing.sliced_view`): words packed at the parent width
+    `bits`, MSB-sliced to `slice_bits` on the fly after the unpack.
+    Legacy `{'words','alpha','beta'}` dicts need `bits` passed
+    explicitly, carry no overflow bitmap, and fall back to the shape
+    heuristic `words.shape[-2] != k` for the pack axis (ambiguous only
+    for planes packed along N whose unpacked N happens to equal
+    ceil(k/cpw))."""
     if isinstance(plane, packing.PackedPlane):
         if bits is not None and bits != plane.bits:
             raise ValueError(
@@ -136,11 +145,12 @@ def _plane_fields(plane, bits):
                 f"{plane.bits}; the words can only be unpacked at the "
                 f"width they were packed with")
         return (plane.words, plane.alpha, plane.beta, plane.overflow,
-                plane.bits, plane.pack_axis)
+                plane.bits, plane.pack_axis, plane.slice_bits,
+                plane.slice_ep)
     words, alpha, beta = plane["words"], plane["alpha"], plane["beta"]
     if bits is None:
         raise ValueError("dict packed planes carry no bitwidth; pass bits=")
-    return words, alpha, beta, None, bits, None
+    return words, alpha, beta, None, bits, None, None, False
 
 
 def plane_matmul(x, plane, *, bits: int | None = None,
@@ -179,7 +189,8 @@ def plane_matmul(x, plane, *, bits: int | None = None,
     x: (..., K), or (E, M, K) against an expert stack; returns (..., N)
     in x.dtype (no bias).
     """
-    words, alpha, beta, overflow, bits, pack_axis = _plane_fields(plane, bits)
+    (words, alpha, beta, overflow, bits, pack_axis, slice_bits,
+     slice_ep) = _plane_fields(plane, bits)
     K, N = x.shape[-1], alpha.shape[-1]
     cpw = packing.codes_per_word(bits)
     if pack_axis is None:              # legacy dict plane: shape heuristic
@@ -191,10 +202,14 @@ def plane_matmul(x, plane, *, bits: int | None = None,
     if use_kernel and packed_k and words.shape[-2] * cpw == K and ep_ok:
         if words.ndim == 2:
             return quant_matmul(x, words, alpha, beta, bits=bits,
-                                overflow_words=overflow, interpret=interpret)
+                                overflow_words=overflow,
+                                slice_bits=slice_bits, slice_ep=slice_ep,
+                                interpret=interpret)
         if words.ndim == 3 and x.ndim == 3 and x.shape[0] == words.shape[0]:
             return quant_matmul_experts(x, words, alpha, beta, bits=bits,
                                         overflow_words=overflow,
+                                        slice_bits=slice_bits,
+                                        slice_ep=slice_ep,
                                         interpret=interpret)
     if packed_k:
         codes = packing.unpack_codes(words, bits, K, axis=-2)
@@ -206,6 +221,9 @@ def plane_matmul(x, plane, *, bits: int | None = None,
         if overflow is not None:
             codes = codes + (packing.unpack_codes(overflow, 1, N, axis=-1)
                              << bits)
+    if slice_bits is not None:
+        codes = packing.slice_codes_on_grid(codes, bits, slice_bits,
+                                            extra_precision=slice_ep)
     w_hat = (alpha * codes.astype(jnp.float32) - beta).astype(x.dtype)
     if words.ndim == 2:
         return x @ w_hat

@@ -43,23 +43,39 @@ def _unpack_tile(words, bits):
     return codes.reshape(words.shape[0] * cpw, words.shape[1])
 
 
-def _dequant_tile(words, ovf_words, alpha, beta, bits):
+def _dequant_tile(words, ovf_words, alpha, beta, bits, slice_bits=None,
+                  slice_ep=False):
     """One tile's dequantized weights: alpha * code - beta, where code
-    composes the base plane with the 2^bits-valued overflow bit."""
+    composes the base plane with the 2^bits-valued overflow bit.
+
+    `slice_bits` (static) consumes an aliased draft view: the words are
+    packed at the parent width `bits` and the Eq. 4/6 MSB slice to r =
+    slice_bits runs here on the VPU, right after the unpack --
+    `(2q + 2^(c-r)) >> (c-r+1)`, clamped to [0, 2^r - 1] unless
+    `slice_ep` keeps the Errata Eq. 8 overflow bucket. Bit-identical to
+    dequantizing a materialized r-bit plane (alpha carries the exact
+    power-of-two grid re-scale), at zero extra plane bytes."""
     codes = _unpack_tile(words, bits)                # (bk, bn) int32
     if ovf_words is not None:
         codes = codes + (_unpack_tile(ovf_words, 1) << bits)
+    if slice_bits is not None and slice_bits != bits:
+        c, r = bits, slice_bits
+        codes = (2 * codes + (1 << (c - r))) >> (c - r + 1)
+        if not slice_ep:
+            codes = jnp.minimum(codes, (1 << r) - 1)
     return alpha * codes.astype(jnp.float32) - beta
 
 
-def _kernel(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits, k_steps):
+def _kernel(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits, k_steps,
+            slice_bits=None, slice_ep=False):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    w = _dequant_tile(w_ref[...], None, alpha_ref[...], beta_ref[...], bits)
+    w = _dequant_tile(w_ref[...], None, alpha_ref[...], beta_ref[...], bits,
+                      slice_bits, slice_ep)
     x = x_ref[...].astype(jnp.float32)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -80,7 +96,8 @@ def _kernel_ep(x_ref, w_ref, ovf_ref, alpha_ref, beta_ref, o_ref, *, bits,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "block_m", "block_n", "block_k", "interpret"),
+    static_argnames=("bits", "block_m", "block_n", "block_k", "interpret",
+                     "slice_bits", "slice_ep"),
 )
 def quant_matmul_pallas(
     x: jax.Array,            # (M, K) float
@@ -94,7 +111,11 @@ def quant_matmul_pallas(
     block_n: int = 128,
     block_k: int = 512,
     interpret: bool = False,
+    slice_bits: int | None = None,   # static: on-the-fly MSB slice width
+    slice_ep: bool = False,          # static: slice without clamp (Eq. 8)
 ) -> jax.Array:
+    if slice_bits is not None:
+        assert overflow is None, "sliced views carry no overflow bitmap"
     M, K = x.shape
     cpw = 32 // bits
     Kw, N = words.shape
@@ -128,10 +149,14 @@ def quant_matmul_pallas(
         pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
     ]
     operands += [alpha, beta]
-    body = _kernel_ep if overflow is not None else _kernel
+    if overflow is not None:
+        body = functools.partial(_kernel_ep, bits=bits, k_steps=k_steps)
+    else:
+        body = functools.partial(_kernel, bits=bits, k_steps=k_steps,
+                                 slice_bits=slice_bits, slice_ep=slice_ep)
 
     out = pl.pallas_call(
-        functools.partial(body, bits=bits, k_steps=k_steps),
+        body,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
@@ -143,7 +168,8 @@ def quant_matmul_pallas(
     return out.astype(x.dtype)
 
 
-def _kernel_experts(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits):
+def _kernel_experts(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits,
+                    slice_bits=None, slice_ep=False):
     """`_kernel` with a leading expert grid dim (blocks carry E=1)."""
     k = pl.program_id(3)
 
@@ -151,7 +177,8 @@ def _kernel_experts(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, bits):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    w = _dequant_tile(w_ref[0], None, alpha_ref[0], beta_ref[0], bits)
+    w = _dequant_tile(w_ref[0], None, alpha_ref[0], beta_ref[0], bits,
+                      slice_bits, slice_ep)
     x = x_ref[0].astype(jnp.float32)
     o_ref[0, :, :] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -171,7 +198,8 @@ def _kernel_experts_ep(x_ref, w_ref, ovf_ref, alpha_ref, beta_ref, o_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "block_m", "block_n", "block_k", "interpret"),
+    static_argnames=("bits", "block_m", "block_n", "block_k", "interpret",
+                     "slice_bits", "slice_ep"),
 )
 def quant_matmul_experts_pallas(
     x: jax.Array,            # (E, M, K) float
@@ -185,6 +213,8 @@ def quant_matmul_experts_pallas(
     block_n: int = 128,
     block_k: int = 512,
     interpret: bool = False,
+    slice_bits: int | None = None,   # static: on-the-fly MSB slice width
+    slice_ep: bool = False,          # static: slice without clamp (Eq. 8)
 ) -> jax.Array:
     """Batched-over-experts `quant_matmul_pallas`: one packed plane per
     expert of a MoE stack, the grid extended with a leading E dim so
@@ -192,6 +222,8 @@ def quant_matmul_experts_pallas(
     math as the 2-D kernel (DMA packed words, VPU unpack, MXU matmul),
     including the in-kernel 2^bits-valued overflow term when the
     expert stack carries an extra-precision bitmap."""
+    if slice_bits is not None:
+        assert overflow is None, "sliced views carry no overflow bitmap"
     E, M, K = x.shape
     cpw = 32 // bits
     Ew, Kw, N = words.shape
@@ -221,10 +253,14 @@ def quant_matmul_experts_pallas(
         pl.BlockSpec((1, 1, block_n), lambda e, i, j, k: (e, 0, j)),
     ]
     operands += [alpha, beta]
-    body = _kernel_experts_ep if overflow is not None else _kernel_experts
+    if overflow is not None:
+        body = functools.partial(_kernel_experts_ep, bits=bits)
+    else:
+        body = functools.partial(_kernel_experts, bits=bits,
+                                 slice_bits=slice_bits, slice_ep=slice_ep)
 
     out = pl.pallas_call(
-        functools.partial(body, bits=bits),
+        body,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_m, block_n),

@@ -32,8 +32,16 @@ from repro.configs import get_config
 from repro.core import mixnmatch
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import api
-from repro.serve import Engine, ServeConfig
+from repro.serve import Engine, ServeConfig, SpecDecodeConfig
 from repro.serve.scheduler import poisson_trace
+
+
+def parse_draft_tier(name: str) -> tuple[int, bool]:
+    """'int2' / 'int4' / 'int2+ep' -> (bits, extra_precision)."""
+    base, _, suffix = name.partition("+")
+    if not base.startswith("int") or not base[3:].isdigit() or suffix not in ("", "ep"):
+        raise ValueError(f"--draft-tier {name!r}: expected intN or intN+ep")
+    return int(base[3:]), suffix == "ep"
 
 
 def build_engine(args, cfg):
@@ -111,6 +119,18 @@ def main(argv=None):
     ap.add_argument("--elastic", action="store_true",
                     help="load-adaptive precision tiers (int8 -> int4 -> "
                          "Mix'n'Match -> int2+ep -> int2)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="Matryoshka self-speculative decoding: the "
+                         "--draft-tier slice of the SAME resident parent "
+                         "drafts --draft-len tokens per round, the serving "
+                         "tier verifies the whole block in one step. "
+                         "Token-exact vs plain decode; the summary's 'spec' "
+                         "section reports acceptance rate / mean accepted "
+                         "prefix / verify-steps-per-token")
+    ap.add_argument("--draft-tier", default="int2",
+                    help="draft slice: intN or intN+ep (default int2)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="k, tokens drafted per verify step (default 4)")
     ap.add_argument("--legacy", action="store_true",
                     help="old fixed-batch run-to-completion loop")
     ap.add_argument("--ckpt", default="", help="checkpoint dir to serve from")
@@ -122,9 +142,21 @@ def main(argv=None):
         cfg = cfg.reduced()
     engine = build_engine(args, cfg)
 
+    spec = None
+    if args.spec_decode:
+        if args.legacy:
+            raise SystemExit("--spec-decode rides the slot scheduler; "
+                             "drop --legacy")
+        draft_bits, draft_ep = parse_draft_tier(args.draft_tier)
+        spec = SpecDecodeConfig(draft_bits=draft_bits,
+                                draft_extra_precision=draft_ep,
+                                draft_len=args.draft_len)
+
     if args.legacy:
+        # same --seed pin as poisson_trace: one seed, one corpus
         corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
-                                            seq_len=args.prompt_len, seed=123))
+                                            seq_len=args.prompt_len,
+                                            seed=123 + args.seed))
         prompts = jnp.asarray(
             corpus.batch(0, args.requests, args.prompt_len)["tokens"])
         t0 = time.perf_counter()
@@ -138,7 +170,8 @@ def main(argv=None):
         return out
 
     sched = engine.scheduler(elastic=args.elastic,
-                             packed=args.packed if args.elastic else None)
+                             packed=args.packed if args.elastic else None,
+                             spec_decode=spec)
     trace = build_trace(args, cfg)
     print(f"replaying {len(trace)} Poisson arrivals "
           f"(rate {args.arrival_rate}/s) through "
@@ -146,7 +179,9 @@ def main(argv=None):
           + (" with elastic precision" if args.elastic else
              f" at fixed tier bits={engine.serve_cfg.bits}")
           + (" over packed tier planes" if args.elastic and args.packed
-             else ""))
+             else "")
+          + (f", spec-decoding with a {args.draft_tier} draft slice "
+             f"(k={args.draft_len})" if spec else ""))
     results = sched.run_trace(trace)
     summary = sched.metrics.summary()
     print(json.dumps(summary, indent=2))

@@ -87,5 +87,17 @@ def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
     return lm.decode_step_slots(params, state, token, pos, cfg, bits=bits)
 
 
+def verify_step_slots(params, state, tokens, pos, cfg, *, bits=None):
+    """Multi-token slot scoring: tokens is (B, T), pos (B,) the cache
+    position of each slot's first token.
+
+    The verify step of self-speculative decoding -- see
+    lm.verify_step_slots. Attention-cache families only.
+    """
+    if cfg.family == "encdec":
+        raise NotImplementedError("slot-wise verify for encdec")
+    return lm.verify_step_slots(params, state, tokens, pos, cfg, bits=bits)
+
+
 def param_count(params) -> int:
     return int(sum(x.size for x in jax.tree.leaves(params)))

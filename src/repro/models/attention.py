@@ -190,6 +190,50 @@ def decode_attention_slots(
     return out, {"k": k_cache, "v": v_cache}
 
 
+def verify_attention_slots(
+    p, x, cache, pos, cfg, *, bits, qcfg: QuantConfig,
+):
+    """Multi-token scoring with PER-SLOT start positions (spec decode).
+
+    x: (B, T, d); pos: (B,) int32, each slot's first write index. Slot b
+    writes its T new k/v rows at pos[b]..pos[b]+T-1 in one block update
+    and query j attends causally to its own prefix (ki <= pos[b] + j).
+    The verify step of self-speculative decoding: all k+1 draft
+    positions scored in ONE batched step. Write-then-attend over the
+    full cache with the same grouped einsums as
+    `decode_attention_slots`, so a T=1 call is that function exactly --
+    and stale draft rows beyond the accepted prefix are masked, never
+    read.
+    """
+    B, T = x.shape[:2]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pos = pos.astype(jnp.int32)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(positions[:, :, None], (B, T, 3))
+    q, k_new, v_new = _project_qkv(p, x, cfg, bits=bits, qcfg=qcfg, positions=positions)
+
+    def upd(c, n, p_):  # c: (max_len, kh, hd); n: (T, kh, hd)
+        return jax.lax.dynamic_update_slice_in_dim(c, n, p_, axis=0)
+
+    k_cache = jax.vmap(upd)(cache["k"], k_new.astype(cache["k"].dtype), pos)
+    v_cache = jax.vmap(upd)(cache["v"], v_new.astype(cache["v"].dtype), pos)
+    G = h // kh
+    qg = q.reshape(B, T, kh, G, hd)
+    scale = hd**-0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    qpos = positions[..., 0] if cfg.m_rope else positions
+    mask = jnp.arange(k_cache.shape[1])[None, None, :] <= qpos[:, :, None]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, T, h * hd)
+    out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg, kind="attn")
+    return out, {"k": k_cache, "v": v_cache}
+
+
 def decode_attention(
     p, x, cache, pos, cfg, *, bits, qcfg: QuantConfig,
 ):

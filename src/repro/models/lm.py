@@ -456,6 +456,62 @@ def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
     return _logits(params, cfg, h), {"kv": new_kv}
 
 
+def verify_step_slots(params, state, tokens, pos, cfg, *, bits=None):
+    """Score T tokens per slot in ONE step (spec-decode verification).
+
+    tokens: (B, T) int32 -- slot b's draft block [d_0 .. d_{T-1}]; pos:
+    (B,) int32, the cache position of d_0 (the verified last token).
+    Returns (logits (B, T, V), new state): logits[:, j] scores position
+    pos + j having attended to tokens[:, :j+1] plus the committed
+    prefix, so argmax(logits[:, j]) is exactly what a sequential
+    `decode_step_slots` chain would predict after token j -- the greedy
+    acceptance oracle. KV rows pos..pos+T-1 are written; rows past the
+    accepted prefix are stale afterwards and the scheduler rolls them
+    back (`serve.kv_cache.rollback_slots`).
+
+    A T=1 call is `decode_step_slots` exactly (same einsums, same
+    reduction shapes). MoE layers get a capacity floor so the T-row
+    verify block never drops tokens that the one-row decode would route
+    (C scales with rows; dispatch stays row-local, so slots remain
+    independent).
+    """
+    qcfg = cfg.quant
+    L = cfg.num_layers
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise NotImplementedError(
+            f"slot-wise verify requires an attention KV cache; family "
+            f"{cfg.family!r} is served via the legacy shared-position path")
+    bits_l = _bits_per_layer(bits, L)
+    h = jnp.take(params["embed"]["w"], tokens, axis=0)
+    h = cm.constrain(h, "batch", None, "embed")
+    is_moe = cfg.family == "moe"
+    if is_moe:
+        # C = max(int(cf * top_k * S / E), 1) rows per expert: floor cf
+        # at E / top_k so C >= S and the verify block drops nothing.
+        cap = max(float(cfg.capacity_factor), cfg.num_experts / cfg.top_k)
+
+    def body(x, xs):
+        lp, cache_l, b = xs
+        b = None if bits_l is None else b
+        a, new_cache = attn.verify_attention_slots(
+            lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, pos, cfg,
+            bits=b, qcfg=qcfg)
+        x = x + a
+        if is_moe:
+            y, _ = ffn_mod.apply_moe(lp["moe"], cm.rmsnorm(lp["norm2"], x),
+                                     bits=b, qcfg=qcfg, top_k=cfg.top_k,
+                                     capacity_factor=cap)
+        else:
+            y = ffn_mod.apply_ffn(lp["ffn"], cm.rmsnorm(lp["norm2"], x),
+                                  bits=b, qcfg=qcfg)
+        return x + y, new_cache
+
+    xs = (params["layers"], state["kv"],
+          bits_l if bits_l is not None else jnp.zeros((L,), jnp.int32))
+    h, new_kv = cm.scan_layers(body, h, xs, cfg.unroll_layers)
+    return _logits(params, cfg, h), {"kv": new_kv}
+
+
 def prefill(params, tokens, cfg, *, bits=None, max_len=None,
             positions=None, vision_embeds=None, last_pos=None):
     """Process a full prompt; returns (last-position logits, decode state).

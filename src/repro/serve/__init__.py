@@ -13,3 +13,6 @@ from repro.serve.router import (ElasticPrecisionRouter, PrecisionTier,  # noqa: 
                                 TierCache, TierEntry, default_tiers)
 from repro.serve.scheduler import (ContinuousBatchingScheduler,  # noqa: F401
                                    Request)
+from repro.serve.specdecode import (SpecDecodeConfig,  # noqa: F401
+                                    accept_lengths, draft_params_for,
+                                    extra_plane_nbytes)

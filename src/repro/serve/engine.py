@@ -504,7 +504,10 @@ def packed_axes(axes_tree, params_packed, cfg):
                 # the overflow bitmap shards exactly like the words
                 overflow=words if p_node.overflow is not None else None,
                 bits=p_node.bits, pack_axis=p_node.pack_axis,
-                extra_precision=p_node.extra_precision)
+                extra_precision=p_node.extra_precision,
+                # static slice metadata must ride along or the spec
+                # tree's treedef diverges from the aliased draft view's
+                slice_bits=p_node.slice_bits, slice_ep=p_node.slice_ep)
         if isinstance(p_node, dict):
             return {k: walk(ax_node[k], p_node[k], path + [k]) for k in p_node}
         if isinstance(p_node, list):
@@ -611,7 +614,7 @@ class Engine:
                   max_len: int | None = None, elastic: bool = False,
                   tiers=None, thresholds=None, cooldown: int = 4,
                   total_pages: int | None = None, clock=None,
-                  packed: bool | None = None):
+                  packed: bool | None = None, spec_decode=None):
         """Build a ContinuousBatchingScheduler over this engine's model.
 
         elastic=True serves load-adaptive precision from the parent
@@ -625,6 +628,15 @@ class Engine:
         closure per representation key (the bitwidth for uniform tiers,
         the per-layer bits tuple for Mix'n'Match tiers, whose layers are
         served as per-layer packed planes).
+
+        `spec_decode` (a `serve.specdecode.SpecDecodeConfig`) turns on
+        Matryoshka self-speculative decoding: a low-bit slice of the
+        SAME resident parent drafts draft_len tokens per round and the
+        serving tier verifies the whole block in one step -- token-
+        exact vs plain decode, fewer verify-model steps per token. On
+        the packed path the draft plane aliases the resident tier's
+        bytes (`core.packing.sliced_view`); the dequantized fallback
+        materializes draft weights from the parent checkpoint.
         """
         from repro.serve import router as router_mod
         from repro.serve import scheduler as sched_mod
@@ -635,6 +647,9 @@ class Engine:
             total_pages=total_pages,
             mesh=self.mesh,
         )
+        if spec_decode is not None:
+            kw["spec_decode"] = spec_decode
+            kw["draft_source"] = self._parent_params
         if clock is not None:
             kw["clock"] = clock
         if elastic:
@@ -676,20 +691,22 @@ class Engine:
             self.params, self.cfg, packed_bits=self._packed_key,
             param_shardings=self._shardings, **kw)
 
-    def _batch_scheduler(self, B: int, max_len: int):
+    def _batch_scheduler(self, B: int, max_len: int, spec_decode=None):
         # keep only the latest shape: each cached scheduler pins a full
         # (L, B, max_len, ...) decode state on device
-        key = (B, max_len)
+        key = (B, max_len, spec_decode)
         if key not in self._schedulers:
             self._schedulers.clear()
-            self._schedulers[key] = self.scheduler(num_slots=B, max_len=max_len)
+            self._schedulers[key] = self.scheduler(num_slots=B, max_len=max_len,
+                                                   spec_decode=spec_decode)
         sched = self._schedulers[key]
         sched.reset()
         return sched
 
     # -- generation --------------------------------------------------------
 
-    def generate(self, prompts: jax.Array, num_tokens: int, extras=None):
+    def generate(self, prompts: jax.Array, num_tokens: int, extras=None,
+                 spec_decode=None):
         """prompts: (B, S) int32 -> (B, num_tokens) greedy continuation.
 
         Routed through the continuous-batching scheduler as the
@@ -705,13 +722,21 @@ class Engine:
         bucketed prefill per prompt-length bucket (a single call here,
         where every prompt shares one length) -- same launch count as
         `generate_legacy`, which remains the equivalence oracle.
+
+        `spec_decode` (a `serve.specdecode.SpecDecodeConfig`) drafts
+        with a low-bit slice of the same parent and verifies with this
+        engine's tier -- token-identical output, fewer verify steps.
         """
         if extras or self.cfg.family not in ("dense", "vlm", "moe"):
+            if spec_decode is not None:
+                raise NotImplementedError(
+                    "spec decode rides the slot scheduler; unavailable on "
+                    "the legacy fixed-batch path")
             return self.generate_legacy(prompts, num_tokens, extras)
         import numpy as np
         from repro.serve.scheduler import Request
         B, S = prompts.shape
-        sched = self._batch_scheduler(B, S + num_tokens)
+        sched = self._batch_scheduler(B, S + num_tokens, spec_decode)
         prompts_np = np.asarray(prompts)
         for i in range(B):
             sched.submit(Request(uid=i, prompt=prompts_np[i],

@@ -164,6 +164,44 @@ def state_batch_axes(cfg) -> list[int]:
     return [ax.index("batch") for ax in axes_leaves]
 
 
+def state_seq_axes(cfg) -> list[int | None]:
+    """Flattened per-leaf index of the 'kv_seq' (cache position) axis of
+    the decode state, None for leaves without one (recurrent state), in
+    tree_flatten leaf order."""
+    axes_leaves = jax.tree_util.tree_flatten(
+        api.state_axes(cfg), is_leaf=lambda x: isinstance(x, tuple))[0]
+    return [ax.index("kv_seq") if "kv_seq" in ax else None
+            for ax in axes_leaves]
+
+
+def rollback_slots(state, pos, batch_axes: list[int],
+                   seq_axes: list[int | None]):
+    """Zero every cache entry at position >= pos[slot], per slot.
+
+    The rewind step of speculative decoding: after a verify step writes
+    k+1 draft KV rows and only m <= k are accepted, the rows past the
+    accepted prefix are stale. `pos` is (B,) int32 -- each slot's count
+    of VALID tokens (its next write index); entries at kv_seq index >=
+    pos[b] are cleared, leaves without a kv_seq axis pass through.
+    `batch_axes`/`seq_axes` come from `state_batch_axes(cfg)` /
+    `state_seq_axes(cfg)` (static).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    assert len(leaves) == len(batch_axes) == len(seq_axes)
+    out = []
+    for leaf, b, s in zip(leaves, batch_axes, seq_axes):
+        if s is None:
+            out.append(leaf)
+            continue
+        keep = jnp.arange(leaf.shape[s])[None, :] < pos[:, None]   # (B, S)
+        shape = [1] * leaf.ndim
+        shape[b], shape[s] = leaf.shape[b], leaf.shape[s]
+        mask = (keep if b < s else keep.T).reshape(shape)
+        out.append(jnp.where(mask, leaf, jnp.zeros((), leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def insert_slots(state, slot_state, slots, batch_axes: list[int],
                  shardings=None):
     """Scatter a batch-m prefill state into rows `slots` of the slot array.

@@ -12,6 +12,19 @@ from __future__ import annotations
 import dataclasses
 
 
+def _percentile(values: list[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy's default), q in [0, 100]."""
+    if not values:
+        return 0.0
+    vs = sorted(values)
+    if len(vs) == 1:
+        return float(vs[0])
+    rank = (len(vs) - 1) * q / 100.0
+    lo = int(rank)
+    hi = min(lo + 1, len(vs) - 1)
+    return float(vs[lo] + (vs[hi] - vs[lo]) * (rank - lo))
+
+
 @dataclasses.dataclass
 class RequestRecord:
     uid: object
@@ -49,6 +62,15 @@ class ServeMetrics:
         self.tier_switches = 0
         self.tier_weight_bytes: dict[str, dict] = {}
         self._last_tier: str | None = None
+        self.tier_decoded_tokens: dict[str, int] = {}
+        # speculative decoding: one "round" is one slot's draft block
+        # going through one verify step (so spec_rounds == per-slot
+        # verify-model steps)
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+        self.spec_tier_rounds: dict[str, int] = {}
 
     # -- request lifecycle -------------------------------------------------
 
@@ -94,15 +116,29 @@ class ServeMetrics:
     # -- per-step counters -------------------------------------------------
 
     def on_step(self, tier: str, *, new_tokens: int, active: int,
-                queue_depth: int):
+                queue_depth: int, decoded_tokens: int = 0):
         self.steps += 1
         self.tier_steps[tier] = self.tier_steps.get(tier, 0) + 1
         self.tier_tokens[tier] = self.tier_tokens.get(tier, 0) + new_tokens
+        self.tier_decoded_tokens[tier] = (
+            self.tier_decoded_tokens.get(tier, 0) + decoded_tokens)
         self.queue_depth_samples.append(queue_depth)
         self.active_samples.append(active)
         if self._last_tier is not None and tier != self._last_tier:
             self.tier_switches += 1
         self._last_tier = tier
+
+    def on_spec_round(self, tier: str, *, drafted: int, accepted: int,
+                      emitted: int):
+        """One slot's draft/verify round: `drafted` = k draft tokens,
+        `accepted` = the agreeing prefix length m in [0, k], `emitted`
+        = tokens actually appended (m + 1 bonus, truncated at
+        max_new_tokens / EOS)."""
+        self.spec_rounds += 1
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
+        self.spec_tier_rounds[tier] = self.spec_tier_rounds.get(tier, 0) + 1
 
     # -- aggregation -------------------------------------------------------
 
@@ -123,6 +159,8 @@ class ServeMetrics:
             "generated_tokens": gen,
             "throughput_tok_s": gen / span if done else 0.0,
             "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "p50_ttft_s": _percentile(ttfts, 50.0),
+            "p95_ttft_s": _percentile(ttfts, 95.0),
             "max_ttft_s": max(ttfts) if ttfts else 0.0,
             "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
             "scheduler_steps": self.steps,
@@ -137,5 +175,29 @@ class ServeMetrics:
             "tier_occupancy": {t: n / total_steps
                                for t, n in sorted(self.tier_steps.items())},
             "tier_tokens": dict(sorted(self.tier_tokens.items())),
+            "tier_decoded_tokens": dict(
+                sorted(self.tier_decoded_tokens.items())),
             "tier_weight_bytes": dict(sorted(self.tier_weight_bytes.items())),
+            "spec": self._spec_summary(),
+        }
+
+    def _spec_summary(self) -> dict:
+        """Speculative-decoding acceptance bookkeeping (all zeros when
+        spec decode is off). `verify_steps` counts per-slot verify
+        evaluations; with any acceptance at all it sits strictly below
+        `emitted_tokens` -- the speed multiplier the self-speculative
+        path exists for."""
+        return {
+            "rounds": self.spec_rounds,
+            "drafted_tokens": self.spec_drafted,
+            "accepted_tokens": self.spec_accepted,
+            "emitted_tokens": self.spec_emitted,
+            "verify_steps": self.spec_rounds,
+            "acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                if self.spec_drafted else 0.0),
+            "mean_accepted_prefix_len": (self.spec_emitted / self.spec_rounds
+                                         if self.spec_rounds else 0.0),
+            "verify_steps_per_token": (self.spec_rounds / self.spec_emitted
+                                       if self.spec_emitted else 0.0),
+            "tier_rounds": dict(sorted(self.spec_tier_rounds.items())),
         }

@@ -74,7 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
-from repro.serve import kv_cache
+from repro.serve import kv_cache, specdecode
 from repro.serve.metrics import ServeMetrics
 from repro.serve.router import ElasticPrecisionRouter, TierCache
 
@@ -123,8 +123,11 @@ def poisson_trace(cfg, *, requests: int, prompt_len: int, gen_tokens: int,
     exponential inter-arrivals, shared by the serve driver and the
     throughput benchmark so both replay the same trace."""
     from repro.data import DataConfig, SyntheticCorpus
+    # the prompt corpus derives from the SAME seed as the arrival
+    # offsets, so one --seed pins the whole trace (bit-reproducible
+    # replays; seed=0 keeps the historical corpus seed 123)
     corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
-                                        seq_len=prompt_len, seed=123))
+                                        seq_len=prompt_len, seed=123 + seed))
     prompts = np.asarray(corpus.batch(0, requests, prompt_len)["tokens"])
     rng = np.random.default_rng(seed)
     offsets = np.cumsum(rng.exponential(1.0 / rate, size=requests))
@@ -162,6 +165,8 @@ class ContinuousBatchingScheduler:
                  router: ElasticPrecisionRouter | None = None,
                  tier_cache: TierCache | None = None,
                  packed_bits=None,
+                 spec_decode: specdecode.SpecDecodeConfig | None = None,
+                 draft_source=None,
                  mesh=None, param_shardings=None,
                  clock=time.perf_counter):
         if cfg.family not in ("dense", "vlm", "moe"):
@@ -186,6 +191,17 @@ class ContinuousBatchingScheduler:
             pages_per_slot=-(-max_len // page_size), total_pages=total_pages)
         self.capacity = self.pool.slot_capacity
         self.num_slots = num_slots
+        self.spec = spec_decode
+        self._draft_source = draft_source
+        self._draft_params: dict[str, object] = {}
+        # spec decode scratch headroom: a verify step block-writes up to
+        # draft_len KV rows past a slot's last committed position, and
+        # `dynamic_update_slice` CLAMPS start indices -- without the
+        # headroom a near-capacity verify would silently shift its
+        # writes onto live rows. Admission capacity stays `capacity`;
+        # only the cache rows grow.
+        self.cache_len = self.capacity + (spec_decode.draft_len
+                                          if spec_decode else 0)
         # one (prefill, decode) jitted closure pair per served weight
         # representation: key = packed bitwidth (int), a per-layer bits
         # tuple (packed Mix'n'Match), or None for dequantized params.
@@ -202,7 +218,7 @@ class ContinuousBatchingScheduler:
             self.packed_bits = (packed_bits if packed_bits is not None
                                 else cfg.quant.packed_bits or None)
             self._param_shardings = param_shardings
-        self.state = api.init_state(cfg, num_slots, self.capacity)
+        self.state = api.init_state(cfg, num_slots, self.cache_len)
         if mesh is not None:
             from repro.runtime import sharding as shard_lib
             self._state_shardings = shard_lib.tree_shardings(
@@ -216,6 +232,7 @@ class ContinuousBatchingScheduler:
         self.active: dict[int, _Active] = {}
         self.results: dict[object, np.ndarray] = {}
         self._batch_axes = kv_cache.state_batch_axes(cfg)
+        self._seq_axes = kv_cache.state_seq_axes(cfg)
 
     # -- per-representation compiled closures -------------------------------
 
@@ -256,24 +273,14 @@ class ContinuousBatchingScheduler:
         fns = self._fns.get(key)
         if fns is not None:
             return fns
-        cfg = self.cfg
-        if key:
-            qc = dataclasses.replace(
-                cfg.quant,
-                packed_bits=key if isinstance(key, int) else 0,
-                # the Pallas kernel where it compiles; jnp twin elsewhere
-                packed_kernel=(cfg.quant.packed_kernel
-                               or jax.default_backend() == "tpu"))
-        else:
-            qc = dataclasses.replace(cfg.quant, packed_bits=0)
-        cfg = cfg.replace(quant=qc)
-        capacity, batch_axes = self.capacity, self._batch_axes
+        cfg = self._rep_cfg(key)
+        cache_len, batch_axes = self.cache_len, self._batch_axes
 
         state_shardings = self._state_shardings
 
         def prefill(p, st, toks, slots, lengths):
             logits, slot_state = api.prefill(
-                p, {"tokens": toks}, cfg, bits=None, max_len=capacity,
+                p, {"tokens": toks}, cfg, bits=None, max_len=cache_len,
                 last_pos=lengths)
             st = kv_cache.insert_slots(st, slot_state, slots, batch_axes,
                                        shardings=state_shardings)
@@ -307,6 +314,100 @@ class ContinuousBatchingScheduler:
         else:
             fns = {"prefill": jax.jit(prefill, donate_argnums=(1,)),
                    "decode": jax.jit(decode, donate_argnums=(1,))}
+        self._fns[key] = fns
+        return fns
+
+    def _rep_cfg(self, key):
+        """cfg with quant adjusted for one representation key (the
+        closure-trace config: packed bitwidth only matters for legacy
+        dict planes -- PackedPlane is self-describing -- and the Pallas
+        kernel turns on where it compiles)."""
+        cfg = self.cfg
+        if key:
+            qc = dataclasses.replace(
+                cfg.quant,
+                packed_bits=key if isinstance(key, int) else 0,
+                # the Pallas kernel where it compiles; jnp twin elsewhere
+                packed_kernel=(cfg.quant.packed_kernel
+                               or jax.default_backend() == "tpu"))
+        else:
+            qc = dataclasses.replace(cfg.quant, packed_bits=0)
+        return cfg.replace(quant=qc)
+
+    def _spec_draft(self):
+        """Draft params for the CURRENT tier (cached per tier name).
+
+        Packed tiers alias their resident planes (`sliced_view`, zero
+        extra plane bytes); the dequantized fallback materializes from
+        the float parent (`draft_source`, or the tier cache's parent).
+        """
+        name = self.tier_name
+        dp = self._draft_params.get(name)
+        if dp is None:
+            parent = self._draft_source
+            if parent is None and self.tier_cache is not None:
+                parent = self.tier_cache.parent_params
+            dp = specdecode.draft_params_for(self.params, self.cfg,
+                                             self.spec, parent_params=parent)
+            if self.mesh is not None:
+                from repro.serve.engine import served_param_shardings
+                sh = served_param_shardings(dp, self.cfg, self.mesh)
+                # aliased leaves are already placed; device_put is a
+                # no-op for them and places only the new alpha rescales
+                dp = jax.device_put(dp, sh)
+                dp = (dp, sh)
+            else:
+                dp = (dp, None)
+            self._draft_params[name] = dp
+        return dp
+
+    def _spec_fns(self, draft_shardings) -> dict:
+        """(draft, verify) jitted closures for one (draft, verify)
+        representation pair -- same keyed-cache contract as
+        `_step_fns`: the draft view's treedef differs per (slice width,
+        resident representation), so each pair compiles exactly once
+        and is a dict lookup on every revisit.
+
+        The verify closure folds greedy acceptance AND the KV rollback
+        into the jitted step: it returns (verify_pred (B, T), accepted
+        prefix length m (B,), state with rows >= pos + m + 1 cleared).
+        """
+        key = specdecode.spec_fns_key(self.spec.draft_key, self.packed_bits)
+        fns = self._fns.get(key)
+        if fns is not None:
+            return fns
+        cfg = self._rep_cfg(self.packed_bits)
+        batch_axes, seq_axes = self._batch_axes, self._seq_axes
+        state_shardings = self._state_shardings
+
+        def draft(p, st, tok, pos):
+            logits, st = api.decode_step_slots(p, st, tok, pos, cfg, bits=None)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
+
+        def verify(p, st, toks, pos):
+            logits, st = api.verify_step_slots(p, st, toks, pos, cfg,
+                                               bits=None)
+            pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, T)
+            match = (toks[:, 1:] == pred[:, :-1]).astype(jnp.int32)
+            m = jnp.cumprod(match, axis=1).sum(axis=1)             # (B,)
+            st = kv_cache.rollback_slots(st, pos + m + 1, batch_axes,
+                                         seq_axes)
+            return pred, m, st
+
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            ps, ss = self._param_shardings, state_shardings
+            fns = {"draft": jax.jit(draft, donate_argnums=(1,),
+                                    in_shardings=(draft_shardings, ss, rep,
+                                                  rep),
+                                    out_shardings=(rep, ss)),
+                   "verify": jax.jit(verify, donate_argnums=(1,),
+                                     in_shardings=(ps, ss, rep, rep),
+                                     out_shardings=(rep, rep, ss))}
+        else:
+            fns = {"draft": jax.jit(draft, donate_argnums=(1,)),
+                   "verify": jax.jit(verify, donate_argnums=(1,))}
         self._fns[key] = fns
         return fns
 
@@ -441,7 +542,9 @@ class ContinuousBatchingScheduler:
         self._route()
         admitted = self._admit(now)
         decoded = 0
-        if self.active:
+        if self.active and self.spec is not None:
+            decoded = self._spec_round()
+        elif self.active:
             toks = np.zeros((self.num_slots, 1), np.int32)
             for slot, act in self.active.items():
                 toks[slot, 0] = act.last_token
@@ -465,8 +568,66 @@ class ContinuousBatchingScheduler:
         if admitted or decoded:
             self.metrics.on_step(
                 self.tier_name, new_tokens=admitted + decoded,
-                active=len(self.active), queue_depth=len(self.queue))
+                active=len(self.active), queue_depth=len(self.queue),
+                decoded_tokens=decoded)
         return bool(admitted or decoded)
+
+    def _spec_round(self) -> int:
+        """One draft/verify/accept/rollback round over the slot array.
+
+        k draft steps with the sliced plane write scratch KV at rows
+        P..P+k-1, ONE verify step scores the whole block [d_0..d_k],
+        overwriting those rows with the resident tier's own
+        projections; greedy acceptance emits the agreeing prefix plus
+        the verify model's bonus token (1..k+1 tokens per slot per
+        round, all of them the resident tier's argmax -- token-exact vs
+        plain decode), and the jitted verify closure clears the stale
+        rows past each slot's accepted prefix. Returns tokens emitted.
+        """
+        k = self.spec.draft_len
+        draft_p, draft_sh = self._spec_draft()
+        fns = self._spec_fns(draft_sh)
+        last = np.zeros((self.num_slots, 1), np.int32)
+        for slot, act in self.active.items():
+            last[slot, 0] = act.last_token
+        pos0 = jnp.asarray(self.pos)
+        cur = jnp.asarray(last)
+        blocks = [cur]
+        st = self.state
+        for j in range(k):
+            nxt, st = fns["draft"](draft_p, st, cur, pos0 + j)
+            cur = nxt[:, None]
+            blocks.append(cur)
+        toks = jnp.concatenate(blocks, axis=1)            # (B, k+1)
+        pred, m, self.state = fns["verify"](self.params, st, toks, pos0)
+        pred = np.asarray(pred)                 # forces the computation
+        m = np.asarray(m)
+        toks = np.asarray(toks)
+        t_tok = self.clock()
+        decoded = 0
+        for slot in list(self.active):
+            act = self.active[slot]
+            mm = int(m[slot])
+            accepted = [int(t) for t in toks[slot, 1:mm + 1]]
+            emitted = 0
+            finished = False
+            for tok in accepted + [int(pred[slot, mm])]:
+                act.generated.append(tok)
+                act.last_token = tok
+                emitted += 1
+                if (len(act.generated) >= act.req.max_new_tokens
+                        or tok == act.req.eos_id):
+                    finished = True
+                    break
+            self.pos[slot] += emitted
+            decoded += emitted
+            self.metrics.on_spec_round(self.tier_name, drafted=k,
+                                       accepted=mm, emitted=emitted)
+            if finished:
+                self._finish(slot, t_tok)
+            else:
+                self.pool.grow(slot, self.pos[slot] + 1)
+        return decoded
 
     def defrag(self):
         """Compact live slots into a dense prefix (permutes slot rows)."""

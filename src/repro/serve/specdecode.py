@@ -1,0 +1,167 @@
+"""Matryoshka self-speculative decoding: a low-bit slice drafts, the
+resident tier verifies.
+
+MatQuant's nested packed parent makes speculative decoding free at the
+weight level: the int2 (or int4, or int2+ep) plane of Section 5.4's
+one-parent deployment story ALIASES the bytes of the resident int8
+plane, so the serving stack already holds a draft model at zero extra
+plane cost -- `core.packing.sliced_view` wraps the resident
+`PackedPlane`s in static slice metadata and the kernels apply the
+Eq. 4/6 MSB slice on the fly after the unpack. No other quantization
+scheme gets a draft model for free this way.
+
+The per-slot draft/verify round (driven by
+`serve.scheduler.ContinuousBatchingScheduler`):
+
+  1. DRAFT  -- the sliced plane greedily decodes k tokens d_1..d_k from
+     the committed last token d_0, writing scratch KV rows P..P+k-1;
+  2. VERIFY -- the resident tier scores the block [d_0..d_k] (T = k+1
+     positions) in ONE `models.api.verify_step_slots` call, overwriting
+     rows P..P+k with its own projections;
+  3. ACCEPT -- greedy acceptance keeps the longest prefix where the
+     draft agreed (`accept_lengths`), emits those m tokens plus the
+     verify model's own prediction at the first disagreement (the
+     "bonus" token -- every round emits >= 1 verified token), and
+  4. ROLLBACK -- `serve.kv_cache.rollback_slots` clears the stale rows
+     past the accepted prefix.
+
+Greedy acceptance makes the output TOKEN-EXACT vs plain verify-tier
+decoding: every emitted token is the verify model's argmax given an
+exactly-committed prefix, so speculation only changes how many verify
+steps the sequence costs, never which tokens come out. That exactness
+is the test oracle (`tests/test_specdecode.py`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import packing
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecDecodeConfig:
+    """Self-speculative decoding knobs.
+
+    draft_bits: the slice width of the draft plane (int; drawn from the
+      SAME resident parent the verify tier serves).
+    draft_extra_precision: draft from the Errata Eq. 8 ep slice (codes
+      in [0, 2^r], no clamp) instead of the plain slice.
+    draft_len: k, tokens drafted per round; each round costs k draft
+      steps + 1 verify step and emits between 1 and k+1 tokens.
+    """
+
+    draft_bits: int = 2
+    draft_extra_precision: bool = False
+    draft_len: int = 4
+
+    def __post_init__(self):
+        if not isinstance(self.draft_bits, int):
+            raise ValueError("draft_bits must be a uniform int slice width")
+        if self.draft_len < 1:
+            raise ValueError("draft_len must be >= 1")
+
+    @property
+    def draft_key(self):
+        """Rep key of the draft representation (`packed_rep_key` +
+        'slice' marker: an aliased view's treedef differs from a
+        materialized plane's at the same bits)."""
+        return ("slice", packing.packed_rep_key(self.draft_bits,
+                                                self.draft_extra_precision))
+
+
+def spec_fns_key(draft_key, verify_key):
+    """The scheduler's closure-cache key for one (draft, verify) pair.
+
+    Prefixed so it can never collide with a plain representation key
+    (a per-layer Mix'n'Match bits tuple is also a tuple)."""
+    return ("spec", draft_key, verify_key)
+
+
+def _is_plane(x):
+    return isinstance(x, packing.PackedPlane)
+
+
+def draft_params_for(params, cfg, spec: SpecDecodeConfig, *,
+                     parent_params=None):
+    """Derive the draft-tier params from the serving params.
+
+    Packed serving params (any `PackedPlane` leaves): every plane is
+    replaced by its ALIASED `core.packing.sliced_view` at
+    `spec.draft_bits` -- zero additional plane bytes, the paper-native
+    path. Dequantized serving params carry no packed words to slice, so
+    the draft weights are materialized from the float parent checkpoint
+    instead (`engine.materialize_served_params`) -- same draft tokens,
+    just without the aliasing (the off-TPU fallback, mirroring how the
+    dequant tiers themselves are served).
+    """
+    leaves = jax.tree.leaves(params, is_leaf=_is_plane)
+    if any(_is_plane(leaf) for leaf in leaves):
+        def slice_leaf(x):
+            if _is_plane(x):
+                return packing.sliced_view(
+                    x, spec.draft_bits,
+                    extra_precision=spec.draft_extra_precision)
+            return x
+
+        return jax.tree.map(slice_leaf, params, is_leaf=_is_plane)
+    if parent_params is None:
+        raise ValueError(
+            "dequantized serving params need the float parent checkpoint "
+            "to materialize a draft tier (Engine keeps it under "
+            "keep_parent=True)")
+    from repro.serve.engine import materialize_served_params
+    return materialize_served_params(
+        parent_params, cfg, spec.draft_bits,
+        extra_precision=spec.draft_extra_precision)
+
+
+def accept_lengths(draft_tokens: np.ndarray,
+                   verify_pred: np.ndarray) -> np.ndarray:
+    """Greedy acceptance: longest agreeing prefix per slot.
+
+    draft_tokens: (B, k+1) -- [d_0 .. d_k], d_0 the committed last
+    token; verify_pred: (B, k+1) -- verify_pred[:, j] is the verify
+    model's argmax AFTER d_j. Returns m (B,) in [0, k]: d_1..d_m are
+    accepted (d_{j+1} == verify_pred[:, j] for all j < m) and
+    verify_pred[:, m] is the bonus token, so each slot emits m+1
+    verified tokens. The jitted verify closure computes the same
+    quantity in-graph; this NumPy twin is the test oracle.
+    """
+    match = draft_tokens[:, 1:] == verify_pred[:, :-1]          # (B, k)
+    return np.cumprod(match.astype(np.int64), axis=1).sum(axis=1)
+
+
+def extra_plane_nbytes(draft_params, verify_params) -> int:
+    """Plane bytes of the draft params NOT aliased to verify buffers.
+
+    The "zero additional plane bytes" claim, measured by buffer
+    identity: a draft `PackedPlane` whose words (and overflow) are the
+    SAME array objects as some verify plane's contributes nothing;
+    anything else -- materialized draft planes, or the dequant
+    fallback's full 'w' arrays -- contributes its full size. Per-plane
+    alpha rescales are scale vectors, not plane bytes, matching
+    `engine.served_nbytes` accounting.
+    """
+    verify_ids = {id(leaf) for leaf in jax.tree.leaves(verify_params)}
+    for plane in jax.tree.leaves(verify_params, is_leaf=_is_plane):
+        if _is_plane(plane):
+            verify_ids.add(id(plane.words))
+            if plane.overflow is not None:
+                verify_ids.add(id(plane.overflow))
+    extra = 0
+    for plane in jax.tree.leaves(draft_params, is_leaf=_is_plane):
+        if _is_plane(plane):
+            for buf in (plane.words, plane.overflow):
+                if buf is not None and id(buf) not in verify_ids:
+                    extra += buf.size * buf.dtype.itemsize
+        elif id(plane) not in verify_ids:
+            extra += plane.size * plane.dtype.itemsize
+    return extra
+
+
+__all__ = ["SpecDecodeConfig", "spec_fns_key", "draft_params_for",
+           "accept_lengths", "extra_plane_nbytes"]

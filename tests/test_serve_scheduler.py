@@ -118,6 +118,13 @@ def test_admit_evict_and_slot_reuse(served):
     s = sched.metrics.summary()
     assert s["requests_completed"] == 5
     assert s["mean_ttft_s"] >= 0.0 and s["max_queue_depth"] >= 3
+    # TTFT percentiles interpolate the per-request distribution
+    assert 0.0 <= s["p50_ttft_s"] <= s["p95_ttft_s"] <= s["max_ttft_s"]
+    # decoded-token counts exclude prefill first-tokens: 5 requests
+    # each generated max_new tokens, the first from prefill
+    total_new = sum(mnt.values())
+    assert sum(s["tier_decoded_tokens"].values()) == total_new - 5
+    assert sum(s["tier_tokens"].values()) == total_new
 
 
 def test_reused_slot_is_clean(served):
@@ -155,6 +162,43 @@ def test_defrag_compacts_and_preserves_outputs(served):
         iso = np.asarray(eng.generate_legacy(
             jnp.asarray(ps[uid][None]), 10))[0]
         np.testing.assert_array_equal(res[uid], iso)
+
+
+def test_defrag_preserves_kv_contents_and_positions(served):
+    """Regression: the defrag permutation moves each live slot's KV
+    rows and position counter VERBATIM -- byte-identical cache contents
+    at the new slot index, not just equal final outputs."""
+    from repro.serve import kv_cache
+    _, cfg, eng = served
+    sched = eng.scheduler(num_slots=3, max_len=32)
+    rng = np.random.default_rng(6)
+    for uid, mnt in ((0, 2), (1, 12), (2, 12)):
+        sched.submit(Request(uid=uid, prompt=rng.integers(
+            0, cfg.vocab_size, size=8), max_new_tokens=mnt))
+    sched.step()
+    while 0 not in sched.results:
+        sched.step()
+    assert sched.pool.active_slots == [1, 2]       # hole at slot 0
+    before = jax.tree_util.tree_leaves(
+        jax.tree.map(np.asarray, sched.state))
+    pos_before = sched.pos.copy()
+    gen_before = {s: list(a.generated) for s, a in sched.active.items()}
+    moves = sched.defrag()
+    assert moves == {1: 0, 2: 1}
+    assert (sched.pos[[0, 1]] == pos_before[[1, 2]]).all()
+    after = jax.tree_util.tree_leaves(
+        jax.tree.map(np.asarray, sched.state))
+    for old, new, b in zip(before, after, kv_cache.state_batch_axes(cfg)):
+        old = np.moveaxis(old, b, 0)
+        new = np.moveaxis(new, b, 0)
+        np.testing.assert_array_equal(new[0], old[1])
+        np.testing.assert_array_equal(new[1], old[2])
+    # request bookkeeping followed the permutation
+    assert {s: a.generated for s, a in sched.active.items()} == {
+        0: gen_before[1], 1: gen_before[2]}
+    # and the run completes identically from the compacted state
+    res = sched.run_until_idle()
+    assert len(res[1]) == 12 and len(res[2]) == 12
 
 
 # ---------------------------------------------------------------------------

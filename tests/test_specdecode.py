@@ -1,0 +1,383 @@
+"""Matryoshka self-speculative decoding (serve/specdecode.py).
+
+The acceptance surface of the draft/verify subsystem:
+
+  * the aliased draft view (`core.packing.sliced_view`) is BIT-EXACT vs
+    a materialized r-bit plane on every matmul path (twin + interpret
+    kernel, K-/N-packed, plain + extra-precision slice) while sharing
+    the parent plane's words buffer;
+  * greedy spec decode is TOKEN-IDENTICAL to plain verify-tier decode
+    (dense + MoE, dequant + forced-packed engines, several (draft,
+    verify) pairs, and -- under the shard job's forced 8-device mesh --
+    model-parallel 2), with zero additional plane bytes on the packed
+    path;
+  * `kv_cache.rollback_slots` clears exactly the rows past each slot's
+    accepted prefix (unit + after a real partial rejection);
+  * acceptance bookkeeping: the `accept_lengths` NumPy oracle and the
+    in-graph acceptance agree, and ServeMetrics invariants hold
+    (emitted = accepted + rounds, verify steps < emitted tokens);
+  * one compiled (draft, verify) closure pair per `("spec", draft_key,
+    verify_key)` -- no recompile across rounds or resets.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import packing
+from repro.kernels import ops
+from repro.models import api
+from repro.serve import (Engine, Request, ServeConfig, SpecDecodeConfig,
+                         accept_lengths, extra_plane_nbytes)
+from repro.serve import engine as engine_mod
+from repro.serve import kv_cache
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen3_1_7b").reduced()
+    params = api.init(KEY, cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = get_config("granite_moe_1b_a400m").reduced()
+    params = api.init(KEY, cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, mesh=None, packed=False, monkeypatch=None):
+    if packed:
+        monkeypatch.setattr(engine_mod, "_packed_backend_ok", lambda: True)
+    return Engine(params, cfg, ServeConfig(bits=8, max_len=48, num_slots=4,
+                                           page_size=8, use_packed=packed),
+                  mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# the aliased draft view: bit-exact and byte-free
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pack_axis", [-2, -1])
+@pytest.mark.parametrize("bits,ep", [(4, False), (2, False), (2, True)])
+def test_sliced_view_matches_materialized_plane(bits, ep, pack_axis):
+    """plane_matmul through the zero-copy slice view == through the
+    materialized r-bit plane, on the jnp twin and (K-packed) the
+    interpret-mode kernel."""
+    w = jax.random.normal(jax.random.fold_in(KEY, bits + pack_axis), (64, 48))
+    x = jax.random.normal(jax.random.fold_in(KEY, 7), (4, 64))
+    pl = packing.PackedLinear.from_weights(w, pack_axis=pack_axis)
+    parent = pl.materialize_plane(8)
+    view = packing.sliced_view(parent, bits, extra_precision=ep)
+    oracle = pl.materialize_plane(bits, extra_precision=ep)
+    # the view aliases the parent's bytes; the oracle stores its own
+    assert view.words is parent.words and view.beta is parent.beta
+    assert view.overflow is None and view.slice_bits == bits
+    np.testing.assert_array_equal(
+        np.asarray(ops.plane_matmul(x, view)),
+        np.asarray(ops.plane_matmul(x, oracle)))
+    if pack_axis == -2:
+        np.testing.assert_array_equal(
+            np.asarray(ops.plane_matmul(x, view, use_kernel=True,
+                                        interpret=True)),
+            np.asarray(ops.plane_matmul(x, oracle, use_kernel=True,
+                                        interpret=True)))
+
+
+def test_sliced_view_expert_stack_matches_materialized():
+    """The aliased slice also serves (E, k, n) expert stacks."""
+    E, K, N = 4, 32, 24
+    w = jax.random.normal(jax.random.fold_in(KEY, 11), (E, K, N))
+    x = jax.random.normal(jax.random.fold_in(KEY, 12), (E, 3, K))
+    pl = packing.PackedLinear.from_weights(w)
+    view = packing.sliced_view(pl.materialize_plane(8), 2)
+    oracle = pl.materialize_plane(2)
+    np.testing.assert_array_equal(np.asarray(ops.plane_matmul(x, view)),
+                                  np.asarray(ops.plane_matmul(x, oracle)))
+
+
+def test_sliced_view_rejects_bad_parents():
+    w = jax.random.normal(KEY, (32, 16))
+    pl = packing.PackedLinear.from_weights(w)
+    parent = pl.materialize_plane(8)
+    with pytest.raises(ValueError, match="not in"):
+        packing.sliced_view(parent, 9)
+    with pytest.raises(ValueError, match="re-slice"):
+        packing.sliced_view(packing.sliced_view(parent, 4), 2)
+    with pytest.raises(ValueError, match="non-ep"):
+        packing.sliced_view(pl.materialize_plane(4, extra_precision=True), 2)
+    # a full-width non-ep slice is the parent itself
+    assert packing.sliced_view(parent, 8) is parent
+
+
+def test_draft_params_alias_packed_tier(dense, monkeypatch):
+    """Zero additional plane bytes: every draft plane of a packed tier
+    shares its words buffer with the resident tier."""
+    cfg, params = dense
+    eng = _engine(cfg, params, packed=True, monkeypatch=monkeypatch)
+    sched = eng.scheduler(num_slots=2, max_len=32,
+                          spec_decode=SpecDecodeConfig(draft_bits=2))
+    draft, _ = sched._spec_draft()
+    assert extra_plane_nbytes(draft, sched.params) == 0
+    # ... while the dequant fallback materializes real draft bytes
+    eng_d = _engine(cfg, params)
+    sched_d = eng_d.scheduler(num_slots=2, max_len=32,
+                              spec_decode=SpecDecodeConfig(draft_bits=2))
+    draft_d, _ = sched_d._spec_draft()
+    assert extra_plane_nbytes(draft_d, sched_d.params) > 0
+
+
+# ---------------------------------------------------------------------------
+# token-exactness vs the plain verify-tier oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("draft_bits,draft_ep,k", [(2, False, 4),
+                                                   (4, False, 3),
+                                                   (2, True, 2)])
+def test_spec_decode_token_exact_dense(dense, draft_bits, draft_ep, k):
+    cfg, params = dense
+    eng = _engine(cfg, params)
+    prompts = jax.random.randint(jax.random.fold_in(KEY, k), (3, 6), 0,
+                                 cfg.vocab_size)
+    plain = np.asarray(eng.generate(prompts, 10))
+    spec = np.asarray(eng.generate(
+        prompts, 10, spec_decode=SpecDecodeConfig(
+            draft_bits=draft_bits, draft_extra_precision=draft_ep,
+            draft_len=k)))
+    np.testing.assert_array_equal(plain, spec)
+
+
+def test_spec_decode_token_exact_packed(dense, monkeypatch):
+    """Packed path: the draft runs through the aliased slice view."""
+    cfg, params = dense
+    eng = _engine(cfg, params, packed=True, monkeypatch=monkeypatch)
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 21), (3, 6), 0,
+                                 cfg.vocab_size)
+    plain = np.asarray(eng.generate(prompts, 10))
+    for sd in (SpecDecodeConfig(draft_bits=2, draft_len=4),
+               SpecDecodeConfig(draft_bits=4, draft_len=3)):
+        np.testing.assert_array_equal(
+            plain, np.asarray(eng.generate(prompts, 10, spec_decode=sd)))
+
+
+def test_spec_decode_token_exact_moe(moe):
+    """MoE verify: the k+1-row block never drops tokens (capacity floor
+    in verify_step_slots), so spec decode stays token-exact."""
+    cfg, params = moe
+    eng = _engine(cfg, params)
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 31), (3, 6), 0,
+                                 cfg.vocab_size)
+    plain = np.asarray(eng.generate(prompts, 8))
+    spec = np.asarray(eng.generate(
+        prompts, 8, spec_decode=SpecDecodeConfig(draft_bits=2, draft_len=3)))
+    np.testing.assert_array_equal(plain, spec)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs the forced 8-device host mesh (run via "
+                           "`make test-shard` / the CI shard job)")
+def test_spec_decode_token_exact_on_mesh(dense, monkeypatch):
+    """Model-parallel 2: the draft closure reuses the PR-5 mesh
+    shardings (aliased planes are already placed) and stays
+    token-identical to the plain sharded decode."""
+    from repro.launch.mesh import make_host_mesh
+    cfg, params = dense
+    eng = _engine(cfg, params, mesh=make_host_mesh(2), packed=True,
+                  monkeypatch=monkeypatch)
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 41), (4, 6), 0,
+                                 cfg.vocab_size)
+    plain = np.asarray(eng.generate(prompts, 8))
+    spec = np.asarray(eng.generate(
+        prompts, 8, spec_decode=SpecDecodeConfig(draft_bits=2, draft_len=3)))
+    np.testing.assert_array_equal(plain, spec)
+    sched = next(iter(eng._schedulers.values()))
+    draft, _ = sched._spec_draft()
+    assert extra_plane_nbytes(draft, sched.params) == 0
+
+
+def test_spec_decode_eos_truncation(dense):
+    """A draft block crossing EOS/max_new emits only up to the stop."""
+    cfg, params = dense
+    eng = _engine(cfg, params)
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 51), (2, 6), 0,
+                                 cfg.vocab_size)
+    plain = np.asarray(eng.generate(prompts, 7))    # 7 % (k+1) != 0
+    spec = np.asarray(eng.generate(
+        prompts, 7, spec_decode=SpecDecodeConfig(draft_bits=4, draft_len=4)))
+    np.testing.assert_array_equal(plain, spec)
+
+
+# ---------------------------------------------------------------------------
+# KV rollback
+# ---------------------------------------------------------------------------
+
+
+def test_rollback_slots_unit(dense):
+    """Rows >= pos[slot] are zeroed, rows < pos[slot] untouched."""
+    cfg, _ = dense
+    state = api.init_state(cfg, 3, 10)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    rng = np.random.default_rng(0)
+    filled = jax.tree_util.tree_unflatten(treedef, [
+        jnp.asarray(rng.normal(size=leaf.shape), leaf.dtype)
+        for leaf in leaves])
+    pos = np.asarray([0, 4, 10], np.int32)
+    rolled = kv_cache.rollback_slots(
+        filled, pos, kv_cache.state_batch_axes(cfg),
+        kv_cache.state_seq_axes(cfg))
+    axes = jax.tree_util.tree_flatten(
+        api.state_axes(cfg), is_leaf=lambda x: isinstance(x, tuple))[0]
+    for leaf, old, ax in zip(jax.tree_util.tree_leaves(rolled),
+                             jax.tree_util.tree_leaves(filled), axes):
+        if "kv_seq" not in ax:
+            np.testing.assert_array_equal(np.asarray(leaf), np.asarray(old))
+            continue
+        b, s = ax.index("batch"), ax.index("kv_seq")
+        leaf = np.moveaxis(np.asarray(leaf), (b, s), (0, 1))
+        old = np.moveaxis(np.asarray(old), (b, s), (0, 1))
+        for slot, p in enumerate(pos):
+            np.testing.assert_array_equal(leaf[slot, :p], old[slot, :p])
+            assert (leaf[slot, p:] == 0).all()
+
+
+def test_partial_rejection_rewinds_kv(dense):
+    """After a spec run with partial rejections, each live slot's KV
+    matches a plain decode's KV on the committed prefix and is zero
+    past it (the draft scratch rows really were rewound)."""
+    cfg, params = dense
+    eng = _engine(cfg, params)
+    prompt = np.asarray(
+        jax.random.randint(jax.random.fold_in(KEY, 61), (6,), 0,
+                           cfg.vocab_size), np.int32)
+    sd = SpecDecodeConfig(draft_bits=2, draft_len=3)
+    spec_sched = eng.scheduler(num_slots=2, max_len=32, spec_decode=sd)
+    plain_sched = eng.scheduler(num_slots=2, max_len=32)
+    spec_sched.submit(Request(uid="s", prompt=prompt, max_new_tokens=20))
+    plain_sched.submit(Request(uid="p", prompt=prompt, max_new_tokens=20))
+    spec_sched.step()                    # admit + first spec round
+    spec_sched.step()
+    assert spec_sched.metrics.spec_rounds >= 2
+    # some rejection must have occurred for the rollback to matter; the
+    # int2 slice of a random-init checkpoint disagrees readily
+    assert spec_sched.metrics.spec_accepted < spec_sched.metrics.spec_drafted
+    pos = int(spec_sched.pos[0])
+    plain_sched.step()
+    while int(plain_sched.pos[0]) < pos:
+        plain_sched.step()
+    assert int(plain_sched.pos[0]) == pos        # token-exact => reachable
+    axes = jax.tree_util.tree_flatten(
+        api.state_axes(cfg), is_leaf=lambda x: isinstance(x, tuple))[0]
+    for sl, pl, ax in zip(jax.tree_util.tree_leaves(spec_sched.state),
+                          jax.tree_util.tree_leaves(plain_sched.state),
+                          axes):
+        if "kv_seq" not in ax:
+            continue
+        b, s = ax.index("batch"), ax.index("kv_seq")
+        sl = np.moveaxis(np.asarray(sl), (b, s), (0, 1))
+        pl = np.moveaxis(np.asarray(pl), (b, s), (0, 1))
+        # committed prefix: verify wrote its own projections, which
+        # match plain decode's to fp tolerance (block vs single-step);
+        # the spec cache has draft_len extra scratch rows, so compare
+        # only the shared prefix
+        np.testing.assert_allclose(sl[0, :pos], pl[0, :pos],
+                                   rtol=2e-4, atol=2e-4)
+        # past the committed prefix: rolled back to zero (the spec
+        # cache has draft_len extra scratch rows; all must be clear)
+        assert (sl[0, pos:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# acceptance bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_accept_lengths_oracle():
+    draft = np.asarray([[7, 1, 2, 3],     # full agreement -> m = 3
+                        [7, 1, 9, 3],     # first mismatch at j=1 -> m = 1
+                        [7, 9, 1, 2],     # immediate mismatch -> m = 0
+                        [7, 1, 2, 9]])    # late mismatch -> m = 2
+    pred = np.asarray([[1, 2, 3, 4]] * 4)
+    np.testing.assert_array_equal(accept_lengths(draft, pred), [3, 1, 0, 2])
+    # agreement AFTER a mismatch must not resurrect the prefix
+    draft2 = np.asarray([[7, 9, 2, 3]])
+    np.testing.assert_array_equal(accept_lengths(draft2, pred[:1]), [0])
+
+
+def test_spec_metrics_bookkeeping(dense):
+    """ServeMetrics invariants over a real spec run: every round emits
+    accepted + 1 bonus (modulo stop truncation), verify steps stay
+    strictly below emitted tokens, and the summary exposes the rates."""
+    cfg, params = dense
+    eng = _engine(cfg, params)
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 71), (3, 6), 0,
+                                 cfg.vocab_size)
+    eng.generate(prompts, 12,
+                 spec_decode=SpecDecodeConfig(draft_bits=4, draft_len=3))
+    m = next(iter(eng._schedulers.values())).metrics
+    s = m.summary()["spec"]
+    assert s["rounds"] == s["verify_steps"] > 0
+    assert s["drafted_tokens"] == s["rounds"] * 3
+    assert 0.0 <= s["acceptance_rate"] <= 1.0
+    # emitted = accepted + one bonus per round, minus stop truncation
+    assert s["emitted_tokens"] <= s["accepted_tokens"] + s["rounds"]
+    # all requests completed: 12 tokens each, the first from prefill
+    # and the remaining 11 from spec rounds
+    assert s["emitted_tokens"] == 3 * 11
+    assert s["verify_steps"] < s["emitted_tokens"]
+    assert s["mean_accepted_prefix_len"] == s["emitted_tokens"] / s["rounds"]
+    assert s["verify_steps_per_token"] < 1.0
+    # per-slot in-graph acceptance == the NumPy oracle, by construction
+    # of the invariants above plus token-exactness (test_spec_decode_*)
+
+
+# ---------------------------------------------------------------------------
+# one compile per (draft, verify) key pair
+# ---------------------------------------------------------------------------
+
+
+def test_one_compile_per_key_pair(dense, monkeypatch):
+    cfg, params = dense
+    eng = _engine(cfg, params, packed=True, monkeypatch=monkeypatch)
+    sd = SpecDecodeConfig(draft_bits=2, draft_len=3)
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 81), (2, 6), 0,
+                                 cfg.vocab_size)
+    eng.generate(prompts, 8, spec_decode=sd)
+    eng.generate(prompts, 8, spec_decode=sd)     # revisit: cached closures
+    sched = next(iter(eng._schedulers.values()))
+    key = ("spec", ("slice", 2), 8)
+    assert key in sched._fns
+    assert sched._fns[key]["draft"]._cache_size() == 1
+    assert sched._fns[key]["verify"]._cache_size() == 1
+    # the plain prefill closure rode along under the verify tier's key
+    assert 8 in sched._fns
+
+
+def test_spec_key_never_collides_with_mixnmatch(dense):
+    """A (2, 8) Mix'n'Match bits tuple and the (int2 draft, int8
+    verify) pair must key different closures."""
+    from repro.serve.specdecode import spec_fns_key
+    sd = SpecDecodeConfig(draft_bits=2)
+    assert spec_fns_key(sd.draft_key, 8) != (2, 8)
+    assert spec_fns_key(sd.draft_key, (2, 8)) != spec_fns_key(sd.draft_key, 8)
+    assert sd.draft_key != SpecDecodeConfig(
+        draft_bits=2, draft_extra_precision=True).draft_key
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="draft_len"):
+        SpecDecodeConfig(draft_len=0)
+    with pytest.raises(ValueError, match="uniform int"):
+        SpecDecodeConfig(draft_bits=(2, 4))
+    with pytest.raises(NotImplementedError, match="legacy"):
+        cfg = get_config("qwen3_1_7b").reduced()
+        params = api.init(KEY, cfg)
+        eng = _engine(cfg, params)
+        eng.generate(jnp.zeros((1, 4), jnp.int32), 2, extras={"x": 1},
+                     spec_decode=SpecDecodeConfig())

@@ -9,12 +9,16 @@ Two guards, zero dependencies:
 2. Serve-flag coverage: every `--flag` registered by
    src/repro/launch/serve.py's argparse must appear in docs/serving.md,
    so the operator guide cannot silently drift from the driver.
+3. BENCH section coverage: every top-level SECTION (dict-valued key) of
+   the committed BENCH_serve.json must appear in docs/serving.md's
+   field guide, so a new benchmark section cannot land undocumented.
 
 Exits non-zero listing every failure (not just the first).
 """
 
 from __future__ import annotations
 
+import json
 import pathlib
 import re
 import sys
@@ -61,8 +65,24 @@ def check_serve_flags() -> list[str]:
             for f in flags if f not in doc]
 
 
+def check_bench_sections() -> list[str]:
+    bench = ROOT / "BENCH_serve.json"
+    serving_md = ROOT / "docs" / "serving.md"
+    if not bench.exists() or not serving_md.exists():
+        return []                       # nothing committed to guard yet
+    try:
+        report = json.loads(bench.read_text())
+    except json.JSONDecodeError as e:
+        return [f"BENCH_serve.json: not valid JSON ({e})"]
+    doc = serving_md.read_text()
+    return [f"docs/serving.md: undocumented BENCH_serve.json section "
+            f"`{key}`"
+            for key, val in report.items()
+            if isinstance(val, dict) and f"`{key}`" not in doc]
+
+
 def main() -> int:
-    errors = check_links() + check_serve_flags()
+    errors = check_links() + check_serve_flags() + check_bench_sections()
     for e in errors:
         print(f"docs check FAILED: {e}")
     if not errors:
