@@ -65,7 +65,7 @@ from repro.configs import get_config
 from repro.models import api
 from repro.serve import (Engine, Request, ServeConfig, ServeMetrics,
                          SpecDecodeConfig)
-from repro.serve.scheduler import poisson_trace
+from repro.serve.scheduler import poisson_trace, shared_prefix_trace
 from repro.serve.specdecode import extra_plane_nbytes
 
 
@@ -339,6 +339,126 @@ def run_tp_ab(args) -> dict:
     return out
 
 
+def _warm_and_replay(engine, args, trace):
+    """Fixed-tier scheduler over one paged engine: warm the closures on
+    every admission row bucket, then replay `trace` timed."""
+    sched = engine.scheduler()
+    for rows in _row_buckets(args.num_slots):
+        for j in range(min(rows, args.num_slots)):
+            sched.submit(Request(uid=f"_warm_{rows}_{j}",
+                                 prompt=trace[0][1].prompt,
+                                 max_new_tokens=2))
+        sched.run_until_idle()
+    if engine.serve_cfg.prefix_cache:
+        # the hit path compiles per (suffix bucket, row bucket) plus the
+        # COW copy buckets -- replay the trace once untimed so the timed
+        # pass (and its hit-vs-cold TTFT split) measures serving, not
+        # tracing
+        sched.reset()
+        sched.run_trace(trace)
+    sched.reset()
+    t0 = time.perf_counter()
+    results = sched.run_trace(trace)
+    wall = time.perf_counter() - t0
+    summary = sched.metrics.summary()
+    summary["wall_s"] = wall
+    return results, summary
+
+
+def run_kv_ab(params, cfg, args) -> dict:
+    """`kv_ab`: the paged Matryoshka KV cache as reported numbers.
+
+    Three sub-studies on fixed-int8 weights (so only the KV layout
+    varies):
+
+      * per-bits replays of the SAME Poisson trace over dense KV, fp
+        pages, and int8 pages attended at the 8/4/2-bit Matryoshka
+        slices -- per-token KV bytes must form the staircase
+        int8 > int4 > int2 (`kv_bytes_strictly_decreasing`), and the
+        fp-paged replay must be token-identical to dense
+        (`fp_token_exact`, the refactor's exactness gate);
+      * a shared-system-prompt trace (every prompt = one common prefix
+        + its own suffix) replayed with the radix prefix cache ON vs
+        OFF: hit rate, shared-token rate, and the hit-vs-cold TTFT
+        split -- hits prefill only their suffix, so mean hit TTFT must
+        sit below mean cold TTFT (`ttft_hit_below_cold`).
+    """
+    base = dict(bits=8, max_len=args.prompt_len + args.gen_tokens,
+                num_slots=args.num_slots, page_size=args.page_size)
+    trace = poisson_trace(cfg, requests=args.requests,
+                          prompt_len=args.prompt_len,
+                          gen_tokens=args.gen_tokens,
+                          rate=args.arrival_rate, seed=args.seed)
+    per_bits = {}
+    dense_results = None
+    for kv_bits in ("dense", "fp", 8, 4, 2):
+        engine = Engine(params, cfg, ServeConfig(
+            **base, kv_bits=None if kv_bits == "dense" else kv_bits))
+        results, summary = _warm_and_replay(engine, args, trace)
+        assert len(results) == args.requests
+        if kv_bits == "dense":
+            dense_results = results
+        per_bits[str(kv_bits)] = {
+            "throughput_tok_s": summary["throughput_tok_s"],
+            "mean_ttft_s": summary["mean_ttft_s"],
+            "wall_s": summary["wall_s"],
+            "kv": summary["kv"],
+            "token_exact_vs_dense": all(
+                np.array_equal(results[uid], dense_results[uid])
+                for uid in dense_results),
+        }
+    staircase = [per_bits[b]["kv"]["bytes_per_token"] for b in ("8", "4", "2")]
+
+    # prefix A/B: a chatbot-style trace -- a long shared system prompt
+    # (12x the per-request suffix, like real system prompts) so the
+    # suffix-only hit prefill saving dominates the page-gather overhead
+    # even at CPU-reduced scale, incl. for hits admitted in a batched
+    # multi-row group (whose whole group prefill counts against each
+    # member's TTFT)
+    prefix_len = max(args.page_size * 2, args.prompt_len * 12)
+    ptrace = shared_prefix_trace(cfg, requests=args.requests,
+                                 prefix_len=prefix_len,
+                                 suffix_len=args.prompt_len,
+                                 gen_tokens=args.gen_tokens,
+                                 rate=args.arrival_rate, seed=args.seed)
+    prefix_ab = {}
+    for on in (False, True):
+        engine = Engine(params, cfg, ServeConfig(
+            bits=8, max_len=prefix_len + args.prompt_len + args.gen_tokens,
+            num_slots=args.num_slots, page_size=args.page_size,
+            kv_bits="fp", prefix_cache=on))
+        results, summary = _warm_and_replay(engine, args, ptrace)
+        assert len(results) == args.requests
+        kv = summary["kv"]
+        prefix_ab["on" if on else "off"] = {
+            "throughput_tok_s": summary["throughput_tok_s"],
+            "mean_ttft_s": summary["mean_ttft_s"],
+            "prefix_hit_rate": kv["prefix_hit_rate"],
+            "shared_token_rate": kv["shared_token_rate"],
+            "mean_ttft_hit_s": kv["mean_ttft_hit_s"],
+            "mean_ttft_cold_s": kv["mean_ttft_cold_s"],
+            "mean_prefill_ttft_hit_s": kv["mean_prefill_ttft_hit_s"],
+            "mean_prefill_ttft_cold_s": kv["mean_prefill_ttft_cold_s"],
+            "kv": kv,
+        }
+    on = prefix_ab["on"]
+    return {
+        "weights": "int8 (dequantized fixed tier)",
+        "per_bits": per_bits,
+        "kv_bytes_per_token": {b: per_bits[b]["kv"]["bytes_per_token"]
+                               for b in ("fp", "8", "4", "2")},
+        "kv_bytes_strictly_decreasing": all(
+            a > b for a, b in zip(staircase, staircase[1:])),
+        "fp_token_exact": per_bits["fp"]["token_exact_vs_dense"],
+        "prefix_ab": prefix_ab,
+        "prefix_hit_rate": on["prefix_hit_rate"],
+        # prefill (admission -> first token) latency isolates the
+        # suffix-only prefill saving from queueing delay
+        "ttft_hit_below_cold": (on["mean_prefill_ttft_hit_s"]
+                                < on["mean_prefill_ttft_cold_s"]),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_1_7b")
@@ -361,6 +481,9 @@ def main(argv=None):
     ap.add_argument("--skip-packed-ab", action="store_true",
                     help="skip the packed-vs-dequant elastic A/B replay "
                          "(and the per-tier packed_ab_ep replays)")
+    ap.add_argument("--skip-kv-ab", action="store_true",
+                    help="skip the paged-KV A/B section (per-bits KV "
+                         "replays + the prefix-cache on/off replay)")
     ap.add_argument("--moe-arch", default="granite_moe_1b_a400m",
                     help="MoE config for the second packed A/B "
                          "('none' skips it)")
@@ -475,6 +598,25 @@ def main(argv=None):
                   f"token_exact={info['token_exact']} "
                   f"extra_plane_bytes={info['extra_plane_nbytes']}")
 
+    kv_ab = None
+    if not args.skip_kv_ab:
+        print("== paged-KV A/B (per-bits replays + prefix cache) ==")
+        kv_ab = run_kv_ab(params, cfg, args)
+        for b, info in kv_ab["per_bits"].items():
+            kvs = info["kv"]
+            print(f"  kv_bits {b:5s} bytes/token="
+                  f"{kvs.get('bytes_per_token', 0):6d} "
+                  f"tok/s={info['throughput_tok_s']:.1f} "
+                  f"exact_vs_dense={info['token_exact_vs_dense']}")
+        print(f"  KV bytes staircase strictly decreasing: "
+              f"{kv_ab['kv_bytes_strictly_decreasing']}; "
+              f"fp token-exact: {kv_ab['fp_token_exact']}")
+        on, off = kv_ab["prefix_ab"]["on"], kv_ab["prefix_ab"]["off"]
+        print(f"  prefix cache: hit_rate={on['prefix_hit_rate']:.2f} "
+              f"ttft_hit={on['mean_ttft_hit_s']:.3f}s "
+              f"ttft_cold={on['mean_ttft_cold_s']:.3f}s "
+              f"(off: ttft={off['mean_ttft_s']:.3f}s)")
+
     packed_ab_tp = None
     if not args.skip_packed_ab and args.tp_model_parallel:
         print(f"== TP-sharded per-tier packed replays "
@@ -507,6 +649,7 @@ def main(argv=None):
         "packed_ab_moe": packed_ab_moe,
         "packed_ab_ep": packed_ab_ep,
         "specdecode_ab": specdecode_ab,
+        "kv_ab": kv_ab,
         "packed_ab_tp": packed_ab_tp,
         # headline numbers (the acceptance-criterion fields)
         "throughput_tok_s": elastic["throughput_tok_s"],

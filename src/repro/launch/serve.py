@@ -66,10 +66,16 @@ def build_engine(args, cfg):
         print(f"mix'n'match pyramid assignment ({eff:.2f} eff bits): {bits}")
     else:
         bits = args.bits
+    kv_bits = None
+    if args.kv_bits and args.kv_bits != "dense":
+        kv_bits = args.kv_bits if args.kv_bits in ("fp", "auto") \
+            else int(args.kv_bits)
     return Engine(params, cfg, ServeConfig(
         bits=bits, max_len=args.prompt_len + args.gen_tokens,
         extra_precision=args.extra_precision, use_packed=args.packed,
-        num_slots=args.num_slots, page_size=args.page_size), mesh=mesh)
+        num_slots=args.num_slots, page_size=args.page_size,
+        kv_bits=kv_bits, kv_page_size=args.kv_page_size or None,
+        prefix_cache=args.prefix_cache), mesh=mesh)
 
 
 def build_trace(args, cfg):
@@ -116,6 +122,27 @@ def main(argv=None):
     ap.add_argument("--num-slots", type=int, default=4,
                     help="concurrent decode slots (continuous batching)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-bits", default="dense",
+                    choices=["dense", "fp", "8", "4", "2", "auto"],
+                    help="paged KV cache: 'dense' (default) keeps the "
+                         "per-slot slot-array state; 'fp' pages the cache "
+                         "at model dtype (token-identical to dense); 8/4/2 "
+                         "store int8 Matryoshka pages attended at that "
+                         "sliced width; 'auto' ties the KV read width to "
+                         "the served weight tier (int2/int4 weight tiers "
+                         "read int4 KV, int8 reads int8)")
+    ap.add_argument("--kv-page-size", type=int, default=0,
+                    help="tokens per KV page in paged mode (defaults to "
+                         "--page-size)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prompt-prefix reuse over the paged KV "
+                         "store: admissions sharing a previously-served "
+                         "prompt prefix attach its pages read-only "
+                         "(refcounted, copy-on-write on a partial tail) "
+                         "and prefill ONLY their suffix -- the summary's "
+                         "'kv' section reports hit rate and hit-vs-cold "
+                         "TTFT. Implies the paged cache (--kv-bits fp "
+                         "when unset)")
     ap.add_argument("--elastic", action="store_true",
                     help="load-adaptive precision tiers (int8 -> int4 -> "
                          "Mix'n'Match -> int2+ep -> int2)")

@@ -50,6 +50,30 @@ def state_axes(cfg):
     return lm.decode_state_axes(cfg)
 
 
+def init_paged_state(cfg, num_pages: int, page_size: int, *, kv_bits=None):
+    """Paged decode state (global page store + per-slot page table
+    addressing; see lm.init_paged_state). Attention-cache families only."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged KV state for encdec")
+    return lm.init_paged_state(cfg, num_pages, page_size, kv_bits=kv_bits)
+
+
+def paged_state_axes(cfg, kv_bits=None):
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged KV state for encdec")
+    return lm.paged_state_axes(cfg, kv_bits=kv_bits)
+
+
+def prefill_paged(params, batch, cfg, state, ptab, *, bits=None, last_pos,
+                  start=None, kv_bits=None):
+    """Prompt processing into the paged cache -- see lm.prefill_paged."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged prefill for encdec")
+    return lm.prefill_paged(params, batch["tokens"], state, ptab, cfg,
+                            bits=bits, last_pos=last_pos, start=start,
+                            kv_bits=kv_bits)
+
+
 def prefill(params, batch, cfg, *, bits=None, max_len=None, last_pos=None):
     """Prompt processing -> (last-position logits, decode state).
 
@@ -76,7 +100,8 @@ def decode_step(params, state, token, pos, cfg, *, bits=None):
     return lm.decode_step(params, state, token, pos, cfg, bits=bits)
 
 
-def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
+def decode_step_slots(params, state, token, pos, cfg, *, bits=None,
+                      ptab=None, kv_bits=None):
     """Slot-array decode step: pos is (B,) int32, one position per slot.
 
     The continuous-batching scheduler's inner step -- see
@@ -84,10 +109,12 @@ def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
     """
     if cfg.family == "encdec":
         raise NotImplementedError("slot-wise decode for encdec")
-    return lm.decode_step_slots(params, state, token, pos, cfg, bits=bits)
+    return lm.decode_step_slots(params, state, token, pos, cfg, bits=bits,
+                                ptab=ptab, kv_bits=kv_bits)
 
 
-def verify_step_slots(params, state, tokens, pos, cfg, *, bits=None):
+def verify_step_slots(params, state, tokens, pos, cfg, *, bits=None,
+                      ptab=None, kv_bits=None):
     """Multi-token slot scoring: tokens is (B, T), pos (B,) the cache
     position of each slot's first token.
 
@@ -96,7 +123,8 @@ def verify_step_slots(params, state, tokens, pos, cfg, *, bits=None):
     """
     if cfg.family == "encdec":
         raise NotImplementedError("slot-wise verify for encdec")
-    return lm.verify_step_slots(params, state, tokens, pos, cfg, bits=bits)
+    return lm.verify_step_slots(params, state, tokens, pos, cfg, bits=bits,
+                                ptab=ptab, kv_bits=kv_bits)
 
 
 def param_count(params) -> int:

@@ -15,9 +15,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
+from repro.core import quant
 from repro.core.quant import QuantConfig
 
 NEG_INF = -1e30
+
+# Paged-KV storage precision: pages always hold 8-bit parent codes; the
+# attend path slices an r-bit MSB view on the fly (Matryoshka nesting).
+KV_PARENT_BITS = 8
 
 
 def init_attention(key, cfg, qcfg: QuantConfig, dtype=jnp.float32):
@@ -152,6 +157,43 @@ def cache_axes(layers: bool = True):
     return {"k": base, "v": base}
 
 
+def _write_seq_slots(cache, k_new, v_new, pos):
+    """Scatter per-slot K/V rows into a dense slot cache.
+
+    cache: {"k","v"} (B, max_len, kh, hd); k_new/v_new: (B, T, kh, hd);
+    pos: (B,) int32 first write index per slot. Row b gets its T new
+    rows at pos[b]..pos[b]+T-1 in one block update (T=1 is the decode
+    step, T>1 the spec-decode verify block).
+    """
+
+    def upd(c, n, p_):  # c: (max_len, kh, hd); n: (T, kh, hd)
+        return jax.lax.dynamic_update_slice_in_dim(c, n, p_, axis=0)
+
+    return {"k": jax.vmap(upd)(cache["k"], k_new.astype(cache["k"].dtype), pos),
+            "v": jax.vmap(upd)(cache["v"], v_new.astype(cache["v"].dtype), pos)}
+
+
+def _attend_slots(q, k_cache, v_cache, qpos, h, kh, hd):
+    """Grouped-einsum attend of per-slot queries against a full cache.
+
+    q: (B, T, h, hd); k_cache/v_cache: (B, Sk, kh, hd); qpos: (B, T)
+    per-query positions -- key row ki is visible to query j iff
+    ki <= qpos[b, j]. Returns fp32 (B, T, h*hd).
+    """
+    B, T = q.shape[:2]
+    G = h // kh
+    qg = q.reshape(B, T, kh, G, hd)
+    scale = hd**-0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(k_cache.shape[1])[None, None, :] <= qpos[:, :, None]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, T, h * hd)
+
+
 def decode_attention_slots(
     p, x, cache, pos, cfg, *, bits, qcfg: QuantConfig,
 ):
@@ -169,25 +211,10 @@ def decode_attention_slots(
     if cfg.m_rope:
         positions = jnp.broadcast_to(pos[:, None, None], (B, 1, 3))
     q, k_new, v_new = _project_qkv(p, x, cfg, bits=bits, qcfg=qcfg, positions=positions)
-
-    def upd(c, n, p_):  # c: (max_len, kh, hd); n: (1, kh, hd)
-        return jax.lax.dynamic_update_slice_in_dim(c, n, p_, axis=0)
-
-    k_cache = jax.vmap(upd)(cache["k"], k_new.astype(cache["k"].dtype), pos)
-    v_cache = jax.vmap(upd)(cache["v"], v_new.astype(cache["v"].dtype), pos)
-    G = h // kh
-    qg = q.reshape(B, 1, kh, G, hd)
-    scale = hd**-0.5
-    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(q.dtype),
-                        preferred_element_type=jnp.float32) * scale
-    mask = (jnp.arange(k_cache.shape[1])[None, :] <= pos[:, None])
-    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
-    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache,
-                   preferred_element_type=jnp.float32)
-    o = o.reshape(B, 1, h * hd)
+    cache = _write_seq_slots(cache, k_new, v_new, pos)
+    o = _attend_slots(q, cache["k"], cache["v"], pos[:, None], h, kh, hd)
     out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg, kind="attn")
-    return out, {"k": k_cache, "v": v_cache}
+    return out, cache
 
 
 def verify_attention_slots(
@@ -212,26 +239,11 @@ def verify_attention_slots(
     if cfg.m_rope:
         positions = jnp.broadcast_to(positions[:, :, None], (B, T, 3))
     q, k_new, v_new = _project_qkv(p, x, cfg, bits=bits, qcfg=qcfg, positions=positions)
-
-    def upd(c, n, p_):  # c: (max_len, kh, hd); n: (T, kh, hd)
-        return jax.lax.dynamic_update_slice_in_dim(c, n, p_, axis=0)
-
-    k_cache = jax.vmap(upd)(cache["k"], k_new.astype(cache["k"].dtype), pos)
-    v_cache = jax.vmap(upd)(cache["v"], v_new.astype(cache["v"].dtype), pos)
-    G = h // kh
-    qg = q.reshape(B, T, kh, G, hd)
-    scale = hd**-0.5
-    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(q.dtype),
-                        preferred_element_type=jnp.float32) * scale
+    cache = _write_seq_slots(cache, k_new, v_new, pos)
     qpos = positions[..., 0] if cfg.m_rope else positions
-    mask = jnp.arange(k_cache.shape[1])[None, None, :] <= qpos[:, :, None]
-    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
-    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache,
-                   preferred_element_type=jnp.float32)
-    o = o.reshape(B, T, h * hd)
+    o = _attend_slots(q, cache["k"], cache["v"], qpos, h, kh, hd)
     out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg, kind="attn")
-    return out, {"k": k_cache, "v": v_cache}
+    return out, cache
 
 
 def decode_attention(
@@ -269,3 +281,196 @@ def decode_attention(
     o = o.reshape(B, 1, h * hd)
     out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg, kind="attn")
     return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (Matryoshka int8 pages, sliced low-bit attend views)
+# ---------------------------------------------------------------------------
+#
+# The paged layout replaces the dense per-slot (B, max_len, kh, hd)
+# cache with a GLOBAL page store (num_pages, page_size, kh, hd) plus a
+# per-slot page table (B, pages_per_slot) of physical page ids. Page id
+# == num_pages is the "hole" sentinel: scatters drop it (mode="drop"),
+# gathers fill zeros (mode="fill"), so unreserved table entries are
+# harmless at both ends.
+#
+# Quantized mode stores 8-bit MinMax codes per (token row, kv head)
+# with fp32 scale alpha and offset beta = alpha * z alongside each
+# page. An r-bit attend view (r in {8, 4, 2}) is an MSB slice of the
+# SAME codes -- `core.quant.slice_bits` on the parent grid -- so the
+# row dequantizes as  x_hat = alpha * S(q8, r) - beta  with no second
+# copy of the cache and an r-independent offset (the Matryoshka
+# property, applied to activations).
+
+
+def init_paged_cache(cfg, num_pages: int, page_size: int, *,
+                     layers: int | None = None, kv_bits=None,
+                     dtype=jnp.bfloat16):
+    """Global page store. fp mode (kv_bits=None): {"kp","vp"} pages in
+    `dtype`. Quantized mode: uint8 code pages plus per-(row, head) fp32
+    scale/offset planes {"ks","kb","vs","vb"}."""
+    kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    lead = () if layers is None else (layers,)
+    shape = lead + (num_pages, page_size, kh, hd)
+    if kv_bits is None:
+        return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+    sshape = lead + (num_pages, page_size, kh)
+    return {"kp": jnp.zeros(shape, jnp.uint8),
+            "vp": jnp.zeros(shape, jnp.uint8),
+            "ks": jnp.zeros(sshape, jnp.float32),
+            "kb": jnp.zeros(sshape, jnp.float32),
+            "vs": jnp.zeros(sshape, jnp.float32),
+            "vb": jnp.zeros(sshape, jnp.float32)}
+
+
+def paged_cache_axes(quantized: bool, layers: bool = True):
+    base = ("page", "page_row", "kv_heads_cache", "head_dim_cache")
+    sc = ("page", "page_row", "kv_heads_cache")
+    if layers:
+        base = ("layer",) + base
+        sc = ("layer",) + sc
+    ax = {"kp": base, "vp": base}
+    if quantized:
+        ax.update({"ks": sc, "kb": sc, "vs": sc, "vb": sc})
+    return ax
+
+
+def quant_kv_rows(x):
+    """Asymmetric 8-bit MinMax codes per (token row, kv head) over hd.
+
+    Returns (codes uint8, alpha, beta) with alpha/beta shaped like x
+    minus the trailing head_dim axis; beta = alpha * z so the r-bit
+    dequant offset is independent of r."""
+    q, alpha, z = quant.quantize(x.astype(jnp.float32), KV_PARENT_BITS,
+                                 axis=-1)
+    return q.astype(jnp.uint8), alpha[..., 0], (alpha * z)[..., 0]
+
+
+def dequant_kv_rows(codes, alpha, beta, bits: int, dtype):
+    """Dequantize the r-bit MSB view of stored 8-bit codes.
+
+    `quant.slice_bits` re-scales the sliced codes to the parent grid,
+    so one fused multiply-add recovers the row at any r."""
+    grid = quant.slice_bits(codes.astype(jnp.int32), KV_PARENT_BITS, bits)
+    return (alpha[..., None] * grid.astype(jnp.float32)
+            - beta[..., None]).astype(dtype)
+
+
+def _page_coords(ptab, positions, page_size: int):
+    """(page id, row-in-page) of token `positions` under page-table rows.
+
+    ptab: (B, pages_per_slot) int32 physical page ids (num_pages ==
+    hole); positions: (B, T) int32 token indices. Unreserved positions
+    resolve to the hole sentinel."""
+    pids = jnp.take_along_axis(ptab, positions // page_size, axis=1)
+    rows = positions % page_size
+    return pids, rows
+
+
+def write_pages(cache_l, k_new, v_new, pids, rows):
+    """Scatter (B, T) new K/V rows into one layer's page store.
+
+    cache_l leaves: kp/vp (P, page_size, kh, hd) (+ scale planes in
+    quantized mode); k_new/v_new: (B, T, kh, hd); pids/rows: (B, T).
+    Hole page ids (== P) are dropped. Quantized mode quantizes each new
+    row on the spot -- rows are written exactly once, so no existing
+    code is ever re-quantized."""
+    if "ks" not in cache_l:
+        return {
+            "kp": cache_l["kp"].at[pids, rows].set(
+                k_new.astype(cache_l["kp"].dtype), mode="drop"),
+            "vp": cache_l["vp"].at[pids, rows].set(
+                v_new.astype(cache_l["vp"].dtype), mode="drop"),
+        }
+    kq, ka, kb = quant_kv_rows(k_new)
+    vq, va, vb = quant_kv_rows(v_new)
+    return {
+        "kp": cache_l["kp"].at[pids, rows].set(kq, mode="drop"),
+        "vp": cache_l["vp"].at[pids, rows].set(vq, mode="drop"),
+        "ks": cache_l["ks"].at[pids, rows].set(ka, mode="drop"),
+        "kb": cache_l["kb"].at[pids, rows].set(kb, mode="drop"),
+        "vs": cache_l["vs"].at[pids, rows].set(va, mode="drop"),
+        "vb": cache_l["vb"].at[pids, rows].set(vb, mode="drop"),
+    }
+
+
+def gather_slot_view(cache_l, ptab, *, kv_bits=None, dtype=jnp.bfloat16):
+    """Per-slot (B, pages_per_slot * page_size, kh, hd) K/V read view.
+
+    Gathers each slot's pages from the global store (hole entries fill
+    zeros) and, in quantized mode, dequantizes the r-bit MSB view at
+    `kv_bits` in the same fused expression the attend consumes."""
+
+    def gather(a):
+        g = jnp.take(a, ptab, axis=0, mode="fill", fill_value=0)
+        return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+    if "ks" not in cache_l:
+        return gather(cache_l["kp"]), gather(cache_l["vp"])
+    bits = KV_PARENT_BITS if kv_bits is None else kv_bits
+    k = dequant_kv_rows(gather(cache_l["kp"]), gather(cache_l["ks"]),
+                        gather(cache_l["kb"]), bits, dtype)
+    v = dequant_kv_rows(gather(cache_l["vp"]), gather(cache_l["vs"]),
+                        gather(cache_l["vb"]), bits, dtype)
+    return k, v
+
+
+def paged_decode_attention_slots(
+    p, x, cache_l, ptab, pos, cfg, *, bits, qcfg: QuantConfig, kv_bits=None,
+):
+    """`decode_attention_slots` over one layer's paged cache.
+
+    x: (B, 1, d); ptab: (B, pages_per_slot) page table rows of the
+    slots being stepped; pos: (B,) per-slot write index. Writes the new
+    row through the page table, then attends against the gathered slot
+    view -- with pages_per_slot * page_size == cache_len the reduction
+    shape (and, in fp mode, every elementwise value) matches the dense
+    slot path exactly."""
+    B = x.shape[0]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pos = pos.astype(jnp.int32)
+    positions = pos[:, None]
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(pos[:, None, None], (B, 1, 3))
+    q, k_new, v_new = _project_qkv(p, x, cfg, bits=bits, qcfg=qcfg,
+                                   positions=positions)
+    page_size = cache_l["kp"].shape[1]
+    pids, rows = _page_coords(ptab, pos[:, None], page_size)
+    cache_l = write_pages(cache_l, k_new, v_new, pids, rows)
+    k_view, v_view = gather_slot_view(cache_l, ptab, kv_bits=kv_bits,
+                                      dtype=x.dtype)
+    o = _attend_slots(q, k_view, v_view, pos[:, None], h, kh, hd)
+    out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg,
+                     kind="attn")
+    return out, cache_l
+
+
+def paged_verify_attention_slots(
+    p, x, cache_l, ptab, pos, cfg, *, bits, qcfg: QuantConfig, kv_bits=None,
+):
+    """`verify_attention_slots` over one layer's paged cache.
+
+    x: (B, T, d); slot b writes rows pos[b]..pos[b]+T-1 through its
+    page table and query j attends to ki <= pos[b] + j. Doubles as the
+    prefix-hit prefill body (T = suffix block, pos = shared prefix
+    length). Stale draft rows past an accepted prefix need no rollback
+    scrub: the ki <= pos mask hides them until the next write lands on
+    the same (page, row)."""
+    B, T = x.shape[:2]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pos = pos.astype(jnp.int32)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    qpos = positions
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(positions[:, :, None], (B, T, 3))
+    q, k_new, v_new = _project_qkv(p, x, cfg, bits=bits, qcfg=qcfg,
+                                   positions=positions)
+    page_size = cache_l["kp"].shape[1]
+    pids, rows = _page_coords(ptab, qpos, page_size)
+    cache_l = write_pages(cache_l, k_new, v_new, pids, rows)
+    k_view, v_view = gather_slot_view(cache_l, ptab, kv_bits=kv_bits,
+                                      dtype=x.dtype)
+    o = _attend_slots(q, k_view, v_view, qpos, h, kh, hd)
+    out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg,
+                     kind="attn")
+    return out, cache_l

@@ -317,6 +317,76 @@ def decode_state_axes(cfg):
     raise ValueError(cfg.family)
 
 
+def init_paged_state(cfg, num_pages: int, page_size: int, *, kv_bits=None):
+    """Paged decode state: a global page store shared by all slots.
+
+    kv_bits=None keeps full-precision pages (token-identical to the
+    dense slot path); an int turns on int8 code pages whose attend view
+    is the kv_bits-bit Matryoshka MSB slice. Attention families only --
+    the per-slot addressing lives in the scheduler's page table.
+    """
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise NotImplementedError(
+            f"paged KV state requires an attention cache; family "
+            f"{cfg.family!r} is served via the dense path")
+    return {"kv": attn.init_paged_cache(cfg, num_pages, page_size,
+                                        layers=cfg.num_layers,
+                                        kv_bits=kv_bits, dtype=_dtype(cfg))}
+
+
+def paged_state_axes(cfg, kv_bits=None):
+    return {"kv": attn.paged_cache_axes(kv_bits is not None, layers=True)}
+
+
+def prefill_paged(params, tokens, state, ptab, cfg, *, bits=None, last_pos,
+                  start=None, kv_bits=None):
+    """Prompt processing into the PAGED cache -> (first logits, state).
+
+    Cold admission (start=None) runs the EXACT dense `prefill` graph --
+    causal attention over the compact (B, S) prompt block, logits
+    gathered at last_pos - 1 -- and then scatters the projected K/V
+    rows through each slot's page table, so first-token logits are
+    bit-identical to the dense slot path. Prefix-hit admission (start:
+    (B,) shared prefix lengths) embeds only the suffix block: rows are
+    written at start + j and each query attends causally against the
+    gathered page view (shared pages included), which is the verify
+    kernel reused as a suffix prefill.
+    """
+    B, S = tokens.shape
+    kv = state["kv"]
+    page_size = kv["kp"].shape[2]
+    if start is None:
+        logits, slot_state = prefill(params, tokens, cfg, bits=bits,
+                                     max_len=S, last_pos=last_pos)
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+        pids = jnp.take_along_axis(ptab, positions // page_size, axis=1)
+        rows = positions % page_size
+        k_new, v_new = slot_state["kv"]["k"], slot_state["kv"]["v"]
+        if "ks" not in kv:
+            kv = {"kp": kv["kp"].at[:, pids, rows].set(
+                      k_new.astype(kv["kp"].dtype), mode="drop"),
+                  "vp": kv["vp"].at[:, pids, rows].set(
+                      v_new.astype(kv["vp"].dtype), mode="drop")}
+        else:
+            kq, ka, kb = attn.quant_kv_rows(k_new)
+            vq, va, vb = attn.quant_kv_rows(v_new)
+            kv = {"kp": kv["kp"].at[:, pids, rows].set(kq, mode="drop"),
+                  "vp": kv["vp"].at[:, pids, rows].set(vq, mode="drop"),
+                  "ks": kv["ks"].at[:, pids, rows].set(ka, mode="drop"),
+                  "kb": kv["kb"].at[:, pids, rows].set(kb, mode="drop"),
+                  "vs": kv["vs"].at[:, pids, rows].set(va, mode="drop"),
+                  "vb": kv["vb"].at[:, pids, rows].set(vb, mode="drop")}
+        return logits, {"kv": kv}
+    # prefix hit: suffix-only verify-style prefill at start offsets
+    logits_all, state = verify_step_slots(params, state, tokens, start, cfg,
+                                          bits=bits, ptab=ptab,
+                                          kv_bits=kv_bits)
+    idx = jnp.asarray(last_pos, jnp.int32) - 1
+    logits = jnp.take_along_axis(logits_all, idx[:, None, None], axis=1)
+    return logits, state
+
+
 def decode_step(params, state, token, pos, cfg, *, bits=None):
     """One decoding step. token: (B, 1) int32; pos: scalar int32 index.
 
@@ -410,7 +480,8 @@ def decode_step(params, state, token, pos, cfg, *, bits=None):
     raise ValueError(cfg.family)
 
 
-def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
+def decode_step_slots(params, state, token, pos, cfg, *, bits=None,
+                      ptab=None, kv_bits=None):
     """One decode step over a SLOT ARRAY with per-slot positions.
 
     token: (B, 1) int32; pos: (B,) int32, each slot's current write
@@ -419,6 +490,12 @@ def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
     array (static shapes, one compile), rows belong to different requests
     at different decode depths, and inactive slots just compute garbage
     that the scheduler masks at the bookkeeping level.
+
+    With `ptab` (a (B, pages_per_slot) page table) the state is the
+    PAGED cache from `init_paged_state`: each layer writes/attends
+    through the page table instead of a dense per-slot array, and
+    `kv_bits` picks the r-bit Matryoshka attend view of the stored int8
+    codes (None = full precision pages).
 
     Supported for attention-cache families (dense / vlm / moe); the
     recurrent families keep the shared-position `decode_step` path.
@@ -437,9 +514,14 @@ def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
     def body(x, xs):
         lp, cache_l, b = xs
         b = None if bits_l is None else b
-        a, new_cache = attn.decode_attention_slots(
-            lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, pos, cfg,
-            bits=b, qcfg=qcfg)
+        if ptab is None:
+            a, new_cache = attn.decode_attention_slots(
+                lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, pos, cfg,
+                bits=b, qcfg=qcfg)
+        else:
+            a, new_cache = attn.paged_decode_attention_slots(
+                lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, ptab, pos,
+                cfg, bits=b, qcfg=qcfg, kv_bits=kv_bits)
         x = x + a
         if is_moe:
             y, _ = ffn_mod.apply_moe(lp["moe"], cm.rmsnorm(lp["norm2"], x),
@@ -456,7 +538,8 @@ def decode_step_slots(params, state, token, pos, cfg, *, bits=None):
     return _logits(params, cfg, h), {"kv": new_kv}
 
 
-def verify_step_slots(params, state, tokens, pos, cfg, *, bits=None):
+def verify_step_slots(params, state, tokens, pos, cfg, *, bits=None,
+                      ptab=None, kv_bits=None):
     """Score T tokens per slot in ONE step (spec-decode verification).
 
     tokens: (B, T) int32 -- slot b's draft block [d_0 .. d_{T-1}]; pos:
@@ -493,9 +576,14 @@ def verify_step_slots(params, state, tokens, pos, cfg, *, bits=None):
     def body(x, xs):
         lp, cache_l, b = xs
         b = None if bits_l is None else b
-        a, new_cache = attn.verify_attention_slots(
-            lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, pos, cfg,
-            bits=b, qcfg=qcfg)
+        if ptab is None:
+            a, new_cache = attn.verify_attention_slots(
+                lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, pos, cfg,
+                bits=b, qcfg=qcfg)
+        else:
+            a, new_cache = attn.paged_verify_attention_slots(
+                lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, ptab, pos,
+                cfg, bits=b, qcfg=qcfg, kv_bits=kv_bits)
         x = x + a
         if is_moe:
             y, _ = ffn_mod.apply_moe(lp["moe"], cm.rmsnorm(lp["norm2"], x),

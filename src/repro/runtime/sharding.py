@@ -107,6 +107,14 @@ SERVE_STATE_RULES: dict[str, list[tuple[str, ...]]] = {
     # `tree_shardings(units=)`).
     "head_dim_cache": [],
     "heads_cache": [("model",)],
+    # paged KV store: the page dims stay UNSHARDED -- pages are
+    # addressed by a host-side page table whose ids must resolve on
+    # every shard, so only the per-head dim splits over 'model'
+    # (kv_heads_cache above); the global page pool is the paged twin of
+    # the batch axis and 'data' request-parallelism instead rides the
+    # page-table rows.
+    "page": [],
+    "page_row": [],
 }
 
 ACT_RULES = {

@@ -7,7 +7,8 @@ from repro.serve.engine import (Engine, ServeConfig,  # noqa: F401
                                 served_param_shardings,
                                 served_plane_nbytes_per_device,
                                 served_weight_nbytes)
-from repro.serve.kv_cache import PagePool  # noqa: F401
+from repro.serve.kv_cache import (KVCacheConfig, PagedPool,  # noqa: F401
+                                  PagePool)
 from repro.serve.metrics import ServeMetrics  # noqa: F401
 from repro.serve.router import (ElasticPrecisionRouter, PrecisionTier,  # noqa: F401
                                 TierCache, TierEntry, default_tiers)

@@ -533,6 +533,22 @@ class ServeConfig:
     page_size: int = 16              # KV page granularity (tokens)
     keep_parent: bool = True         # retain parent ckpt for elastic tiers;
                                      # False frees it (elastic then raises)
+    # paged KV cache (None = dense slot-array state, the legacy layout):
+    # "fp" pages at model dtype, 8/4/2 int8 pages attended at that slice,
+    # "auto" ties the KV read width to the served weight tier
+    kv_bits: object = None
+    kv_page_size: int | None = None  # defaults to page_size when paged
+    prefix_cache: bool = False       # radix prompt-prefix page sharing
+
+    def kv_config(self):
+        """`kv_cache.KVCacheConfig` for the paged path, or None."""
+        if self.kv_bits is None and not self.prefix_cache:
+            return None
+        from repro.serve.kv_cache import KVCacheConfig
+        return KVCacheConfig(
+            kv_bits=self.kv_bits if self.kv_bits is not None else "fp",
+            page_size=self.kv_page_size or self.page_size,
+            prefix_cache=self.prefix_cache)
 
 
 def _packed_backend_ok() -> bool:
@@ -645,6 +661,7 @@ class Engine:
             max_len=max_len or self.serve_cfg.max_len,
             page_size=self.serve_cfg.page_size,
             total_pages=total_pages,
+            kv=self.serve_cfg.kv_config(),
             mesh=self.mesh,
         )
         if spec_decode is not None:

@@ -31,11 +31,13 @@ Two layers live here:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import api
 
@@ -247,3 +249,354 @@ def permute_slots(state, perm, batch_axes: list[int]):
     out = [jnp.take(leaf, perm, axis=b)
            for leaf, b in zip(leaves, batch_axes)]
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# paged KV: physical pages, prefix sharing, copy-on-write
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    """Paged-KV serving options (`--kv-bits` / `--kv-page-size` /
+    `--prefix-cache`).
+
+    kv_bits: None or "fp" -> full-precision pages (token-identical to
+      the dense slot path); 8 / 4 / 2 -> int8 code pages attended
+      through the r-bit Matryoshka MSB slice; "auto" -> int8 pages
+      whose attend width follows the router's weight representation
+      (8 -> 8, 4 -> 4, mix'n'match -> 4, 2 -> 2).
+    page_size: tokens per physical page (None -> ServeConfig.page_size).
+    prefix_cache: hash prompt-prefix pages and share them read-only
+      across requests (refcounts + copy-on-write on first divergence).
+    """
+
+    kv_bits: object = None
+    page_size: int | None = None
+    prefix_cache: bool = False
+
+    def __post_init__(self):
+        if self.kv_bits not in (None, "fp", 2, 4, 8, "auto"):
+            raise ValueError(
+                f"kv_bits must be None/'fp'/8/4/2/'auto', got {self.kv_bits!r}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_bits not in (None, "fp")
+
+    def attend_bits(self, rep_key=None) -> int | None:
+        """Static attend bitwidth for one step closure (None = fp)."""
+        if not self.quantized:
+            return None
+        if self.kv_bits != "auto":
+            return int(self.kv_bits)
+        return kv_bits_for_rep(rep_key)
+
+    def bytes_per_token(self, cfg) -> int:
+        """KV bytes one attend step READS per cached token: k + v rows
+        across layers at the sliced attend width (codes + fp32
+        scale/offset), or the full-precision row in fp mode."""
+        kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        L = cfg.num_layers
+        if not self.quantized:
+            itemsize = 2 if cfg.param_dtype == "bfloat16" else 4
+            return 2 * L * kh * hd * itemsize
+        bits = 8 if self.kv_bits == "auto" else int(self.kv_bits)
+        return 2 * L * kh * (hd * bits // 8 + 8)
+
+
+def kv_bits_for_rep(rep_key) -> int:
+    """Router-coupled KV attend width for one weight representation key
+    (see scheduler._step_fns): uniform int tiers keep their width,
+    per-layer Mix'n'Match tuples attend at 4, extra-precision wrappers
+    follow their base key, dequantized (None) reads the full int8."""
+    if (isinstance(rep_key, tuple) and len(rep_key) == 2
+            and rep_key[1] == "ep"):
+        return kv_bits_for_rep(rep_key[0])
+    if isinstance(rep_key, tuple):
+        return 4
+    if rep_key in (2, 4, 8):
+        return int(rep_key)
+    return 8
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """One radix-index node: a physical page holding `tokens` (page
+    rows) reachable from `parent`. Holds one refcount on its page."""
+
+    key: object
+    page: int
+    tokens: tuple
+    parent: object           # key of the parent entry, or None (root)
+    full: bool               # full page (immutable) vs partial tail
+    children: int = 0
+    tick: int = 0
+
+
+class PagedPool(PagePool):
+    """PagePool with PHYSICAL page identities and prefix sharing.
+
+    Extends the accounting base with a free list of page ids, per-page
+    refcounts, per-slot page lists (the host side of the device page
+    table), and -- with `prefix_cache` -- a radix index over prompt-
+    prefix pages: admission walks the index page-by-page (chained full
+    pages, then a longest-common-prefix partial tail), hits acquire the
+    matched pages read-only, and a hit whose shared length ends inside
+    a page schedules a copy-on-write so the divergent suffix never
+    touches the shared original. Index entries hold their own refcount
+    and are evicted LRU (childless first) when allocation runs dry.
+    """
+
+    def __init__(self, num_slots: int, page_size: int = 16,
+                 pages_per_slot: int = 8, total_pages: int | None = None,
+                 prefix_cache: bool = False):
+        super().__init__(num_slots, page_size,
+                         pages_per_slot=pages_per_slot,
+                         total_pages=total_pages)
+        self.prefix_cache = prefix_cache
+        self._free = collections.deque(range(self.total_pages))
+        self._refs = [0] * self.total_pages
+        self.slot_pages: dict[int, list[int]] = {}
+        self.slot_shared: dict[int, int] = {}     # leading read-only pages
+        self._prefix: dict[object, _PrefixEntry] = {}
+        self._tick = 0
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_shared_tokens = 0
+
+    # physical page accounting replaces the base's per-slot sum (shared
+    # pages are counted once, not once per holder)
+    @property
+    def used_pages(self) -> int:
+        return self.total_pages - len(self._free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def written_pages(self) -> int:
+        """Pages holding at least one written KV row (vs merely
+        reserved): slot pages up to the slot's token watermark, plus
+        every prefix-index page."""
+        seen = set()
+        for slot, info in self._slots.items():
+            pages = self.slot_pages.get(slot, [])
+            n = (min(len(pages), math.ceil(info.tokens / self.page_size))
+                 if info.tokens else 0)
+            seen.update(pages[:n])
+        seen.update(e.page for e in self._prefix.values())
+        return len(seen)
+
+    def _bump(self) -> int:
+        self._tick += 1
+        return self._tick
+
+    def _release(self, pid: int):
+        self._refs[pid] -= 1
+        assert self._refs[pid] >= 0, f"page {pid} over-released"
+        if self._refs[pid] == 0:
+            self._free.append(pid)
+
+    def _evict_one(self) -> bool:
+        """Drop the LRU childless prefix entry; True if one was dropped."""
+        victim = None
+        for e in self._prefix.values():
+            if e.children == 0 and (victim is None or e.tick < victim.tick):
+                victim = e
+        if victim is None:
+            return False
+        del self._prefix[victim.key]
+        if victim.parent is not None:
+            self._prefix[victim.parent].children -= 1
+        self._release(victim.page)
+        return True
+
+    def _take_pages(self, n: int) -> list[int] | None:
+        """Allocate n fresh pages (evicting prefix entries if needed);
+        None -- with nothing taken -- if the pool cannot cover them."""
+        while len(self._free) < n:
+            if not self._evict_one():
+                return None
+        out = []
+        for _ in range(n):
+            pid = self._free.popleft()
+            self._refs[pid] = 1
+            out.append(pid)
+        return out
+
+    # -- admission with prefix matching ------------------------------------
+
+    def _match_prefix(self, prompt) -> tuple[int, list[int]]:
+        """Longest indexed prefix of `prompt` in whole pages plus a
+        partial tail, capped one token short of the full prompt (the
+        suffix prefill must emit first-token logits)."""
+        limit = len(prompt) - 1
+        T = self.page_size
+        pages: list[int] = []
+        key, s = None, 0
+        while s + T <= limit:
+            k = ("page", key, tuple(prompt[s:s + T]))
+            e = self._prefix.get(k)
+            if e is None:
+                break
+            e.tick = self._bump()
+            pages.append(e.page)
+            key = k
+            s += T
+        if s < limit:
+            e = self._prefix.get(("tail", key))
+            if e is not None:
+                m = 0
+                for a, b in zip(e.tokens, prompt[s:limit]):
+                    if a != b:
+                        break
+                    m += 1
+                if m > 0:
+                    e.tick = self._bump()
+                    pages.append(e.page)
+                    s += m
+        return s, pages
+
+    def admit(self, owner, prompt, n_tokens: int):
+        """Seat a request: reserve a slot and pages_for(n_tokens) pages,
+        reusing indexed prefix pages read-only where the prompt matches.
+
+        Returns (slot, shared_len, cow) -- `cow` a list of (src, dst)
+        page copies the caller must apply (device-side) before the
+        suffix prefill writes into its first divergent page -- or None
+        if no slot / not enough pages right now.
+        """
+        if len(self._slots) >= self.num_slots:
+            return None
+        need = self.pages_for(n_tokens)
+        if need > self.pages_per_slot:
+            return None
+        prompt = [int(t) for t in prompt]
+        shared_len, shared_pages = ((0, [])
+                                    if not self.prefix_cache
+                                    else self._match_prefix(prompt))
+        T = self.page_size
+        n_full = shared_len // T          # whole pages shared read-only
+        fresh = self._take_pages(need - n_full)
+        if fresh is None:
+            return None
+        pages = []
+        for pid in shared_pages[:n_full]:
+            self._refs[pid] += 1
+            pages.append(pid)
+        cow = []
+        if shared_len % T:
+            # shared length ends inside a page: the suffix's first write
+            # would land in the shared original -- copy it first
+            cow.append((shared_pages[-1], fresh[0]))
+        pages += fresh
+        slot = min(i for i in range(self.num_slots) if i not in self._slots)
+        self._slots[slot] = SlotInfo(owner=owner, pages=len(pages))
+        self.slot_pages[slot] = pages
+        self.slot_shared[slot] = n_full
+        if self.prefix_cache:
+            self.prefix_lookups += 1
+            if shared_len:
+                self.prefix_hits += 1
+                self.prefix_shared_tokens += shared_len
+        return slot, shared_len, cow
+
+    def allocate(self, owner, n_tokens: int) -> int | None:
+        """Base-compatible admission (no prompt, no prefix matching)."""
+        got = self.admit(owner, (), n_tokens)
+        return None if got is None else got[0]
+
+    def register_prefix(self, slot: int, prompt):
+        """Index `slot`'s freshly prefilled prompt pages for reuse:
+        chained full pages plus the partial tail (longest tail wins)."""
+        if not self.prefix_cache:
+            return
+        prompt = [int(t) for t in prompt]
+        T = self.page_size
+        pages = self.slot_pages[slot]
+        key, s = None, 0
+        while s + T <= len(prompt):
+            k = ("page", key, tuple(prompt[s:s + T]))
+            if k not in self._prefix:
+                pid = pages[s // T]
+                self._refs[pid] += 1
+                self._prefix[k] = _PrefixEntry(
+                    key=k, page=pid, tokens=tuple(prompt[s:s + T]),
+                    parent=key, full=True, tick=self._bump())
+                if key is not None:
+                    self._prefix[key].children += 1
+            key = k
+            s += T
+        tail = tuple(prompt[s:])
+        if not tail:
+            return
+        k = ("tail", key)
+        e = self._prefix.get(k)
+        pid = pages[s // T]
+        if e is None:
+            self._refs[pid] += 1
+            self._prefix[k] = _PrefixEntry(
+                key=k, page=pid, tokens=tail, parent=key, full=False,
+                tick=self._bump())
+            if key is not None:
+                self._prefix[key].children += 1
+        elif len(tail) > len(e.tokens):
+            self._refs[pid] += 1
+            self._release(e.page)
+            e.page, e.tokens, e.tick = pid, tail, self._bump()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def grow(self, slot: int, n_tokens: int):
+        """Record token usage (admission reserved every page up front)."""
+        info = self._slots[slot]
+        info.tokens = n_tokens
+        assert n_tokens <= len(self.slot_pages[slot]) * self.page_size, (
+            f"slot {slot} wrote {n_tokens} tokens past its "
+            f"{len(self.slot_pages[slot])}-page reservation")
+
+    def free(self, slot: int):
+        for pid in self.slot_pages.pop(slot):
+            self._release(pid)
+        self.slot_shared.pop(slot, None)
+        del self._slots[slot]
+
+    def defrag(self) -> tuple[list[int], dict[int, int]]:
+        """Compact live slots into a dense prefix. Paged defrag is pure
+        HOST bookkeeping: only slot ids move; physical pages (and the
+        device page store) stay put -- the caller rebuilds its page
+        table from `page_table()`."""
+        perm, moves = super().defrag()
+        self.slot_pages = {moves[o]: v for o, v in self.slot_pages.items()}
+        self.slot_shared = {moves[o]: v for o, v in self.slot_shared.items()}
+        return perm, moves
+
+    def page_table(self) -> np.ndarray:
+        """(num_slots, pages_per_slot) int32 physical page ids; holes
+        carry the sentinel `total_pages` (dropped by scatters, zero-
+        filled by gathers)."""
+        tab = np.full((self.num_slots, self.pages_per_slot),
+                      self.total_pages, np.int32)
+        for slot, pages in self.slot_pages.items():
+            tab[slot, :len(pages)] = pages
+        return tab
+
+
+def copy_pages(state, src, dst):
+    """Device-side page copy (the COW step of prefix sharing).
+
+    src/dst: (n,) int32 page ids; every paged leaf (layer, page, ...)
+    copies rows src -> dst along its page axis. Sentinel ids (==
+    num_pages) are dropped by the scatter, so callers can pad the copy
+    list to a static bucket length.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp(leaf):
+        return leaf.at[:, dst].set(
+            jnp.take(leaf, src, axis=1, mode="clip"), mode="drop")
+
+    return jax.tree.map(cp, state)

@@ -35,6 +35,7 @@ class RequestRecord:
     prompt_tokens: int = 0
     generated_tokens: int = 0
     admit_tier: str = ""
+    shared_prefix_tokens: int = 0       # paged mode: prefix-cache reuse
 
     @property
     def ttft(self) -> float | None:
@@ -71,6 +72,11 @@ class ServeMetrics:
         self.spec_accepted = 0
         self.spec_emitted = 0
         self.spec_tier_rounds: dict[str, int] = {}
+        # paged KV cache: None until the scheduler runs in paged mode
+        self.kv_config: dict | None = None
+        self.page_reserved_samples: list[int] = []
+        self.page_written_samples: list[int] = []
+        self.page_total: int = 0
 
     # -- request lifecycle -------------------------------------------------
 
@@ -112,6 +118,33 @@ class ServeMetrics:
             "per_device_plane_nbytes": int(per_device_plane_nbytes
                                            or packed_nbytes),
         }
+
+    # -- paged KV cache ----------------------------------------------------
+
+    def on_kv_config(self, *, bytes_per_token: int, kv_bits, prefix_cache):
+        """Static paged-cache config (fed once at scheduler construction
+        and after reset): the per-token KV footprint claim is a computed
+        number, not a flag echo."""
+        self.kv_config = {
+            "kv_bits": "fp" if kv_bits in (None, "fp") else kv_bits,
+            "bytes_per_token": int(bytes_per_token),
+            "prefix_cache": bool(prefix_cache),
+        }
+
+    def on_admit_kv(self, uid, prompt_tokens: int, shared_tokens: int):
+        """Per-admission prefix-cache outcome: `shared_tokens` prompt
+        tokens were served from already-written shared pages (0 on a
+        cold admission), so the hit/cold TTFT split is measurable."""
+        self.requests[uid].shared_prefix_tokens = int(shared_tokens)
+
+    def on_pages(self, reserved: int, written: int, total: int):
+        """Page-pool occupancy snapshot after a working step: `reserved`
+        counts pages held by live slots (including headroom not yet
+        written), `written` only pages holding real KV rows -- the gap
+        is the overcommit opportunity."""
+        self.page_reserved_samples.append(int(reserved))
+        self.page_written_samples.append(int(written))
+        self.page_total = int(total)
 
     # -- per-step counters -------------------------------------------------
 
@@ -179,6 +212,59 @@ class ServeMetrics:
                 sorted(self.tier_decoded_tokens.items())),
             "tier_weight_bytes": dict(sorted(self.tier_weight_bytes.items())),
             "spec": self._spec_summary(),
+            "kv": self._kv_summary(done),
+        }
+
+    def _kv_summary(self, done: list[RequestRecord]) -> dict:
+        """Paged KV cache accounting (empty dict when the scheduler runs
+        the dense slot-array path). `prefix_hit_rate` is the fraction of
+        admitted requests that reused >= 1 shared prompt page;
+        `shared_token_rate` the fraction of all prompt tokens served
+        from shared pages; the hit/cold TTFT means quantify the reuse
+        payoff the prefix cache exists for."""
+        if self.kv_config is None:
+            return {}
+        admitted = [r for r in self.requests.values()
+                    if r.admitted is not None]
+        hits = [r for r in admitted if r.shared_prefix_tokens > 0]
+        prompt_toks = sum(r.prompt_tokens for r in admitted)
+        shared_toks = sum(r.shared_prefix_tokens for r in admitted)
+        hit_ttfts = [r.ttft for r in hits if r.ttft is not None]
+        cold_ttfts = [r.ttft for r in admitted
+                      if r.shared_prefix_tokens == 0 and r.ttft is not None]
+        # admission -> first token, i.e. pure prefill latency: unlike
+        # arrival-based TTFT it is immune to queueing delay, so it
+        # isolates what the prefix cache actually saves (hits prefill
+        # only their suffix)
+        hit_pf = [r.first_token - r.admitted for r in hits
+                  if r.first_token is not None]
+        cold_pf = [r.first_token - r.admitted for r in admitted
+                   if r.shared_prefix_tokens == 0
+                   and r.first_token is not None]
+        res, wr = self.page_reserved_samples, self.page_written_samples
+        total = max(self.page_total, 1)
+        return {
+            **self.kv_config,
+            "prefix_hits": len(hits),
+            "prefix_hit_rate": len(hits) / len(admitted) if admitted else 0.0,
+            "shared_prefix_tokens": shared_toks,
+            "shared_token_rate": (shared_toks / prompt_toks
+                                  if prompt_toks else 0.0),
+            "mean_ttft_hit_s": (sum(hit_ttfts) / len(hit_ttfts)
+                                if hit_ttfts else 0.0),
+            "mean_ttft_cold_s": (sum(cold_ttfts) / len(cold_ttfts)
+                                 if cold_ttfts else 0.0),
+            "mean_prefill_ttft_hit_s": (sum(hit_pf) / len(hit_pf)
+                                        if hit_pf else 0.0),
+            "mean_prefill_ttft_cold_s": (sum(cold_pf) / len(cold_pf)
+                                         if cold_pf else 0.0),
+            "mean_pages_reserved": sum(res) / len(res) if res else 0.0,
+            "mean_pages_written": sum(wr) / len(wr) if wr else 0.0,
+            "peak_pages_reserved": max(res, default=0),
+            "peak_pages_written": max(wr, default=0),
+            "reserved_occupancy": (max(res, default=0) / total),
+            "written_occupancy": (max(wr, default=0) / total),
+            "total_pages": self.page_total,
         }
 
     def _spec_summary(self) -> dict:

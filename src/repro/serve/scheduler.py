@@ -136,6 +136,31 @@ def poisson_trace(cfg, *, requests: int, prompt_len: int, gen_tokens: int,
             for i, t in enumerate(offsets)]
 
 
+def shared_prefix_trace(cfg, *, requests: int, prefix_len: int,
+                        suffix_len: int, gen_tokens: int, rate: float,
+                        seed: int = 0):
+    """Shared-system-prompt workload: every request's prompt is one
+    common `prefix_len`-token prefix followed by its own
+    `suffix_len`-token suffix -- the chatbot trace the prefix cache
+    exists for. Arrival offsets are exponential like `poisson_trace`;
+    the first request is always a cold miss, every later one a prefix
+    hit, so a replay measures hit-rate and hit-vs-cold TTFT directly."""
+    from repro.data import DataConfig, SyntheticCorpus
+    plen = prefix_len + suffix_len
+    corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=plen, seed=123 + seed))
+    rows = np.asarray(corpus.batch(0, requests, plen)["tokens"])
+    shared = rows[0, :prefix_len]
+    prompts = np.concatenate(
+        [np.broadcast_to(shared, (requests, prefix_len)),
+         rows[:, prefix_len:]], axis=1)
+    rng = np.random.default_rng(seed)
+    offsets = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+    return [(float(t), Request(uid=i, prompt=prompts[i],
+                               max_new_tokens=gen_tokens))
+            for i, t in enumerate(offsets)]
+
+
 class ContinuousBatchingScheduler:
     """Slot-array continuous batching over one model's decode state.
 
@@ -162,6 +187,7 @@ class ContinuousBatchingScheduler:
     def __init__(self, params, cfg, *, num_slots: int = 8,
                  max_len: int = 128, page_size: int = 16,
                  total_pages: int | None = None,
+                 kv: kv_cache.KVCacheConfig | None = None,
                  router: ElasticPrecisionRouter | None = None,
                  tier_cache: TierCache | None = None,
                  packed_bits=None,
@@ -186,10 +212,25 @@ class ContinuousBatchingScheduler:
         self.tier_cache = tier_cache
         self.mesh = mesh
         self.metrics = ServeMetrics()
-        self.pool = kv_cache.PagePool(
-            num_slots, page_size,
-            pages_per_slot=-(-max_len // page_size), total_pages=total_pages)
-        self.capacity = self.pool.slot_capacity
+        self.kv = kv
+        if kv is not None and kv.page_size:
+            page_size = kv.page_size
+        draft_len = spec_decode.draft_len if spec_decode else 0
+        if kv is None:
+            self.pool = kv_cache.PagePool(
+                num_slots, page_size,
+                pages_per_slot=-(-max_len // page_size),
+                total_pages=total_pages)
+            self.capacity = self.pool.slot_capacity
+        else:
+            # paged mode: the slot's token capacity stays max_len rounded
+            # to whole pages; spec-decode draft headroom rides in extra
+            # page columns so a verify block always has reserved rows.
+            self.capacity = page_size * (-(-max_len // page_size))
+            pages_per_slot = -(-(self.capacity + draft_len) // page_size)
+            self.pool = kv_cache.PagedPool(
+                num_slots, page_size, pages_per_slot=pages_per_slot,
+                total_pages=total_pages, prefix_cache=kv.prefix_cache)
         self.num_slots = num_slots
         self.spec = spec_decode
         self._draft_source = draft_source
@@ -218,11 +259,25 @@ class ContinuousBatchingScheduler:
             self.packed_bits = (packed_bits if packed_bits is not None
                                 else cfg.quant.packed_bits or None)
             self._param_shardings = param_shardings
-        self.state = api.init_state(cfg, num_slots, self.cache_len)
+        if kv is None:
+            self.state = api.init_state(cfg, num_slots, self.cache_len)
+            state_axes = api.state_axes(cfg)
+            self._ptab = None
+        else:
+            self.state = api.init_paged_state(
+                cfg, self.pool.total_pages, page_size,
+                kv_bits=(8 if kv.quantized else None))
+            state_axes = api.paged_state_axes(cfg, kv_bits=kv.kv_bits
+                                              if kv.quantized else None)
+            self._ptab = self.pool.page_table()
+            self._copy_fn = jax.jit(kv_cache.copy_pages, donate_argnums=(0,))
+            self.metrics.on_kv_config(
+                bytes_per_token=kv.bytes_per_token(cfg),
+                kv_bits=kv.kv_bits, prefix_cache=kv.prefix_cache)
         if mesh is not None:
             from repro.runtime import sharding as shard_lib
             self._state_shardings = shard_lib.tree_shardings(
-                api.state_axes(cfg), self.state, mesh,
+                state_axes, self.state, mesh,
                 rules=shard_lib.SERVE_STATE_RULES)
             self.state = jax.device_put(self.state, self._state_shardings)
         else:
@@ -270,6 +325,8 @@ class ContinuousBatchingScheduler:
         planes (PackedPlane is self-describing), hence the int-only
         passthrough below.
         """
+        if self.kv is not None:
+            return self._paged_step_fns(key)
         fns = self._fns.get(key)
         if fns is not None:
             return fns
@@ -315,6 +372,61 @@ class ContinuousBatchingScheduler:
             fns = {"prefill": jax.jit(prefill, donate_argnums=(1,)),
                    "decode": jax.jit(decode, donate_argnums=(1,))}
         self._fns[key] = fns
+        return fns
+
+    def _paged_step_fns(self, key) -> dict:
+        """(prefill, prefill_hit, decode) closures for one (weight
+        representation, KV attend width) pair -- the paged twin of
+        `_step_fns`. The KV attend width joins the cache key because the
+        Matryoshka slice shift is STATIC in the attend graph: under
+        `kv_bits="auto"` a weight-tier switch also reslices the KV read
+        view, landing on its own compiled closure (first visit compiles,
+        revisits are dict lookups, exactly like packed weight tiers)."""
+        kvb = self.kv.attend_bits(key)
+        fkey = (key, "kv", kvb)
+        fns = self._fns.get(fkey)
+        if fns is not None:
+            return fns
+        cfg = self._rep_cfg(key)
+        state_shardings = self._state_shardings
+
+        def prefill(p, st, toks, ptab, lengths):
+            logits, st = api.prefill_paged(
+                p, {"tokens": toks}, cfg, st, ptab, bits=None,
+                last_pos=lengths, kv_bits=kvb)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
+
+        def prefill_hit(p, st, toks, ptab, lengths, start):
+            logits, st = api.prefill_paged(
+                p, {"tokens": toks}, cfg, st, ptab, bits=None,
+                last_pos=lengths, start=start, kv_bits=kvb)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
+
+        def decode(p, st, tok, pos, ptab):
+            logits, st = api.decode_step_slots(p, st, tok, pos, cfg,
+                                               bits=None, ptab=ptab,
+                                               kv_bits=kvb)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
+
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            ps, ss = self._param_shardings, state_shardings
+            fns = {"prefill": jax.jit(prefill, donate_argnums=(1,),
+                                      in_shardings=(ps, ss, rep, rep, rep),
+                                      out_shardings=(rep, ss)),
+                   "prefill_hit": jax.jit(prefill_hit, donate_argnums=(1,),
+                                          in_shardings=(ps, ss, rep, rep,
+                                                        rep, rep),
+                                          out_shardings=(rep, ss)),
+                   "decode": jax.jit(decode, donate_argnums=(1,),
+                                     in_shardings=(ps, ss, rep, rep, rep),
+                                     out_shardings=(rep, ss))}
+        else:
+            fns = {"prefill": jax.jit(prefill, donate_argnums=(1,)),
+                   "prefill_hit": jax.jit(prefill_hit, donate_argnums=(1,)),
+                   "decode": jax.jit(decode, donate_argnums=(1,))}
+        self._fns[fkey] = fns
         return fns
 
     def _rep_cfg(self, key):
@@ -372,7 +484,11 @@ class ContinuousBatchingScheduler:
         into the jitted step: it returns (verify_pred (B, T), accepted
         prefix length m (B,), state with rows >= pos + m + 1 cleared).
         """
+        paged = self.kv is not None
+        kvb = self.kv.attend_bits(self.packed_bits) if paged else None
         key = specdecode.spec_fns_key(self.spec.draft_key, self.packed_bits)
+        if paged:
+            key = (key, "kv", kvb)
         fns = self._fns.get(key)
         if fns is not None:
             return fns
@@ -394,16 +510,37 @@ class ContinuousBatchingScheduler:
                                          seq_axes)
             return pred, m, st
 
+        def draft_paged(p, st, tok, pos, ptab):
+            logits, st = api.decode_step_slots(p, st, tok, pos, cfg,
+                                               bits=None, ptab=ptab,
+                                               kv_bits=kvb)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
+
+        def verify_paged(p, st, toks, pos, ptab):
+            # no rollback scrub: stale draft rows past the accepted
+            # prefix stay masked (ki <= pos) until the next write lands
+            # on the same (page, row) -- the paged rewind is free.
+            logits, st = api.verify_step_slots(p, st, toks, pos, cfg,
+                                               bits=None, ptab=ptab,
+                                               kv_bits=kvb)
+            pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, T)
+            match = (toks[:, 1:] == pred[:, :-1]).astype(jnp.int32)
+            m = jnp.cumprod(match, axis=1).sum(axis=1)             # (B,)
+            return pred, m, st
+
+        if paged:
+            draft, verify = draft_paged, verify_paged
         if self.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec
             rep = NamedSharding(self.mesh, PartitionSpec())
             ps, ss = self._param_shardings, state_shardings
+            extra = (rep,) if paged else ()
             fns = {"draft": jax.jit(draft, donate_argnums=(1,),
                                     in_shardings=(draft_shardings, ss, rep,
-                                                  rep),
+                                                  rep) + extra,
                                     out_shardings=(rep, ss)),
                    "verify": jax.jit(verify, donate_argnums=(1,),
-                                     in_shardings=(ps, ss, rep, rep),
+                                     in_shardings=(ps, ss, rep, rep) + extra,
                                      out_shardings=(rep, rep, ss))}
         else:
             fns = {"draft": jax.jit(draft, donate_argnums=(1,)),
@@ -432,14 +569,26 @@ class ContinuousBatchingScheduler:
         row via prefill-into-slot.
         """
         pool = self.pool
-        self.pool = kv_cache.PagePool(pool.num_slots, pool.page_size,
-                                      pages_per_slot=pool.pages_per_slot,
-                                      total_pages=pool.total_pages)
+        if self.kv is not None:
+            self.pool = kv_cache.PagedPool(
+                pool.num_slots, pool.page_size,
+                pages_per_slot=pool.pages_per_slot,
+                total_pages=pool.total_pages,
+                prefix_cache=pool.prefix_cache)
+            self._ptab = self.pool.page_table()
+        else:
+            self.pool = kv_cache.PagePool(pool.num_slots, pool.page_size,
+                                          pages_per_slot=pool.pages_per_slot,
+                                          total_pages=pool.total_pages)
         self.pos[:] = 0
         self.queue.clear()
         self.active.clear()
         self.results = {}
         self.metrics = ServeMetrics()
+        if self.kv is not None:
+            self.metrics.on_kv_config(
+                bytes_per_token=self.kv.bytes_per_token(self.cfg),
+                kv_bits=self.kv.kv_bits, prefix_cache=self.kv.prefix_cache)
         self.prefill_calls = 0
         if self.router is not None:
             self.router.reset()
@@ -480,6 +629,8 @@ class ContinuousBatchingScheduler:
             self._set_tier(tier)
 
     def _admit(self, now: float) -> int:
+        if self.kv is not None:
+            return self._admit_paged(now)
         # pop everything the pool can seat right now ...
         picked: list[tuple[Request, int]] = []
         while self.queue:
@@ -529,6 +680,94 @@ class ContinuousBatchingScheduler:
                     self._finish(slot, t_tok)
         return len(picked)
 
+    def _admit_paged(self, now: float) -> int:
+        """Paged admission: prefix-match + reserve pages, apply COW
+        copies, then one prefill per (bucket, cold/hit) group.
+
+        Cold admissions run the exact dense prefill graph over the full
+        prompt; prefix hits prefill ONLY the suffix past their shared
+        length (the TTFT win), bucketed separately so suffix shapes stay
+        static. Spec-decode draft headroom is reserved up front, so a
+        verify block never writes an unreserved page."""
+        draft_len = self.spec.draft_len if self.spec else 0
+        picked: list[tuple[Request, int, int]] = []
+        cow_src: list[int] = []
+        cow_dst: list[int] = []
+        while self.queue:
+            req = self.queue[0]
+            total = req.prompt.size + req.max_new_tokens + draft_len
+            got = self.pool.admit(req.uid, req.prompt, total)
+            if got is None:
+                break
+            slot, shared_len, cow = got
+            self.queue.popleft()
+            picked.append((req, slot, shared_len))
+            for s, d in cow:
+                cow_src.append(s)
+                cow_dst.append(d)
+        if not picked:
+            return 0
+        self._ptab = self.pool.page_table()
+        if cow_src:
+            # pad the copy list to a static bucket (sentinel pairs are
+            # dropped) so the jitted COW retraces per bucket size only
+            n = _row_bucket(len(cow_src))
+            hole = self.pool.total_pages
+            src = np.full((n,), hole, np.int32)
+            dst = np.full((n,), hole, np.int32)
+            src[:len(cow_src)] = cow_src
+            dst[:len(cow_dst)] = cow_dst
+            self.state = self._copy_fn(self.state, jnp.asarray(src),
+                                       jnp.asarray(dst))
+        fns = self._step_fns(self.packed_bits)
+        buckets: dict[tuple[int, bool], list[tuple[Request, int, int]]] = {}
+        for req, slot, shared in picked:
+            hit = shared > 0
+            plen = req.prompt.size - shared
+            buckets.setdefault((_bucket(plen, self.capacity), hit),
+                               []).append((req, slot, shared))
+        for (P, hit), group in sorted(buckets.items()):
+            rows = _row_bucket(len(group))
+            toks = np.zeros((rows, P), np.int32)
+            lengths = np.ones((rows,), np.int32)
+            start = np.zeros((rows,), np.int32)
+            ptab = np.full((rows, self.pool.pages_per_slot),
+                           self.pool.total_pages, np.int32)
+            slots = []
+            for i, (req, slot, shared) in enumerate(group):
+                suffix = req.prompt[shared:]
+                toks[i, :suffix.size] = suffix
+                lengths[i] = suffix.size
+                start[i] = shared
+                ptab[i] = self._ptab[slot]
+                slots.append(slot)
+            if hit:
+                first, self.state = fns["prefill_hit"](
+                    self.params, self.state, jnp.asarray(toks),
+                    jnp.asarray(ptab), jnp.asarray(lengths),
+                    jnp.asarray(start))
+            else:
+                first, self.state = fns["prefill"](
+                    self.params, self.state, jnp.asarray(toks),
+                    jnp.asarray(ptab), jnp.asarray(lengths))
+            self.prefill_calls += 1
+            first = np.asarray(first)           # forces the computation
+            t_tok = self.clock()
+            for i, (req, slot, shared) in enumerate(group):
+                tok = int(first[i])
+                plen = req.prompt.size
+                self.pos[slot] = plen
+                self.active[slot] = _Active(req=req, generated=[tok],
+                                            last_token=tok)
+                self.pool.grow(slot, plen + 1)
+                self.pool.register_prefix(slot, req.prompt)
+                self.metrics.on_admit(req.uid, now, self.tier_name)
+                self.metrics.on_admit_kv(req.uid, plen, shared)
+                self.metrics.on_first_token(req.uid, t_tok)
+                if req.max_new_tokens == 1 or tok == req.eos_id:
+                    self._finish(slot, t_tok)
+        return len(picked)
+
     def _finish(self, slot: int, now: float):
         act = self.active.pop(slot)
         self.pool.free(slot)
@@ -549,9 +788,11 @@ class ContinuousBatchingScheduler:
             for slot, act in self.active.items():
                 toks[slot, 0] = act.last_token
             decode_fn = self._step_fns(self.packed_bits)["decode"]
-            next_toks, self.state = decode_fn(
-                self.params, self.state, jnp.asarray(toks),
-                jnp.asarray(self.pos))
+            args = (self.params, self.state, jnp.asarray(toks),
+                    jnp.asarray(self.pos))
+            if self.kv is not None:
+                args = args + (jnp.asarray(self._ptab),)
+            next_toks, self.state = decode_fn(*args)
             next_toks = np.asarray(next_toks)   # forces the computation
             t_tok = self.clock()
             for slot in list(self.active):
@@ -570,6 +811,10 @@ class ContinuousBatchingScheduler:
                 self.tier_name, new_tokens=admitted + decoded,
                 active=len(self.active), queue_depth=len(self.queue),
                 decoded_tokens=decoded)
+            if self.kv is not None:
+                self.metrics.on_pages(self.pool.used_pages,
+                                      self.pool.written_pages,
+                                      self.pool.total_pages)
         return bool(admitted or decoded)
 
     def _spec_round(self) -> int:
@@ -592,14 +837,16 @@ class ContinuousBatchingScheduler:
             last[slot, 0] = act.last_token
         pos0 = jnp.asarray(self.pos)
         cur = jnp.asarray(last)
+        extra = (jnp.asarray(self._ptab),) if self.kv is not None else ()
         blocks = [cur]
         st = self.state
         for j in range(k):
-            nxt, st = fns["draft"](draft_p, st, cur, pos0 + j)
+            nxt, st = fns["draft"](draft_p, st, cur, pos0 + j, *extra)
             cur = nxt[:, None]
             blocks.append(cur)
         toks = jnp.concatenate(blocks, axis=1)            # (B, k+1)
-        pred, m, self.state = fns["verify"](self.params, st, toks, pos0)
+        pred, m, self.state = fns["verify"](self.params, st, toks, pos0,
+                                            *extra)
         pred = np.asarray(pred)                 # forces the computation
         m = np.asarray(m)
         toks = np.asarray(toks)
@@ -630,11 +877,19 @@ class ContinuousBatchingScheduler:
         return decoded
 
     def defrag(self):
-        """Compact live slots into a dense prefix (permutes slot rows)."""
+        """Compact live slots into a dense prefix (permutes slot rows).
+
+        In paged mode this is a pure HOST operation: the page store is
+        global, slot identity lives only in the page table, so remapping
+        slots touches zero device bytes."""
         perm, moves = self.pool.defrag()
         if all(moves[old] == old for old in moves):
             return moves
-        self.state = kv_cache.permute_slots(self.state, perm, self._batch_axes)
+        if self.kv is not None:
+            self._ptab = self.pool.page_table()
+        else:
+            self.state = kv_cache.permute_slots(self.state, perm,
+                                                self._batch_axes)
         self.pos = self.pos[np.asarray(perm)]
         self.active = {moves[old]: act for old, act in self.active.items()}
         return moves

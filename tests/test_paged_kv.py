@@ -1,0 +1,368 @@
+"""Matryoshka paged KV cache tests.
+
+Acceptance surface of the paged refactor:
+
+  * fp-KV paged serving is TOKEN-IDENTICAL to the dense slot-array
+    path (dense and MoE families) -- the exactness gate that proves the
+    page-table indirection is a pure layout change;
+  * int8 KV pages attended at the 8/4/2-bit Matryoshka slices are
+    bit-exact vs the dequantized-KV oracle built directly from
+    `core.quant` (slice_bits on the MSB grid);
+  * PagedPool edge cases: overcommit (free pages but no free slot, and
+    the all-or-nothing page reservation), defrag with reserved-but-
+    unwritten pages, free-then-readmit physical page reuse;
+  * radix prefix sharing: refcounted read-only reuse, copy-on-write on
+    a partial tail, LRU eviction under pressure, and token identity of
+    prefix-hit admissions vs the cold oracle;
+  * paged self-speculative decoding stays token-exact (the masked
+    stale-row rewind);
+  * the ServeMetrics `kv` section: bytes/token staircase, occupancy,
+    and the prefix hit-rate / hit-vs-cold TTFT split.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import quant
+from repro.models import api, attention as attn
+from repro.serve import (Engine, KVCacheConfig, PagedPool, Request,
+                         ServeConfig, SpecDecodeConfig)
+from repro.serve.kv_cache import kv_bits_for_rep
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen3_1_7b").reduced()
+    return cfg, api.init(KEY, cfg)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = get_config("granite_moe_1b_a400m").reduced()
+    return cfg, api.init(KEY, cfg)
+
+
+def _prompts(cfg, B, S, seed=1):
+    return jax.random.randint(jax.random.fold_in(KEY, seed), (B, S), 0,
+                              cfg.vocab_size)
+
+
+def _engine(cfg, params, **kv_kw):
+    return Engine(params, cfg, ServeConfig(bits=4, max_len=32, num_slots=2,
+                                           page_size=8, **kv_kw))
+
+
+# ---------------------------------------------------------------------------
+# exactness gates: fp pages == dense, sliced views == quant oracle
+# ---------------------------------------------------------------------------
+
+
+def test_paged_fp_token_identical_dense(dense):
+    cfg, params = dense
+    prompts = _prompts(cfg, 3, 16)
+    ref = np.asarray(_engine(cfg, params).generate(prompts, 8))
+    paged = np.asarray(_engine(cfg, params, kv_bits="fp").generate(prompts, 8))
+    np.testing.assert_array_equal(ref, paged)
+
+
+def test_paged_fp_token_identical_off_bucket_lengths(dense):
+    """Prompt lengths off the page/bucket grid still match exactly."""
+    cfg, params = dense
+    prompts = _prompts(cfg, 2, 13, seed=9)
+    ref = np.asarray(_engine(cfg, params).generate(prompts, 6))
+    paged = np.asarray(_engine(cfg, params, kv_bits="fp").generate(prompts, 6))
+    np.testing.assert_array_equal(ref, paged)
+
+
+def test_paged_fp_token_identical_moe(moe):
+    cfg, params = moe
+    prompts = _prompts(cfg, 2, 16, seed=3)
+    ref = np.asarray(_engine(cfg, params).generate(prompts, 6))
+    paged = np.asarray(_engine(cfg, params, kv_bits="fp").generate(prompts, 6))
+    np.testing.assert_array_equal(ref, paged)
+
+
+def test_quantized_kv_rows_match_slice_oracle():
+    """int8 KV pages read at r bits == the core.quant oracle, bit-exact:
+    x_hat = alpha * slice_bits(q8, 8, r) - alpha*z for every r."""
+    x = jax.random.normal(jax.random.fold_in(KEY, 11), (4, 16, 2, 8),
+                          jnp.float32) * 3.0
+    codes, alpha, beta = attn.quant_kv_rows(x)
+    q8, a_ref, z_ref = quant.quantize(x, attn.KV_PARENT_BITS, axis=-1)
+    np.testing.assert_array_equal(np.asarray(codes),
+                                  np.asarray(q8).astype(np.uint8))
+    for r in (8, 4, 2):
+        got = attn.dequant_kv_rows(codes, alpha, beta, r, jnp.float32)
+        sl = quant.slice_bits(q8, attn.KV_PARENT_BITS, r)
+        want = (a_ref * sl.astype(jnp.float32)
+                - a_ref * z_ref.astype(jnp.float32)).astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # r == 8 recovers the parent dequant (Matryoshka MSB nesting) up to
+    # one float-associativity ulp: a*q - (a*z) vs a*(q - z)
+    full = attn.dequant_kv_rows(codes, alpha, beta, 8, jnp.float32)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(quant.dequantize(q8, a_ref, z_ref)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gather_slot_view_dequantizes_through_page_table():
+    """write_pages -> gather_slot_view round-trips the sliced dequant
+    through a shuffled page table, bit-exact vs the row oracle."""
+    cfg = get_config("qwen3_1_7b").reduced()
+    kh, hd, T = cfg.num_kv_heads, cfg.resolved_head_dim, 4
+    cache = attn.init_paged_cache(cfg, num_pages=6, page_size=T,
+                                  layers=None, kv_bits=8, dtype=jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 21), (2, 8, kh, hd),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 22), (2, 8, kh, hd),
+                          jnp.float32)
+    # slot 0 -> pages [5, 1], slot 1 -> pages [3, 0] (deliberately
+    # non-contiguous, non-monotone physical placement)
+    ptab = jnp.asarray([[5, 1], [3, 0]], jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None, :], (2, 8))
+    pids = jnp.take_along_axis(ptab, pos // T, axis=1)
+    rows = pos % T
+    cache = attn.write_pages(cache, k, v, pids, rows)
+    for r in (8, 4, 2):
+        k_view, _ = attn.gather_slot_view(cache, ptab, kv_bits=r,
+                                          dtype=jnp.float32)
+        codes, alpha, beta = attn.quant_kv_rows(k)
+        want_k = attn.dequant_kv_rows(codes, alpha, beta, r, jnp.float32)
+        np.testing.assert_array_equal(np.asarray(k_view),
+                                      np.asarray(want_k))
+
+
+def test_paged_quant_bits_degrade_gracefully(dense):
+    """int8/int4 KV attend matches fp on a short horizon for this tiny
+    model; int2 runs and emits valid tokens (lossy by design)."""
+    cfg, params = dense
+    prompts = _prompts(cfg, 2, 16)
+    ref = np.asarray(_engine(cfg, params, kv_bits="fp").generate(prompts, 4))
+    for kvb in (8, "auto"):
+        out = np.asarray(_engine(cfg, params, kv_bits=kvb).generate(prompts, 4))
+        np.testing.assert_array_equal(ref, out)
+    out2 = np.asarray(_engine(cfg, params, kv_bits=2).generate(prompts, 4))
+    assert out2.shape == ref.shape
+    assert ((0 <= out2) & (out2 < cfg.vocab_size)).all()
+
+
+def test_kv_bits_for_rep_mapping():
+    assert kv_bits_for_rep(None) == 8           # dequantized tier
+    assert kv_bits_for_rep(8) == 8
+    assert kv_bits_for_rep(4) == 4
+    assert kv_bits_for_rep(2) == 2
+    assert kv_bits_for_rep((8, 4, 2, 2)) == 4   # Mix'n'Match tuple
+    assert kv_bits_for_rep((2, "ep")) == 2      # extra-precision wrapper
+    assert kv_bits_for_rep(((8, 4, 2, 2), "ep")) == 4
+    with pytest.raises(ValueError):
+        KVCacheConfig(kv_bits=3)
+
+
+# ---------------------------------------------------------------------------
+# PagedPool overcommit edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_overcommit_free_pages_but_no_free_slot():
+    pool = PagedPool(num_slots=2, page_size=4, pages_per_slot=4,
+                     total_pages=32)
+    assert pool.admit("a", [1, 2], 8) is not None
+    assert pool.admit("b", [3, 4], 8) is not None
+    assert pool.free_pages > 0
+    assert pool.admit("c", [5, 6], 8) is None   # slots, not pages, bind
+    pool.free(0)
+    assert pool.admit("c", [5, 6], 8) is not None
+
+
+def test_overcommit_page_reservation_is_all_or_nothing():
+    pool = PagedPool(num_slots=4, page_size=4, pages_per_slot=4,
+                     total_pages=5)
+    got = pool.admit("a", [1], 16)              # 4 pages
+    assert got is not None
+    before = pool.free_pages
+    assert pool.admit("b", [2], 16) is None     # needs 4, only 1 free
+    assert pool.free_pages == before            # nothing leaked
+    assert pool.admit("b", [2], 4) is not None  # 1 page still fits
+
+
+def test_free_then_readmit_reuses_physical_pages():
+    pool = PagedPool(num_slots=2, page_size=4, pages_per_slot=2,
+                     total_pages=4)
+    s0, _, _ = pool.admit("a", [1, 2], 8)
+    s1, _, _ = pool.admit("b", [3, 4], 8)
+    assert pool.free_pages == 0                  # pool fully committed
+    freed = set(pool.slot_pages[s0])
+    pool.free(s0)
+    # the only free pages are the freed ones: readmission must reuse
+    # exactly those physical ids (released pages really return)
+    s2, _, _ = pool.admit("c", [5, 6], 8)
+    assert set(pool.slot_pages[s2]) == freed
+    assert pool.page_table()[s2, 0] in freed
+    assert pool.free_pages == 0
+
+
+def test_defrag_with_reserved_but_unwritten_pages():
+    pool = PagedPool(num_slots=3, page_size=4, pages_per_slot=4,
+                     total_pages=16)
+    s0, _, _ = pool.admit("a", [1], 16)          # 4 pages reserved
+    s1, _, _ = pool.admit("b", [2], 16)
+    pool.grow(s1, 2)                             # 1 of 4 pages written
+    assert pool.written_pages == 1               # reserved != written
+    assert pool.used_pages == 8
+    pages_b = list(pool.slot_pages[s1])
+    pool.free(s0)
+    perm, moves = pool.defrag()
+    new_slot = moves[s1]
+    assert new_slot == 0                         # compacted to the front
+    assert pool.slot_pages[new_slot] == pages_b  # physical pages stay put
+    tab = pool.page_table()
+    assert list(tab[new_slot][:4]) == pages_b
+    assert (tab[1:] == pool.total_pages).all()   # holes carry the sentinel
+    assert pool.used_pages == 4
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: refcounts, COW, eviction
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_match_refcount_and_cow():
+    pool = PagedPool(num_slots=3, page_size=8, pages_per_slot=4,
+                     total_pages=32, prefix_cache=True)
+    prompt = list(range(100, 120))               # 2.5 pages
+    s0, shared0, cow0 = pool.admit("a", prompt, 24)
+    assert shared0 == 0 and cow0 == []           # cold
+    pool.grow(s0, len(prompt))
+    pool.register_prefix(s0, prompt)
+    s1, shared1, cow1 = pool.admit("b", prompt, 24)
+    # match = 2 full pages + the partial tail, capped at len-1
+    assert shared1 == len(prompt) - 1
+    assert len(cow1) == 1                        # tail page copy-on-write
+    src, dst = cow1[0]
+    assert src == pool.slot_pages[s0][2]         # shared tail original
+    assert dst == pool.slot_pages[s1][2]         # b's own fresh copy
+    # the two full prefix pages are physically shared, refcount > 1
+    assert pool.slot_pages[s1][:2] == pool.slot_pages[s0][:2]
+    for pid in pool.slot_pages[s1][:2]:
+        assert pool._refs[pid] >= 3              # a + b + index entry
+    assert pool.prefix_hits == 1 and pool.prefix_shared_tokens == shared1
+    # freeing the cold owner keeps the shared pages alive for b + index
+    pool.free(s0)
+    for pid in pool.slot_pages[s1][:2]:
+        assert pool._refs[pid] == 2
+
+
+def test_prefix_entries_evicted_lru_when_pool_runs_dry():
+    pool = PagedPool(num_slots=2, page_size=4, pages_per_slot=4,
+                     total_pages=5, prefix_cache=True)
+    prompt = list(range(7))                      # 1 full page + 3-token tail
+    s0, _, _ = pool.admit("a", prompt, 8)
+    pool.grow(s0, len(prompt))
+    pool.register_prefix(s0, prompt)
+    pool.free(s0)
+    assert len(pool._prefix) == 2                # page chain + tail
+    assert pool.used_pages == 2                  # held only by the index
+    # 3 free pages, a 4-page request: the CHILDLESS tail entry is
+    # evicted to cover it, the full-page chain node (still a parent
+    # until the tail goes) survives
+    s1, shared, _ = pool.admit("b", list(range(50, 54)), 16)
+    assert s1 is not None and shared == 0
+    assert pool.free_pages == 0
+    assert len(pool._prefix) == 1
+    assert next(iter(pool._prefix.values())).full
+
+
+def test_prefix_hit_admissions_token_identical(dense):
+    """Prefix-hit suffix prefill emits the same tokens as cold serving,
+    and the metrics kv section reports the hits."""
+    cfg, params = dense
+
+    def run(prefix_cache):
+        eng = Engine(params, cfg, ServeConfig(
+            bits=4, max_len=48, num_slots=2, page_size=8, kv_bits="fp",
+            prefix_cache=prefix_cache))
+        sched = eng.scheduler(num_slots=2, max_len=48)
+        rng = np.random.default_rng(3)
+        shared = rng.integers(0, cfg.vocab_size, size=24)
+        for i in range(4):
+            suffix = rng.integers(0, cfg.vocab_size, size=8)
+            sched.submit(Request(uid=i,
+                                 prompt=np.concatenate([shared, suffix]),
+                                 max_new_tokens=4))
+            res = sched.run_until_idle()     # sequential: later ones hit
+        return res, sched.metrics.summary()["kv"]
+
+    cold_res, cold_kv = run(False)
+    hit_res, hit_kv = run(True)
+    for uid in cold_res:
+        np.testing.assert_array_equal(cold_res[uid], hit_res[uid])
+    assert cold_kv["prefix_hits"] == 0
+    assert hit_kv["prefix_hits"] == 3 and hit_kv["prefix_hit_rate"] == 0.75
+    assert hit_kv["shared_prefix_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: spec decode, metrics, elastic auto width
+# ---------------------------------------------------------------------------
+
+
+def test_paged_spec_decode_token_exact(dense):
+    cfg, params = dense
+    prompts = _prompts(cfg, 2, 16)
+    spec = SpecDecodeConfig(draft_bits=2, draft_len=3)
+    eng_d = Engine(params, cfg, ServeConfig(bits=4, max_len=40, num_slots=2,
+                                            page_size=8))
+    eng_p = Engine(params, cfg, ServeConfig(bits=4, max_len=40, num_slots=2,
+                                            page_size=8, kv_bits="fp"))
+    plain = np.asarray(eng_d.generate(prompts, 8))
+    spec_paged = np.asarray(eng_p.generate(prompts, 8, spec_decode=spec))
+    np.testing.assert_array_equal(plain, spec_paged)
+    sm = next(iter(eng_p._schedulers.values())).metrics.summary()
+    assert sm["spec"]["rounds"] > 0
+    assert sm["kv"]["kv_bits"] == "fp"
+
+
+def test_metrics_kv_section_and_bytes_staircase(dense):
+    cfg, params = dense
+    eng = _engine(cfg, params, kv_bits=8)
+    out = eng.generate(_prompts(cfg, 2, 16), 4)
+    assert out.shape == (2, 4)
+    kv = next(iter(eng._schedulers.values())).metrics.summary()["kv"]
+    assert kv["kv_bits"] == 8 and not kv["prefix_cache"]
+    assert kv["total_pages"] > 0
+    assert 0 < kv["peak_pages_written"] <= kv["peak_pages_reserved"]
+    assert kv["peak_pages_reserved"] <= kv["total_pages"]
+    # per-token KV read bytes: fp > int8 > int4 > int2, strictly
+    sizes = [KVCacheConfig(kv_bits=b).bytes_per_token(cfg)
+             for b in ("fp", 8, 4, 2)]
+    assert all(a > b for a, b in zip(sizes, sizes[1:]))
+    assert kv["bytes_per_token"] == sizes[1]
+    # dense-mode schedulers report an empty kv section
+    kv_dense = _engine(cfg, params).scheduler().metrics.summary()["kv"]
+    assert kv_dense == {}
+
+
+def test_elastic_auto_kv_width_compiles_per_rep(dense):
+    """kv_bits='auto' ties the attend slice to the weight tier: each
+    visited (representation, kv width) pair compiles exactly one closure
+    set, and revisits reuse it."""
+    cfg, params = dense
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=2,
+                                          page_size=8, kv_bits="auto"))
+    sched = eng.scheduler(elastic=True, packed=False,
+                          thresholds=(1, 4, 8, 16), cooldown=1)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        sched.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                             max_new_tokens=3))
+    res = sched.run_until_idle()
+    assert len(res) == 6
+    keys = [k for k in sched._fns if isinstance(k, tuple) and "kv" in k]
+    assert keys and len(keys) == len(set(keys))
+    for k in keys:                       # dequantized tiers read full int8
+        assert k[-1] == 8

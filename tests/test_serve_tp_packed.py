@@ -136,6 +136,36 @@ def test_fixed_tier_generate_on_mesh_matches_single_device(dense):
     np.testing.assert_array_equal(np.asarray(out_tp), np.asarray(out_1d))
 
 
+def test_paged_fp_kv_on_mesh_token_identical(dense):
+    """Paged fp-KV serving on an mp=2 mesh: the global page store shards
+    heads-over-'model' (page dims replicated, host page table broadcast)
+    and stays token-identical to the single-device DENSE slot path --
+    the paged exactness gate composed with TP sharding."""
+    cfg, params = dense
+    prompts = jax.random.randint(KEY, (3, 8), 0, cfg.vocab_size)
+    ref = Engine(params, cfg,
+                 ServeConfig(bits=4, max_len=32)).generate(prompts, 5)
+    paged_tp = Engine(params, cfg,
+                      ServeConfig(bits=4, max_len=32, kv_bits="fp"),
+                      mesh=make_host_mesh(2)).generate(prompts, 5)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(paged_tp))
+
+
+def test_paged_quant_kv_on_mesh_matches_single_device(dense):
+    """int8 KV pages attended at the int4 slice on an mp=2 mesh emit the
+    same tokens as the identical single-device paged run (the quantized
+    gather/dequant graph is shard-invariant)."""
+    cfg, params = dense
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    one = Engine(params, cfg,
+                 ServeConfig(bits=4, max_len=32,
+                             kv_bits=4)).generate(prompts, 5)
+    tp = Engine(params, cfg,
+                ServeConfig(bits=4, max_len=32, kv_bits=4),
+                mesh=make_host_mesh(2)).generate(prompts, 5)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(tp))
+
+
 # ---------------------------------------------------------------------------
 # mid-flight tier switching on the mesh: one compile per representation
 # ---------------------------------------------------------------------------

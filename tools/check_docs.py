@@ -65,20 +65,33 @@ def check_serve_flags() -> list[str]:
             for f in flags if f not in doc]
 
 
+# sections the field guide must document even when the committed
+# BENCH_serve.json predates them (e.g. regenerated with a --skip-*
+# flag): the dynamic dict-key scan below only sees what was committed
+REQUIRED_BENCH_SECTIONS = ("kv_ab",)
+
+
 def check_bench_sections() -> list[str]:
     bench = ROOT / "BENCH_serve.json"
     serving_md = ROOT / "docs" / "serving.md"
-    if not bench.exists() or not serving_md.exists():
+    if not serving_md.exists():
         return []                       # nothing committed to guard yet
+    doc = serving_md.read_text()
+    errors = [f"docs/serving.md: undocumented BENCH_serve.json section "
+              f"`{key}`"
+              for key in REQUIRED_BENCH_SECTIONS if f"`{key}`" not in doc]
+    if not bench.exists():
+        return errors
     try:
         report = json.loads(bench.read_text())
     except json.JSONDecodeError as e:
-        return [f"BENCH_serve.json: not valid JSON ({e})"]
-    doc = serving_md.read_text()
-    return [f"docs/serving.md: undocumented BENCH_serve.json section "
-            f"`{key}`"
-            for key, val in report.items()
-            if isinstance(val, dict) and f"`{key}`" not in doc]
+        return errors + [f"BENCH_serve.json: not valid JSON ({e})"]
+    errors += [f"docs/serving.md: undocumented BENCH_serve.json section "
+               f"`{key}`"
+               for key, val in report.items()
+               if isinstance(val, dict) and f"`{key}`" not in doc
+               and key not in REQUIRED_BENCH_SECTIONS]
+    return errors
 
 
 def main() -> int:
