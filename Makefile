@@ -4,7 +4,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast test-shard bench-serve lint
+.PHONY: test test-fast test-shard bench-serve analyze lint
 
 test:
 	python -m pytest -x -q
@@ -26,7 +26,13 @@ test-shard:
 bench-serve:
 	python benchmarks/serve_throughput.py --reduced --out BENCH_serve.json
 
-lint:
+# matlint: the serving-contract static analyzer (docs/contracts.md;
+# exit 0 clean / 1 findings / 2 analysis error). Pure stdlib -- needs
+# no jax, so it runs anywhere, incl. its own CI lane.
+analyze:
+	python -m tools.analysis
+
+lint: analyze
 	python -m compileall -q src tests benchmarks examples tools
 	@python -c "import pyflakes" 2>/dev/null \
 	    && python -m pyflakes src/repro tests benchmarks examples tools \

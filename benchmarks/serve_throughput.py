@@ -47,6 +47,12 @@ Reduced runs serve 4 layers (`--layers`) so the Mix'n'Match tier lands
 at 3.5 effective bits -- strictly between int4 and the int2+ep rung's
 3.0 stored bits/weight -- keeping the staircase strict.
 
+Every in-process section that drives a scheduler additionally passes
+through `compile_guard.assert_no_recompiles` and records its per-key
+closure trace counts in the report's top-level `compile_counts` block
+(docs/contracts.md), so a compile-count regression surfaces as a JSON
+diff in review.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py --reduced
 """
 
@@ -63,10 +69,25 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import api
+from repro.runtime.compile_guard import assert_no_recompiles
 from repro.serve import (Engine, Request, ServeConfig, ServeMetrics,
                          SpecDecodeConfig)
 from repro.serve.scheduler import poisson_trace, shared_prefix_trace
 from repro.serve.specdecode import extra_plane_nbytes
+
+# per-section compile counts, assembled into the report's top-level
+# `compile_counts` block (docs/contracts.md, "The compile-count
+# baseline"): every in-process section that drives a scheduler records
+# its per-key closure trace counts here after assert_no_recompiles
+# verified the one-compile-per-key contract. The TP sections run in
+# subprocesses and are covered by tests/test_serve_tp_packed.py instead.
+COMPILE_COUNTS: dict[str, dict] = {}
+
+
+def _record_compiles(section: str, sched, **expectations) -> None:
+    """Trip the compile guard on this section's scheduler and stash the
+    verified per-key trace counts under `section`."""
+    COMPILE_COUNTS[section] = assert_no_recompiles(sched, **expectations)
 
 
 def tier_bytes(sched) -> dict:
@@ -102,7 +123,8 @@ def _pin_router(sched, index: int):
     sched._set_tier(sched.router.tier)
 
 
-def run_once(engine, cfg, args, *, elastic: bool, packed: bool | None = None):
+def run_once(engine, cfg, args, *, elastic: bool, packed: bool | None = None,
+             section: str | None = None):
     sched = engine.scheduler(elastic=elastic, thresholds=args.thresholds,
                              cooldown=args.cooldown, packed=packed)
     trace = poisson_trace(cfg, requests=args.requests,
@@ -138,6 +160,12 @@ def run_once(engine, cfg, args, *, elastic: bool, packed: bool | None = None):
     summary["wall_s"] = wall
     summary["prefill_calls"] = sched.prefill_calls
     per_tier = tier_bytes(sched) if elastic else None
+    if section is not None:
+        # dequant replays (fixed or elastic) share the single key None;
+        # packed replays key per representation -- leave the set open
+        dequant = not (engine.packed if packed is None else packed)
+        _record_compiles(section, sched,
+                         expect_keys={None} if dequant else None)
     return summary, per_tier
 
 
@@ -181,6 +209,7 @@ def run_per_tier_packed(engine, cfg, args):
             "throughput_tok_s": sched.metrics.summary()["throughput_tok_s"],
         }
     nbytes = [info["packed_nbytes"] for info in tiers.values()]
+    _record_compiles("packed_ab_ep", sched)
     return tiers, all(a > b for a, b in zip(nbytes, nbytes[1:]))
 
 
@@ -224,7 +253,9 @@ def run_specdecode_ab(engine, cfg, args):
                           prompt_len=args.prompt_len,
                           gen_tokens=args.gen_tokens,
                           rate=args.arrival_rate, seed=args.seed)
-    _, plain_results, plain_summary = _replay_pinned_int8(engine, args, trace)
+    plain_sched, plain_results, plain_summary = _replay_pinned_int8(
+        engine, args, trace)
+    _record_compiles("specdecode_ab.plain", plain_sched)
     out = {"verify_tier": "int8 (packed)",
            "draft_len": args.draft_len,
            "plain": {"summary": plain_summary,
@@ -236,6 +267,7 @@ def run_specdecode_ab(engine, cfg, args):
                                 draft_len=args.draft_len)
         sched, results, summary = _replay_pinned_int8(engine, args, trace,
                                                       spec=spec)
+        _record_compiles(f"specdecode_ab.{tier_name}", sched)
         draft_params, _ = sched._spec_draft()
         spec_sum = summary["spec"]
         out[tier_name] = {
@@ -339,7 +371,7 @@ def run_tp_ab(args) -> dict:
     return out
 
 
-def _warm_and_replay(engine, args, trace):
+def _warm_and_replay(engine, args, trace, section: str | None = None):
     """Fixed-tier scheduler over one paged engine: warm the closures on
     every admission row bucket, then replay `trace` timed."""
     sched = engine.scheduler()
@@ -362,6 +394,8 @@ def _warm_and_replay(engine, args, trace):
     wall = time.perf_counter() - t0
     summary = sched.metrics.summary()
     summary["wall_s"] = wall
+    if section is not None:
+        _record_compiles(section, sched)
     return results, summary
 
 
@@ -394,7 +428,8 @@ def run_kv_ab(params, cfg, args) -> dict:
     for kv_bits in ("dense", "fp", 8, 4, 2):
         engine = Engine(params, cfg, ServeConfig(
             **base, kv_bits=None if kv_bits == "dense" else kv_bits))
-        results, summary = _warm_and_replay(engine, args, trace)
+        results, summary = _warm_and_replay(engine, args, trace,
+                                            section=f"kv_ab.{kv_bits}")
         assert len(results) == args.requests
         if kv_bits == "dense":
             dense_results = results
@@ -427,7 +462,9 @@ def run_kv_ab(params, cfg, args) -> dict:
             bits=8, max_len=prefix_len + args.prompt_len + args.gen_tokens,
             num_slots=args.num_slots, page_size=args.page_size,
             kv_bits="fp", prefix_cache=on))
-        results, summary = _warm_and_replay(engine, args, ptrace)
+        results, summary = _warm_and_replay(
+            engine, args, ptrace,
+            section=f"kv_ab.prefix_{'on' if on else 'off'}")
         assert len(results) == args.requests
         kv = summary["kv"]
         prefix_ab["on" if on else "off"] = {
@@ -510,6 +547,7 @@ def main(argv=None):
     if args.tp_child:
         return run_tp_child(args)
 
+    COMPILE_COUNTS.clear()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced().replace(num_layers=args.layers)
@@ -520,10 +558,12 @@ def main(argv=None):
 
     print(f"== elastic tiers, {args.requests} Poisson arrivals "
           f"@ {args.arrival_rate}/s ==")
-    elastic, elastic_tiers = run_once(engine, cfg, args, elastic=True)
+    elastic, elastic_tiers = run_once(engine, cfg, args, elastic=True,
+                                      section="elastic")
     print(json.dumps(elastic, indent=2))
     print("== fixed int8, same trace ==")
-    fixed, _ = run_once(engine, cfg, args, elastic=False)
+    fixed, _ = run_once(engine, cfg, args, elastic=False,
+                        section="fixed_int8")
     print(json.dumps(fixed, indent=2))
 
     def _print_tiers(tiers):
@@ -537,7 +577,8 @@ def main(argv=None):
     if not args.skip_packed_ab:
         print("== packed-vs-dequant elastic A/B, same trace ==")
         packed, packed_tiers = run_once(engine, cfg, args, elastic=True,
-                                        packed=True)
+                                        packed=True,
+                                        section="packed_ab.packed")
         packed_ab = {
             "packed": {"summary": packed, "per_tier": packed_tiers,
                        "throughput_tok_s": packed["throughput_tok_s"]},
@@ -560,9 +601,11 @@ def main(argv=None):
             bits=8, max_len=args.prompt_len + args.gen_tokens,
             num_slots=args.num_slots, page_size=args.page_size))
         moe_packed, moe_packed_tiers = run_once(
-            engine_moe, cfg_moe, args, elastic=True, packed=True)
+            engine_moe, cfg_moe, args, elastic=True, packed=True,
+            section="packed_ab_moe.packed")
         moe_dequant, moe_dequant_tiers = run_once(
-            engine_moe, cfg_moe, args, elastic=True, packed=False)
+            engine_moe, cfg_moe, args, elastic=True, packed=False,
+            section="packed_ab_moe.dequant")
         packed_ab_moe = {
             "arch": args.moe_arch + (" (reduced)" if args.reduced else ""),
             "packed": {"summary": moe_packed, "per_tier": moe_packed_tiers,
@@ -651,6 +694,10 @@ def main(argv=None):
         "specdecode_ab": specdecode_ab,
         "kv_ab": kv_ab,
         "packed_ab_tp": packed_ab_tp,
+        # per-section closure trace counts, each verified by
+        # compile_guard.assert_no_recompiles (docs/contracts.md) -- a
+        # diff here is a compile-count regression
+        "compile_counts": dict(COMPILE_COUNTS),
         # headline numbers (the acceptance-criterion fields)
         "throughput_tok_s": elastic["throughput_tok_s"],
         "mean_ttft_s": elastic["mean_ttft_s"],

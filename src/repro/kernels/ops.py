@@ -127,30 +127,29 @@ def _plane_fields(plane, bits):
     """(words, alpha, beta, overflow, bits, pack_axis, slice_bits,
     slice_ep) of a packed plane.
 
-    `PackedPlane` carries bits/pack_axis/extra_precision as static
-    metadata -- the authoritative source (a conflicting `bits=` is an
-    error: unpacking at any other width misreads the words). A plane
-    with `slice_bits` set is an aliased draft view
-    (`core.packing.sliced_view`): words packed at the parent width
-    `bits`, MSB-sliced to `slice_bits` on the fly after the unpack.
-    Legacy `{'words','alpha','beta'}` dicts need `bits` passed
-    explicitly, carry no overflow bitmap, and fall back to the shape
-    heuristic `words.shape[-2] != k` for the pack axis (ambiguous only
-    for planes packed along N whose unpacked N happens to equal
-    ceil(k/cpw))."""
-    if isinstance(plane, packing.PackedPlane):
-        if bits is not None and bits != plane.bits:
-            raise ValueError(
-                f"bits={bits} conflicts with the plane's static bitwidth "
-                f"{plane.bits}; the words can only be unpacked at the "
-                f"width they were packed with")
-        return (plane.words, plane.alpha, plane.beta, plane.overflow,
-                plane.bits, plane.pack_axis, plane.slice_bits,
-                plane.slice_ep)
-    words, alpha, beta = plane["words"], plane["alpha"], plane["beta"]
-    if bits is None:
-        raise ValueError("dict packed planes carry no bitwidth; pass bits=")
-    return words, alpha, beta, None, bits, None, None, False
+    `plane` must be a `core.packing.PackedPlane`: bits, pack_axis, and
+    extra_precision come from its static metadata -- the authoritative
+    source (a conflicting `bits=` is an error: unpacking at any other
+    width misreads the words). A plane with `slice_bits` set is an
+    aliased draft view (`core.packing.sliced_view`): words packed at
+    the parent width `bits`, MSB-sliced to `slice_bits` on the fly
+    after the unpack. (matlint R2 retired the legacy
+    `{'words','alpha','beta'}` dict planes: no in-tree producer builds
+    them, and their bits/pack-axis inference violated the
+    static-metadata contract -- see docs/contracts.md.)"""
+    if not isinstance(plane, packing.PackedPlane):
+        raise TypeError(
+            f"plane must be a core.packing.PackedPlane, got "
+            f"{type(plane).__name__}; legacy dict planes are no longer "
+            f"served (static-metadata contract, docs/contracts.md R2)")
+    if bits is not None and bits != plane.bits:
+        raise ValueError(
+            f"bits={bits} conflicts with the plane's static bitwidth "
+            f"{plane.bits}; the words can only be unpacked at the "
+            f"width they were packed with")
+    return (plane.words, plane.alpha, plane.beta, plane.overflow,
+            plane.bits, plane.pack_axis, plane.slice_bits,
+            plane.slice_ep)
 
 
 def plane_matmul(x, plane, *, bits: int | None = None,
@@ -159,11 +158,9 @@ def plane_matmul(x, plane, *, bits: int | None = None,
 
     The serving integration point: `models.common.qlinear` (and
     `models.ffn.apply_moe` for expert stacks) hands every packed weight
-    plane here. `plane` is a `core.packing.PackedPlane` (bits,
-    pack_axis, and extra_precision come from its static metadata;
-    passing a different `bits=` raises) or a legacy
-    `{'words','alpha','beta'}` dict (bits required, pack axis inferred
-    from shape, no overflow plane).
+    plane here. `plane` is a `core.packing.PackedPlane`: bits,
+    pack_axis, and extra_precision come from its static metadata
+    (passing a different `bits=` raises).
 
     Dispatch table (rows checked in order; `use_kernel` means TPU, or
     interpret mode in kernel tests):
@@ -193,8 +190,6 @@ def plane_matmul(x, plane, *, bits: int | None = None,
      slice_ep) = _plane_fields(plane, bits)
     K, N = x.shape[-1], alpha.shape[-1]
     cpw = packing.codes_per_word(bits)
-    if pack_axis is None:              # legacy dict plane: shape heuristic
-        pack_axis = -2 if words.shape[-2] != K else -1
     packed_k = pack_axis in (-2, words.ndim - 2)
     # the ep bitmap packs 32 codes/word, so the kernel additionally
     # needs K to tile in whole bitmap words

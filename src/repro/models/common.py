@@ -140,8 +140,7 @@ def qlinear(p, x, *, bits, qcfg: QuantConfig, kind: str = "ffn"):
 
     x: (..., d_in); returns (..., d_out) in x.dtype. If `p` holds a
     PACKED plane (a `core.packing.PackedPlane` from
-    serve.engine.materialize_packed_params, or a legacy
-    {'words', 'alpha', 'beta'} dict), it routes through
+    serve.engine.materialize_packed_params), it routes through
     kernels.ops.plane_matmul with the plane's bitwidth static (per-layer
     Mix'n'Match planes each carry their own): the Pallas dequant-matmul
     kernel when qcfg.packed_kernel (TPU / interpret tests), else its jnp
@@ -149,11 +148,9 @@ def qlinear(p, x, *, bits, qcfg: QuantConfig, kind: str = "ffn"):
     """
     from repro.core.packing import PackedPlane
     pw = p.get("w")
-    if isinstance(pw, PackedPlane) or (isinstance(pw, dict) and "words" in pw):
+    if isinstance(pw, PackedPlane):
         from repro.kernels import ops as _ops
-        y = _ops.plane_matmul(
-            x, pw, bits=None if isinstance(pw, PackedPlane) else qcfg.packed_bits,
-            use_kernel=qcfg.packed_kernel)
+        y = _ops.plane_matmul(x, pw, use_kernel=qcfg.packed_kernel)
         return y if p.get("b") is None else y + p["b"].astype(y.dtype)
     w = pw
     b = p.get("b")

@@ -1,3 +1,5 @@
 """Distributed runtime: sharding rules, checkpointing, fault tolerance,
-gradient compression."""
-from repro.runtime import checkpoint, compression, fault, sharding  # noqa: F401
+gradient compression, and the serving compile-count tripwire
+(compile_guard)."""
+from repro.runtime import (checkpoint, compile_guard, compression,  # noqa: F401
+                           fault, sharding)

@@ -1,0 +1,102 @@
+"""Runtime tripwire for the one-compile-per-representation contract.
+
+The serving stack's core compile invariant (docs/contracts.md, rule
+R1's runtime twin): the scheduler's keyed closure caches compile each
+decode-family closure AT MOST once per representation key -- a second
+trace of `decode`/`draft`/`verify` for a key the scheduler already
+visited means static metadata leaked into traced values, a donated
+buffer changed layout, or host data got baked into a closure. Zero
+traces is legitimate (a spec-decode scheduler builds its serving
+tier's plain `decode` closure but steps through `draft`/`verify`
+instead). Prefill closures legitimately retrace once per
+(rows, prompt-length) bucket, so they are counted but not pinned.
+
+`assert_no_recompiles` replaces the hand-rolled
+`sched._fns[key]["decode"]._cache_size() == 1` idiom that had been
+copy-pasted across test_packed_elastic / test_packed_ep /
+test_paged_kv / test_specdecode, and `compile_counts` feeds the
+per-benchmark `compile_counts` baseline in BENCH_serve.json so a
+compile-count regression shows up in review as a JSON diff.
+"""
+
+from __future__ import annotations
+
+__all__ = ["RecompileError", "jit_cache_size", "compile_counts",
+           "assert_no_recompiles", "EXACT_ONCE"]
+
+# closures that must compile at most once per representation key; the
+# prefill family retraces per prompt-shape bucket by design
+EXACT_ONCE = ("decode", "draft", "verify")
+
+
+class RecompileError(AssertionError):
+    """A decode-family closure traced more than once for one key."""
+
+
+def jit_cache_size(fn) -> int:
+    """Number of traces a jitted callable has accumulated.
+
+    jax 0.4.x exposes this as `PjitFunction._cache_size()`; failing
+    loudly on drift beats silently guarding nothing.
+    """
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        raise RuntimeError(
+            f"{fn!r} exposes no _cache_size(); jax version drift -- "
+            f"update repro.runtime.compile_guard.jit_cache_size")
+    return int(probe())
+
+
+def compile_counts(sched) -> dict:
+    """Per-key trace counts of a scheduler's compiled-closure cache.
+
+    Returns `{"per_key": {repr(key): {closure: traces}}, "total": n}`
+    -- JSON-ready (keys stringified via repr, so tuple keys like
+    `(2, 'ep')` or `('spec', ('slice', 2), 8)` survive serialization).
+    """
+    per_key = {
+        repr(key): {name: jit_cache_size(fn) for name, fn in fns.items()}
+        for key, fns in sched._fns.items()
+    }
+    total = sum(n for fns in per_key.values() for n in fns.values())
+    return {"per_key": per_key, "total": total}
+
+
+def assert_no_recompiles(sched, *, expect_keys=None, require_keys=None):
+    """Assert no decode-family closure compiled more than once per key.
+
+    expect_keys: exact set the closure cache must equal (catches both
+        missing representations and stray extra compiles for keys that
+        should never have been visited).
+    require_keys: subset the cache must at least contain (for paths
+        that legitimately build additional keys, e.g. spec-decode
+        schedulers that also keep their serving tier's closures).
+
+    Returns `compile_counts(sched)` so callers can log or persist the
+    verified baseline in the same breath.
+    """
+    have = set(sched._fns)
+    if expect_keys is not None and have != set(expect_keys):
+        raise RecompileError(
+            f"closure-cache keys {sorted(map(repr, have))} != expected "
+            f"{sorted(map(repr, set(expect_keys)))}")
+    if require_keys is not None and not set(require_keys) <= have:
+        missing = set(require_keys) - have
+        raise RecompileError(
+            f"closure cache missing required keys "
+            f"{sorted(map(repr, missing))} (have {sorted(map(repr, have))})")
+    offenders = []
+    for key, fns in sched._fns.items():
+        for name in EXACT_ONCE:
+            fn = fns.get(name)
+            if fn is None:
+                continue
+            n = jit_cache_size(fn)
+            if n > 1:
+                offenders.append(f"{key!r}:{name} traced {n}x "
+                                 f"(revisits must be cache hits)")
+    if offenders:
+        raise RecompileError(
+            "one-compile-per-key contract violated: "
+            + "; ".join(offenders))
+    return compile_counts(sched)

@@ -321,9 +321,10 @@ class ContinuousBatchingScheduler:
                             this single closure serves every one of
                             them with no retrace on a switch.
 
-        The closure only needs cfg.quant.packed_bits for legacy dict
-        planes (PackedPlane is self-describing), hence the int-only
-        passthrough below.
+        The closure never reads cfg.quant.packed_bits at trace time
+        (PackedPlane is self-describing); `_rep_cfg` keeps the field
+        coherent with the representation being served for config
+        introspection only.
         """
         if self.kv is not None:
             return self._paged_step_fns(key)
@@ -431,8 +432,8 @@ class ContinuousBatchingScheduler:
 
     def _rep_cfg(self, key):
         """cfg with quant adjusted for one representation key (the
-        closure-trace config: packed bitwidth only matters for legacy
-        dict planes -- PackedPlane is self-describing -- and the Pallas
+        closure-trace config: PackedPlane is self-describing, so
+        packed_bits is introspection-only bookkeeping, and the Pallas
         kernel turns on where it compiles)."""
         cfg = self.cfg
         if key:

@@ -1,0 +1,353 @@
+"""matlint (tools.analysis): per-rule pass/fail fixtures + src/ clean.
+
+Each rule family gets at least one snippet that must pass and one that
+must fail (the failing snippets are distilled from the real bug each
+rule exists to catch); the self-check at the bottom pins the actual
+tree to zero findings under the committed allowlist, so a contract
+regression anywhere in src/repro/ fails THIS test even before the CI
+`analyze` lane runs. Pure stdlib -- no jax import anywhere in the
+analyzer, so these tests stay in the fast tier-1 lane.
+"""
+
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.analysis import (DEFAULT_ALLOWLIST, RULE_IDS, RULES,  # noqa: E402
+                            analyze_sources, collect_files, load_allowlist)
+
+SERVE = "src/repro/serve/_fixture.py"     # synthetic scope-carrying paths
+MODELS = "src/repro/models/_fixture.py"
+
+
+def run(src, rel=SERVE, allowlist=frozenset()):
+    findings, suppressed = analyze_sources([(rel, src)],
+                                           allowlist=allowlist)
+    return findings, suppressed
+
+
+def rules_hit(src, rel=SERVE):
+    return {f.rule for f in run(src, rel)[0]}
+
+
+# -- R1: jit-site registry --------------------------------------------------
+
+
+R1_PASS = """
+import jax
+
+class Sched:
+    def _step_fns(self, key):
+        def decode(p, st, tok):
+            return p, st
+        fns = {"decode": jax.jit(decode, donate_argnums=(1,))}
+        self._fns[key] = fns
+        return fns
+"""
+
+R1_FAIL = """
+import jax
+
+class Sched:
+    def handle_request(self, req):
+        step = jax.jit(lambda p, st: (p, st))   # per-request jit: bomb
+        return step(self.params, self.state)
+"""
+
+
+def test_r1_registered_closure_cache_passes():
+    assert "R1" not in rules_hit(R1_PASS)
+
+
+def test_r1_unregistered_jit_site_fails():
+    findings, _ = run(R1_FAIL)
+    assert [f.rule for f in findings] == ["R1"]
+    assert findings[0].qualname == "Sched.handle_request"
+
+
+def test_r1_out_of_scope_module_ignored():
+    # kernels/ and train/ own their module-level jits; R1 is a serving
+    # rule
+    assert "R1" not in rules_hit(R1_FAIL, rel="src/repro/train/_fixture.py")
+    assert "R1" in rules_hit(R1_FAIL, rel=MODELS)
+
+
+def test_r1_allowlist_suppresses():
+    key = f"R1 {SERVE}::Sched.handle_request"
+    findings, suppressed = run(R1_FAIL, allowlist=frozenset({key}))
+    assert not findings and len(suppressed) == 1
+
+
+# -- R2: static-metadata hygiene --------------------------------------------
+
+
+R2_META_PASS = """
+from repro.core.packing import PackedPlane
+
+def build(words, alpha, beta, c):
+    return PackedPlane(words=words, alpha=alpha, beta=beta, bits=int(c),
+                       pack_axis=-2)
+"""
+
+R2_META_FAIL = """
+import jax.numpy as jnp
+from repro.core.packing import PackedPlane
+
+def build(words, alpha, beta, c):
+    # bits as a traced array: the treedef stops hashing, every step
+    # retraces
+    return PackedPlane(words=words, alpha=alpha, beta=beta,
+                       bits=jnp.asarray(c), pack_axis=-2)
+"""
+
+R2_DICT_FAIL = """
+def consume(plane):
+    return plane["words"], plane["alpha"]
+"""
+
+R2_DUCK_FAIL = """
+def probe(pw):
+    return isinstance(pw, dict) and "words" in pw
+"""
+
+R2_BRANCH_PASS = """
+import jax
+
+def decode(p, x, overflow):
+    if x.ndim == 2 and overflow is None:     # static: shape + structure
+        return p
+    return x
+
+decode_fn = jax.jit(decode)
+"""
+
+R2_BRANCH_FAIL = """
+import jax
+
+def decode(p, x):
+    if x > 0:                                # traced value: runtime error
+        return p
+    return x
+
+decode_fn = jax.jit(decode)
+"""
+
+R2_STATIC_ARGNAMES_PASS = """
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def kernel(x, block_n):
+    assert block_n % 8 == 0                  # static by declaration
+    return x
+"""
+
+
+@pytest.mark.parametrize("src", [R2_META_PASS, R2_BRANCH_PASS,
+                                 R2_STATIC_ARGNAMES_PASS])
+def test_r2_clean_snippets_pass(src):
+    assert "R2" not in rules_hit(src)
+
+
+@pytest.mark.parametrize("src,needle", [
+    (R2_META_FAIL, "static metadata field `bits`"),
+    (R2_DICT_FAIL, "dict-style packed-plane field access"),
+    (R2_DUCK_FAIL, "dict-style packed-plane detection"),
+    (R2_BRANCH_FAIL, "Python if on data leaf `x`"),
+])
+def test_r2_violations_fail(src, needle):
+    findings, _ = run(src)
+    assert any(f.rule == "R2" and needle in f.message for f in findings), \
+        [f.format() for f in findings]
+
+
+def test_r2_jitted_name_is_module_local():
+    # an inner closure `prefill` jitted in THIS module must not
+    # implicate an unrelated top-level `prefill` in another module
+    other = """
+def prefill(p, cfg):
+    if cfg.use_bias:          # host config branch: fine, not jitted here
+        return p
+    return None
+"""
+    findings, _ = analyze_sources(
+        [(SERVE, R2_BRANCH_FAIL.replace("decode", "prefill")),
+         ("src/repro/models/api2.py", other)])
+    assert all(f.path == SERVE for f in findings)
+
+
+# -- R3: donation discipline ------------------------------------------------
+
+
+R3_PASS = """
+import jax
+
+class Sched:
+    def __init__(self, fn):
+        self._copy_fn = jax.jit(fn, donate_argnums=(0,))
+
+    def step(self):
+        self.state = self._copy_fn(self.state)   # rebind over donation
+        return self.state
+"""
+
+R3_FAIL = """
+import jax
+
+class Sched:
+    def __init__(self, fn):
+        self._copy_fn = jax.jit(fn, donate_argnums=(0,))
+
+    def step(self):
+        out = self._copy_fn(self.state)
+        return out, self.state      # read after donate: garbage bytes
+"""
+
+R3_DICT_FAIL = """
+import jax
+
+def build(decode):
+    fns = {"decode": jax.jit(decode, donate_argnums=(1,))}
+    return fns
+
+def drive(fns, p, st):
+    toks, new_st = fns["decode"](p, st)
+    return toks, st.sum()           # stale donated buffer
+"""
+
+R3_ALIAS_PASS = """
+import jax
+
+def build(decode):
+    return {"decode": jax.jit(decode, donate_argnums=(1,))}
+
+def drive(fns, p, st):
+    decode_fn = fns["decode"]
+    for _ in range(4):
+        toks, st = decode_fn(p, st)     # donated arg rebound each call
+    return toks, st
+"""
+
+
+def test_r3_rebind_over_donation_passes():
+    assert "R3" not in rules_hit(R3_PASS)
+    assert "R3" not in rules_hit(R3_ALIAS_PASS)
+
+
+def test_r3_read_after_donate_fails():
+    findings, _ = run(R3_FAIL)
+    r3 = [f for f in findings if f.rule == "R3"]
+    assert len(r3) == 1 and "self.state" in r3[0].message
+    # R3_PASS differs only in rebinding the result over the donated
+    # buffer, so the flag is the read, not the donation itself
+    assert not [f for f in run(R3_PASS)[0] if f.rule == "R3"]
+
+
+def test_r3_dict_bound_closure_tracked():
+    findings, _ = run(R3_DICT_FAIL)
+    assert any(f.rule == "R3" and "`st`" in f.message for f in findings)
+
+
+# -- R4: host-data contract -------------------------------------------------
+
+
+R4_PASS = """
+import jax
+
+class Sched:
+    def _step_fns(self, key):
+        cfg = self.cfg              # static trace config: fine to capture
+        def decode(p, st, tok, pos, ptab):
+            return p, st            # page table flows in as an argument
+        return {"decode": jax.jit(decode, donate_argnums=(1,))}
+"""
+
+R4_SELF_FAIL = """
+import jax
+
+class Sched:
+    def _step_fns(self, key):
+        def decode(p, st, tok):
+            return p[self.pos], st       # scheduler state in the graph
+        return {"decode": jax.jit(decode, donate_argnums=(1,))}
+"""
+
+R4_CAPTURE_FAIL = """
+import jax
+
+class Sched:
+    def _step_fns(self, key):
+        ptab = self.pool.page_table()
+        def decode(p, st, tok):
+            return p[ptab], st           # baked-in per-request page table
+        return {"decode": jax.jit(decode, donate_argnums=(1,))}
+"""
+
+
+def test_r4_arguments_pass():
+    assert "R4" not in rules_hit(R4_PASS)
+
+
+def test_r4_self_capture_fails():
+    findings, _ = run(R4_SELF_FAIL)
+    assert any(f.rule == "R4" and "`self`" in f.message for f in findings)
+
+
+def test_r4_host_data_capture_fails():
+    findings, _ = run(R4_CAPTURE_FAIL)
+    assert any(f.rule == "R4" and "`ptab`" in f.message for f in findings)
+
+
+def test_r4_scoped_to_serve():
+    assert "R4" not in rules_hit(R4_CAPTURE_FAIL,
+                                 rel="src/repro/train/_fixture.py")
+
+
+# -- the tree itself + CLI contract -----------------------------------------
+
+
+def _src_sources():
+    files = collect_files(["src/repro"])
+    return [(p.relative_to(ROOT).as_posix(), p.read_text()) for p in files]
+
+
+def test_src_tree_is_clean_under_committed_allowlist():
+    allowlist = load_allowlist(DEFAULT_ALLOWLIST)
+    findings, suppressed = analyze_sources(_src_sources(),
+                                           allowlist=allowlist)
+    assert not findings, [f.format() for f in findings]
+    # the allowlist is exercised, not vestigial: the engine's legacy
+    # closures and the scheduler's COW copy closure report through it
+    assert {f.allow_key for f in suppressed} == set(allowlist)
+
+
+def test_every_rule_has_id_title_rationale():
+    assert RULE_IDS == ("R1", "R2", "R3", "R4")
+    for rule in RULES:
+        assert rule.title and len(rule.rationale) > 40
+
+
+def test_cli_exit_codes(tmp_path):
+    env_cmd = [sys.executable, "-m", "tools.analysis"]
+    # 0: clean tree (default paths + committed allowlist)
+    ok = subprocess.run(env_cmd, cwd=ROOT, capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    # 1: findings (R2 dict-plane access has no path scoping)
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(plane):\n    return plane['words']\n")
+    hit = subprocess.run(env_cmd + [str(bad)], cwd=ROOT,
+                         capture_output=True, text=True)
+    assert hit.returncode == 1 and "R2" in hit.stdout
+    # 2: analysis errors -- unparseable file, missing path, bad rule id
+    broken = tmp_path / "broken.py"
+    broken.write_text("def f(:\n")
+    for args in ([str(broken)], ["no/such/dir"], ["--rules", "R9"]):
+        err = subprocess.run(env_cmd + args, cwd=ROOT,
+                             capture_output=True, text=True)
+        assert err.returncode == 2, (args, err.stdout, err.stderr)

@@ -12,6 +12,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.packing import PackedPlane
 from repro.models import api
+from repro.runtime.compile_guard import assert_no_recompiles
 from repro.serve import (Engine, Request, ServeConfig, TierCache,
                          default_tiers, materialize_packed_params,
                          materialize_served_params)
@@ -117,13 +118,11 @@ def test_tier_switch_no_recompile_within_bitwidth_and_exact_results(served):
     # across every switch (identical dequant math)
     for uid in rd:
         np.testing.assert_array_equal(rp[uid], rd[uid])
-    # one compiled closure pair per packed bitwidth, warmed lazily...
-    assert set(sp._fns) == {8, 4, 2}
-    assert set(sd._fns) == {None}
-    # ...and revisiting a bitwidth reused it: exactly one decode compile
-    # per bitwidth even though each tier was served multiple times
-    for key in (8, 4, 2):
-        assert sp._fns[key]["decode"]._cache_size() == 1
+    # one compiled closure pair per packed bitwidth, warmed lazily, and
+    # revisiting a bitwidth reused it: exactly one decode compile per
+    # bitwidth even though each tier was served multiple times
+    assert_no_recompiles(sp, expect_keys={8, 4, 2})
+    assert_no_recompiles(sd, expect_keys={None})
 
 
 def test_scheduler_accepts_packed_fixed_tier(served, monkeypatch):
@@ -141,7 +140,7 @@ def test_scheduler_accepts_packed_fixed_tier(served, monkeypatch):
                                  cfg.vocab_size)
     out = np.asarray(eng.generate(prompts, 4))   # facade -> scheduler path
     batch_sched = next(iter(eng._schedulers.values()))
-    assert set(batch_sched._fns) == {4}          # packed-bitwidth closure
+    assert_no_recompiles(batch_sched, expect_keys={4})   # packed-bitwidth closure
     ref = Engine(params, cfg, ServeConfig(bits=4, max_len=32, num_slots=2,
                                           page_size=8))
     np.testing.assert_array_equal(out, np.asarray(ref.generate(prompts, 4)))

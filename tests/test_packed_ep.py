@@ -22,6 +22,7 @@ from repro.serve import (Engine, Request, ServeConfig, TierCache,
                          default_tiers, materialize_packed_params,
                          materialize_served_params)
 from repro.serve.engine import build_packed_parent
+from repro.runtime.compile_guard import assert_no_recompiles
 
 KEY = jax.random.PRNGKey(0)
 
@@ -206,10 +207,8 @@ def test_midflight_downgrade_into_int2_ep_no_recompile_on_revisit(served):
     # one closure per representation: the ep rung keys (2, "ep"),
     # distinct from plain int2's 2 -- and revisiting either never
     # recompiled (exactly one decode trace per key)
-    assert {8, 2, (2, "ep")} <= set(sp._fns)
-    assert set(sd._fns) == {None}
-    for key in (8, 2, (2, "ep")):
-        assert sp._fns[key]["decode"]._cache_size() == 1
+    assert_no_recompiles(sp, require_keys={8, 2, (2, "ep")})
+    assert_no_recompiles(sd, expect_keys={None})
 
 
 def test_engine_packed_ep_generate_matches_dequant(served, monkeypatch):
@@ -226,7 +225,7 @@ def test_engine_packed_ep_generate_matches_dequant(served, monkeypatch):
                                  cfg.vocab_size)
     out = np.asarray(eng.generate(prompts, 4))
     batch_sched = next(iter(eng._schedulers.values()))
-    assert set(batch_sched._fns) == {(2, "ep")}
+    assert_no_recompiles(batch_sched, expect_keys={(2, "ep")})
     ref = Engine(params, cfg, ServeConfig(bits=2, max_len=32, num_slots=2,
                                           page_size=8, extra_precision=True))
     np.testing.assert_array_equal(out, np.asarray(ref.generate(prompts, 4)))

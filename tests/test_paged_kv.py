@@ -28,6 +28,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import quant
 from repro.models import api, attention as attn
+from repro.runtime.compile_guard import assert_no_recompiles
 from repro.serve import (Engine, KVCacheConfig, PagedPool, Request,
                          ServeConfig, SpecDecodeConfig)
 from repro.serve.kv_cache import kv_bits_for_rep
@@ -366,3 +367,5 @@ def test_elastic_auto_kv_width_compiles_per_rep(dense):
     assert keys and len(keys) == len(set(keys))
     for k in keys:                       # dequantized tiers read full int8
         assert k[-1] == 8
+    # every visited (rep, kv-width) closure set compiled exactly once
+    assert_no_recompiles(sched, require_keys=set(keys))

@@ -29,6 +29,7 @@ from repro.configs import get_config
 from repro.core import packing
 from repro.kernels import ops
 from repro.models import api
+from repro.runtime.compile_guard import assert_no_recompiles
 from repro.serve import (Engine, Request, ServeConfig, SpecDecodeConfig,
                          accept_lengths, extra_plane_nbytes)
 from repro.serve import engine as engine_mod
@@ -352,11 +353,9 @@ def test_one_compile_per_key_pair(dense, monkeypatch):
     eng.generate(prompts, 8, spec_decode=sd)     # revisit: cached closures
     sched = next(iter(eng._schedulers.values()))
     key = ("spec", ("slice", 2), 8)
-    assert key in sched._fns
-    assert sched._fns[key]["draft"]._cache_size() == 1
-    assert sched._fns[key]["verify"]._cache_size() == 1
-    # the plain prefill closure rode along under the verify tier's key
-    assert 8 in sched._fns
+    # one draft + one verify trace for the pair key, and the plain
+    # prefill closure rode along under the verify tier's key
+    assert_no_recompiles(sched, require_keys={key, 8})
 
 
 def test_spec_key_never_collides_with_mixnmatch(dense):

@@ -1,0 +1,2 @@
+"""Repo tooling: docs guards (check_docs) and the matlint static
+analyzer (tools.analysis)."""

@@ -1,0 +1,91 @@
+"""matlint: contract-enforcing static analysis for the MatQuant
+serving stack.
+
+Four rule families over `src/repro/` (see docs/contracts.md for the
+full invariant catalogue):
+
+  R1  jit-site registry        every jax.jit / pl.pallas_call in
+                               serve/ + models/ lives in a registered
+                               closure cache or the allowlist
+  R2  static-metadata hygiene  PackedPlane / SpecDecodeConfig aux
+                               fields stay Python scalars; no dict
+                               plane access; no Python branches on
+                               data leaves in jitted bodies
+  R3  donation discipline      donated arguments are never read after
+                               the donating call
+  R4  host-data contract       jitted closures take host metadata as
+                               arguments, never capture it
+
+Run `python -m tools.analysis` (or `make analyze`). Exit codes:
+0 = clean, 1 = findings, 2 = usage/parse error. Pure stdlib -- the
+pass parses, never imports, so it needs no jax.
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+from .base import Finding, Module
+from .rules import RULE_IDS, RULES, Context, build_context
+
+__all__ = ["Finding", "Module", "RULES", "RULE_IDS", "Context",
+           "analyze_sources", "collect_files", "load_allowlist", "ROOT"]
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
+DEFAULT_ALLOWLIST = pathlib.Path(__file__).resolve().parent / "allowlist.txt"
+
+
+def load_allowlist(path: pathlib.Path) -> frozenset[str]:
+    """Allowlist entries: `RULE path::qualname` per line, `#` comments
+    (inline or whole-line) stripped."""
+    entries = set()
+    for raw in path.read_text().splitlines():
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split(None, 1)
+        if len(parts) != 2 or "::" not in parts[1]:
+            raise ValueError(
+                f"{path}: malformed allowlist line {raw!r} "
+                f"(expected `RULE path::qualname`)")
+        entries.add(f"{parts[0]} {parts[1]}")
+    return frozenset(entries)
+
+
+def collect_files(paths: list[str]) -> list[pathlib.Path]:
+    """Expand CLI path operands (files or directories) to .py files."""
+    files: list[pathlib.Path] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if not path.is_absolute():
+            path = ROOT / path
+        if path.is_dir():
+            files += sorted(path.rglob("*.py"))
+        elif path.is_file():
+            files.append(path)
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+    return files
+
+
+def analyze_sources(sources: list[tuple[str, str]], rules=None,
+                    allowlist: frozenset[str] = frozenset()):
+    """Run `rules` (default: all) over (rel_path, source) pairs.
+
+    Returns (findings, suppressed): findings whose `allow_key` matches
+    an allowlist entry land in `suppressed`. Rule scoping is by the
+    rel_path string, so tests can exercise serve/-scoped rules on
+    fixture snippets by passing a synthetic path.
+    """
+    rules = RULES if rules is None else rules
+    modules = [Module(rel, src) for rel, src in sources]
+    ctx = build_context(modules)
+    findings: list[Finding] = []
+    suppressed: list[Finding] = []
+    for mod in modules:
+        for rule in rules:
+            for f in rule.check(mod, ctx):
+                (suppressed if f.allow_key in allowlist
+                 else findings).append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, suppressed

@@ -1,0 +1,81 @@
+"""CLI driver: `python -m tools.analysis [paths...]`.
+
+Exit codes (stable, scripted against by CI and Makefile):
+  0  analyzed tree is clean (allowlisted sites report as suppressed)
+  1  at least one finding
+  2  usage error, missing path, unreadable allowlist, or a file that
+     does not parse (syntax errors are analysis failures, not lint
+     findings)
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from . import (DEFAULT_ALLOWLIST, ROOT, RULES, analyze_sources,
+               collect_files, load_allowlist)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="matlint: serving-contract static analysis (R1-R4)")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files/directories to analyze "
+                         "(default: src/repro, relative to repo root)")
+    ap.add_argument("--allowlist", default=str(DEFAULT_ALLOWLIST),
+                    metavar="FILE",
+                    help="allowlist file (`RULE path::qualname` lines); "
+                         "default: tools/analysis/allowlist.txt")
+    ap.add_argument("--rules", default=None, metavar="R1,R2",
+                    help="comma-separated subset of rule ids to run")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            print(f"{rule.rule_id}  {rule.title}")
+            print(f"    {rule.rationale}")
+        return 0
+
+    rules = RULES
+    if args.rules:
+        wanted = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = wanted - {r.rule_id for r in RULES}
+        if unknown:
+            print(f"matlint: unknown rule id(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+        rules = tuple(r for r in RULES if r.rule_id in wanted)
+
+    try:
+        allow_path = pathlib.Path(args.allowlist)
+        if not allow_path.is_absolute():
+            allow_path = ROOT / allow_path
+        allowlist = load_allowlist(allow_path)
+        files = collect_files(args.paths or ["src/repro"])
+        sources = []
+        for path in files:
+            rel = path.relative_to(ROOT).as_posix() \
+                if path.is_relative_to(ROOT) else str(path)
+            sources.append((rel, path.read_text()))
+        findings, suppressed = analyze_sources(sources, rules=rules,
+                                               allowlist=allowlist)
+    except (OSError, ValueError, SyntaxError) as e:
+        print(f"matlint: error: {e}", file=sys.stderr)
+        return 2
+
+    for f in findings:
+        print(f.format())
+    ids = ",".join(r.rule_id for r in rules)
+    print(f"matlint: {len(findings)} finding(s) "
+          f"({len(suppressed)} allowlisted) across {len(sources)} "
+          f"file(s), rules {ids}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

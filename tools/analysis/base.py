@@ -1,0 +1,156 @@
+"""Shared AST plumbing for matlint (tools.analysis).
+
+matlint parses, never imports: every rule runs over `ast` trees, so the
+pass needs no jax (the CI `analyze` lane is stdlib-only) and cannot be
+confused by import-time side effects. The helpers here give rules the
+three things `ast` does not: parent links, enclosing-def qualnames
+(the unit of allowlisting), and dotted-name resolution for call sites
+like `jax.jit` / `pl.pallas_call` / `functools.partial(jax.jit, ...)`.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str           # "R1".."R4"
+    path: str           # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    qualname: str = "<module>"   # enclosing def -- the allowlist unit
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
+               f"{self.message}"
+
+    @property
+    def allow_key(self) -> str:
+        """`R1 src/repro/serve/engine.py::Engine.__init__` -- the exact
+        line an operator adds to the allowlist to accept this site."""
+        return f"{self.rule} {self.path}::{self.qualname}"
+
+
+class Module:
+    """One parsed file: tree + parent links + qualname resolution."""
+
+    def __init__(self, rel: str, source: str):
+        self.rel = rel
+        self.tree = ast.parse(source, filename=rel)
+        self._parents: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self._parents[child] = node
+
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST):
+        while node in self._parents:
+            node = self._parents[node]
+            yield node
+
+    def enclosing_defs(self, node: ast.AST) -> list[ast.FunctionDef]:
+        """FunctionDef ancestors, innermost first."""
+        return [a for a in self.ancestors(node)
+                if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+    def qualname(self, node: ast.AST) -> str:
+        parts = []
+        for a in self.ancestors(node):
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+                parts.append(a.name)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def enclosing_stmt(self, node: ast.AST) -> ast.stmt | None:
+        """The statement containing `node` (node itself if a stmt)."""
+        while node is not None and not isinstance(node, ast.stmt):
+            node = self._parents.get(node)
+        return node
+
+    def module_names(self) -> set[str]:
+        """Names bound at module level (imports, defs, assigns) --
+        closure free-variable analysis treats these as static."""
+        names: set[str] = set()
+        for stmt in self.tree.body:
+            if isinstance(stmt, ast.Import):
+                names |= {(a.asname or a.name).split(".")[0]
+                          for a in stmt.names}
+            elif isinstance(stmt, ast.ImportFrom):
+                names |= {a.asname or a.name for a in stmt.names}
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                names.add(stmt.name)
+            elif isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            names.add(n.id)
+        return names
+
+
+def dotted_name(expr: ast.AST) -> str | None:
+    """`jax.jit` for an Attribute chain over a Name; None otherwise."""
+    parts = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        parts.append(expr.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+JIT_NAMES = {"jax.jit", "jit", "jax.pjit", "pjit"}
+PALLAS_SUFFIX = "pallas_call"
+
+
+def _is_jit_name(name: str | None) -> bool:
+    return bool(name) and (name in JIT_NAMES
+                           or name == PALLAS_SUFFIX
+                           or name.endswith("." + PALLAS_SUFFIX))
+
+
+def is_jit_call(call: ast.Call) -> bool:
+    """True for `jax.jit(...)`, `pl.pallas_call(...)`, and the partial
+    spelling `functools.partial(jax.jit, ...)`."""
+    name = dotted_name(call.func)
+    if _is_jit_name(name):
+        return True
+    if name in ("functools.partial", "partial") and call.args:
+        return _is_jit_name(dotted_name(call.args[0]))
+    return False
+
+
+def is_jit_decorator(dec: ast.AST) -> bool:
+    """True for `@jax.jit` / `@jit` and `@partial(jax.jit, ...)`."""
+    if isinstance(dec, ast.Call):
+        return is_jit_call(dec)
+    return _is_jit_name(dotted_name(dec))
+
+
+def jit_target(call: ast.Call) -> ast.AST | None:
+    """The traced callable: first positional arg of the jit call (the
+    second for the functools.partial spelling)."""
+    args = call.args
+    if dotted_name(call.func) in ("functools.partial", "partial"):
+        args = args[1:]
+    return args[0] if args else None
+
+
+def const_str(node: ast.AST) -> str | None:
+    """The value of a string-constant node (handles the pre-3.9
+    `ast.Index` subscript wrapper), else None."""
+    if isinstance(node, ast.Index):        # pragma: no cover (py<3.9)
+        node = node.value
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

@@ -1,0 +1,539 @@
+"""matlint rules R1-R4: the serving stack's load-bearing contracts.
+
+Each rule class carries `rule_id`, `title`, and `rationale` (surfaced
+by `--list-rules` and cross-checked against docs/contracts.md by
+tools/check_docs.py) plus `check(module, ctx) -> list[Finding]`.
+Allowlist filtering happens centrally in `tools.analysis.run` on
+`Finding.allow_key`, so every rule just reports what it sees.
+"""
+
+from __future__ import annotations
+
+import ast
+import builtins
+import dataclasses
+import re
+
+from .base import (Finding, Module, const_str, dotted_name, is_jit_call,
+                   is_jit_decorator, jit_target)
+
+
+@dataclasses.dataclass(frozen=True)
+class JitInfo:
+    """Which of a jitted callable's parameters jit treats as static."""
+
+    static_names: frozenset[str] = frozenset()
+    static_nums: frozenset[int] = frozenset()
+
+    def merged(self, other: "JitInfo") -> "JitInfo":
+        return JitInfo(self.static_names | other.static_names,
+                       self.static_nums | other.static_nums)
+
+
+def _static_info(call: ast.Call) -> JitInfo:
+    """static_argnames/static_argnums declared at a jit call site
+    (literal strings/ints only; anything dynamic is ignored)."""
+    names: set[str] = set()
+    nums: set[int] = set()
+    for kw in call.keywords:
+        vals = (kw.value.elts
+                if isinstance(kw.value, (ast.Tuple, ast.List))
+                else [kw.value])
+        for v in vals:
+            if not isinstance(v, ast.Constant):
+                continue
+            if kw.arg == "static_argnames" and isinstance(v.value, str):
+                names.add(v.value)
+            elif kw.arg == "static_argnums" and isinstance(v.value, int):
+                nums.add(v.value)
+    return JitInfo(frozenset(names), frozenset(nums))
+
+
+@dataclasses.dataclass
+class Context:
+    """Cross-file facts shared by all rules for one analysis run.
+
+    R2c needs to know which FunctionDefs are traced by jax.jit. A jit
+    target spelled as a bare Name (`jax.jit(prefill)`) or a decorator
+    can only refer to a def in the SAME module; an Attribute target
+    (`jax.jit(kv_cache.copy_pages, ...)`) may live anywhere, so those
+    match by last segment across the file set. Keeping the two maps
+    separate stops an inner closure named `prefill` in one module from
+    implicating an unrelated top-level `prefill` in another.
+    """
+
+    local_jitted: dict[str, dict[str, JitInfo]] = dataclasses.field(
+        default_factory=dict)          # module rel -> def name -> info
+    attr_jitted: dict[str, JitInfo] = dataclasses.field(
+        default_factory=dict)          # last-segment name -> info
+
+    def jit_info(self, mod_rel: str, def_name: str) -> JitInfo | None:
+        info = self.local_jitted.get(mod_rel, {}).get(def_name)
+        if info is not None:
+            return info
+        return self.attr_jitted.get(def_name)
+
+
+def build_context(modules: list[Module]) -> Context:
+    ctx = Context()
+
+    def _add(table: dict, key: str, info: JitInfo):
+        table[key] = table[key].merged(info) if key in table else info
+
+    for mod in modules:
+        local = ctx.local_jitted.setdefault(mod.rel, {})
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and is_jit_call(node):
+                target = jit_target(node)
+                info = _static_info(node)
+                if isinstance(target, ast.Name):
+                    _add(local, target.id, info)
+                elif isinstance(target, ast.Attribute):
+                    name = dotted_name(target)
+                    if name:
+                        _add(ctx.attr_jitted, name.rsplit(".", 1)[-1], info)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if is_jit_decorator(dec):
+                        info = (_static_info(dec)
+                                if isinstance(dec, ast.Call) else JitInfo())
+                        _add(local, node.name, info)
+    return ctx
+
+
+# -- R1: jit-site registry --------------------------------------------------
+
+class JitSiteRegistry:
+    rule_id = "R1"
+    title = "jit-site registry"
+    rationale = (
+        "every jax.jit / pl.pallas_call in src/repro/serve/ and "
+        "src/repro/models/ must live inside a registered closure-cache "
+        "builder (_step_fns, _paged_step_fns, _spec_fns) or be "
+        "explicitly allowlisted -- a stray per-request jit is a "
+        "recompile bomb, not a style nit")
+
+    SCOPE = ("src/repro/serve/", "src/repro/models/")
+    REGISTERED_BUILDERS = frozenset(
+        {"_step_fns", "_paged_step_fns", "_spec_fns"})
+
+    def check(self, mod: Module, ctx: Context) -> list[Finding]:
+        if not mod.rel.startswith(self.SCOPE):
+            return []
+        sites: list[ast.AST] = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and is_jit_call(node):
+                sites.append(node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                sites += [d for d in node.decorator_list
+                          if is_jit_decorator(d)]
+        out = []
+        for node in sites:
+            defs = {d.name for d in mod.enclosing_defs(node)}
+            if defs & self.REGISTERED_BUILDERS:
+                continue
+            qn = mod.qualname(node)
+            out.append(Finding(
+                self.rule_id, mod.rel, node.lineno, node.col_offset,
+                f"jit/pallas_call site outside a registered closure cache "
+                f"({', '.join(sorted(self.REGISTERED_BUILDERS))}); route it "
+                f"through a keyed cache or add `R1 {mod.rel}::{qn}` to the "
+                f"allowlist", qualname=qn))
+        return out
+
+
+# -- R2: static-metadata hygiene --------------------------------------------
+
+class StaticMetadataHygiene:
+    rule_id = "R2"
+    title = "static-metadata hygiene"
+    rationale = (
+        "PackedPlane / SpecDecodeConfig aux fields (bits, pack_axis, "
+        "extra_precision, slice_bits, slice_ep, draft_*) are pytree "
+        "STATIC metadata: assigning them from array-valued expressions "
+        "makes the treedef unhashable and every step a retrace; "
+        "dict-style plane['words'] access bypasses the static contract "
+        "entirely; and a Python if/assert on a data leaf inside a "
+        "jitted body is a TracerBoolConversionError at runtime")
+
+    META_FIELDS = frozenset({
+        "bits", "pack_axis", "extra_precision", "slice_bits", "slice_ep",
+        "draft_bits", "draft_extra_precision", "draft_len"})
+    STATIC_CTORS = frozenset({"PackedPlane", "SpecDecodeConfig"})
+    PLANE_DATA_KEYS = frozenset({"words", "alpha", "beta", "overflow"})
+    ARRAY_BASES = ("jnp.", "jax.numpy.", "np.", "numpy.", "jax.lax.")
+    ARRAY_METHODS = frozenset({"astype", "reshape", "sum", "mean", "take"})
+    STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size"})
+    STATIC_CALLS = frozenset({"len", "isinstance", "type"})
+
+    def _array_valued(self, expr: ast.AST) -> bool:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name and (name.startswith(self.ARRAY_BASES)
+                         or name == "jax.device_put"):
+                return True
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in self.ARRAY_METHODS):
+                return True
+        return False
+
+    def check(self, mod: Module, ctx: Context) -> list[Finding]:
+        out = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                out += self._check_ctor(mod, node)
+            elif isinstance(node, ast.Subscript):
+                out += self._check_subscript(mod, node)
+            elif isinstance(node, ast.Compare):
+                out += self._check_membership(mod, node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                info = ctx.jit_info(mod.rel, node.name)
+                if info is not None:
+                    out += self._check_jitted_body(mod, node, info)
+        return out
+
+    def _check_ctor(self, mod: Module, call: ast.Call) -> list[Finding]:
+        name = dotted_name(call.func)
+        if name is None:
+            return []
+        last = name.rsplit(".", 1)[-1]
+        if last not in self.STATIC_CTORS and name not in (
+                "dataclasses.replace", "replace"):
+            return []
+        out = []
+        for kw in call.keywords:
+            if kw.arg in self.META_FIELDS and self._array_valued(kw.value):
+                out.append(Finding(
+                    self.rule_id, mod.rel, kw.value.lineno,
+                    kw.value.col_offset,
+                    f"static metadata field `{kw.arg}` assigned from an "
+                    f"array-valued expression; aux fields must be Python "
+                    f"scalars (call int()/bool() on host, or restructure)",
+                    qualname=mod.qualname(call)))
+        return out
+
+    def _check_subscript(self, mod: Module,
+                         sub: ast.Subscript) -> list[Finding]:
+        key = const_str(sub.slice)
+        if key not in self.PLANE_DATA_KEYS:
+            return []
+        return [Finding(
+            self.rule_id, mod.rel, sub.lineno, sub.col_offset,
+            f"dict-style packed-plane field access [`{key!r}`]; planes are "
+            f"core.packing.PackedPlane with static metadata -- use "
+            f"attribute access on a real plane, never a legacy dict",
+            qualname=mod.qualname(sub))]
+
+    def _check_membership(self, mod: Module,
+                          cmp: ast.Compare) -> list[Finding]:
+        """`"words" in pw` -- duck-typed detection of a legacy dict
+        plane; dead code once every producer builds PackedPlane."""
+        if not (isinstance(cmp.left, ast.Constant)
+                and cmp.left.value in self.PLANE_DATA_KEYS
+                and any(isinstance(op, ast.In) for op in cmp.ops)):
+            return []
+        return [Finding(
+            self.rule_id, mod.rel, cmp.lineno, cmp.col_offset,
+            f"dict-style packed-plane detection (`{cmp.left.value!r} in "
+            f"...`); planes are core.packing.PackedPlane -- use "
+            f"isinstance, never duck-typed dict probing",
+            qualname=mod.qualname(cmp))]
+
+    def _check_jitted_body(self, mod: Module, fn: ast.FunctionDef,
+                           info: JitInfo) -> list[Finding]:
+        args = fn.args
+        positional = [a.arg for a in args.posonlyargs + args.args]
+        static = set(info.static_names) | {
+            positional[i] for i in info.static_nums if i < len(positional)}
+        params = ({a.arg for a in (args.posonlyargs + args.args
+                                   + args.kwonlyargs)}
+                  - {"self"} - static)
+        out = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+            elif isinstance(node, ast.Assert):
+                test = node.test
+            else:
+                continue
+            for name in self._data_leaf_refs(mod, test, params):
+                out.append(Finding(
+                    self.rule_id, mod.rel, node.lineno, node.col_offset,
+                    f"Python {type(node).__name__.lower()} on data leaf "
+                    f"`{name}` inside jitted body `{fn.name}`; traced "
+                    f"values cannot drive host control flow -- branch on "
+                    f"static metadata or use lax.cond/jnp.where",
+                    qualname=mod.qualname(node)))
+        return out
+
+    def _data_leaf_refs(self, mod: Module, test: ast.AST,
+                        params: set[str]) -> list[str]:
+        bad = []
+        for node in ast.walk(test):
+            if not (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)
+                    and node.id in params):
+                continue
+            parent = mod.parent(node)
+            # static-safe wrappers: x.shape/ndim/dtype, len(x),
+            # isinstance(x, ...), and `x is (not) None` structure checks
+            if (isinstance(parent, ast.Attribute)
+                    and parent.attr in self.STATIC_ATTRS):
+                continue
+            if (isinstance(parent, ast.Call)
+                    and dotted_name(parent.func) in self.STATIC_CALLS):
+                continue
+            if (isinstance(parent, ast.Compare)
+                    and all(isinstance(op, (ast.Is, ast.IsNot))
+                            for op in parent.ops)):
+                continue
+            bad.append(node.id)
+        return bad
+
+
+# -- R3: donation discipline ------------------------------------------------
+
+class DonationDiscipline:
+    rule_id = "R3"
+    title = "donation discipline"
+    rationale = (
+        "closures built with donate_argnums invalidate the donated "
+        "buffer at the call: any read of that argument after the call "
+        "site (without an intervening re-store) is a use-after-donate "
+        "-- jax only warns, and the data is garbage")
+
+    def check(self, mod: Module, ctx: Context) -> list[Finding]:
+        attr_bindings, name_bindings, dict_keys = self._bindings(mod)
+        if not (attr_bindings or name_bindings or dict_keys):
+            return []
+        out = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            donated = self._donated_for_site(node, attr_bindings,
+                                             name_bindings, dict_keys, mod)
+            if donated:
+                out += self._check_site(mod, node, donated)
+        return out
+
+    @staticmethod
+    def _donated_idx(call: ast.Call) -> frozenset[int] | None:
+        for kw in call.keywords:
+            if kw.arg != "donate_argnums":
+                continue
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return frozenset({v.value})
+            if isinstance(v, (ast.Tuple, ast.List)):
+                idx = set()
+                for e in v.elts:
+                    if not (isinstance(e, ast.Constant)
+                            and isinstance(e.value, int)):
+                        return None         # non-literal: cannot reason
+                    idx.add(e.value)
+                return frozenset(idx)
+            return None
+        return None
+
+    def _bindings(self, mod: Module):
+        """Map donating jit closures to the names they are called by:
+        `self.X = jax.jit(..)` / `f = jax.jit(..)` direct bindings, and
+        dict-literal entries `{"decode": jax.jit(..)}` by string key."""
+        attr_bindings: dict[str, frozenset[int]] = {}
+        name_bindings: dict[str, frozenset[int]] = {}
+        dict_keys: dict[str, frozenset[int]] = {}
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and is_jit_call(node)):
+                continue
+            donated = self._donated_idx(node)
+            if not donated:
+                continue
+            parent = mod.parent(node)
+            if (isinstance(parent, ast.Assign) and len(parent.targets) == 1
+                    and parent.value is node):
+                name = dotted_name(parent.targets[0])
+                if name and name.startswith("self."):
+                    attr_bindings[name] = donated
+                elif name:
+                    name_bindings[name] = donated
+            elif isinstance(parent, ast.Dict):
+                for k, v in zip(parent.keys, parent.values):
+                    if v is node and k is not None:
+                        key = const_str(k)
+                        if key:
+                            dict_keys[key] = (dict_keys.get(key, frozenset())
+                                              | donated)
+        return attr_bindings, name_bindings, dict_keys
+
+    def _donated_for_site(self, call, attr_bindings, name_bindings,
+                          dict_keys, mod) -> frozenset[int] | None:
+        func = call.func
+        name = dotted_name(func)
+        if name in attr_bindings:
+            return attr_bindings[name]
+        if name in name_bindings:
+            return name_bindings[name]
+        if isinstance(func, ast.Subscript):
+            key = const_str(func.slice)
+            if key in dict_keys:
+                return dict_keys[key]
+        # `decode_fn = fns["decode"]; ...; decode_fn(...)` -- resolve the
+        # alias within the enclosing function
+        if isinstance(func, ast.Name):
+            enclosing = mod.enclosing_defs(call)
+            scope = enclosing[0] if enclosing else mod.tree
+            for stmt in ast.walk(scope):
+                if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                        and isinstance(stmt.targets[0], ast.Name)
+                        and stmt.targets[0].id == func.id
+                        and isinstance(stmt.value, ast.Subscript)):
+                    key = const_str(stmt.value.slice)
+                    if key in dict_keys:
+                        return dict_keys[key]
+        return None
+
+    def _check_site(self, mod: Module, call: ast.Call,
+                    donated: frozenset[int]) -> list[Finding]:
+        out = []
+        stmt = mod.enclosing_stmt(call)
+        targets: set[str] = set()
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+                targets |= {dotted_name(e) for e in elts} - {None}
+        for i in sorted(donated):
+            if i >= len(call.args) or any(
+                    isinstance(a, ast.Starred) for a in call.args[:i + 1]):
+                continue                # *args call: cannot resolve arg i
+            expr = dotted_name(call.args[i])
+            if expr is None:
+                continue                # non-trivial expression: skip
+            if expr in targets:
+                continue                # x = f(x): re-stored immediately
+            access = self._first_access_after(mod, stmt, expr)
+            if access is not None and isinstance(access, ast.Load):
+                out.append(Finding(
+                    self.rule_id, mod.rel, call.lineno, call.col_offset,
+                    f"`{expr}` is donated (argument {i}) at this call but "
+                    f"read again later in the same scope; donated buffers "
+                    f"are invalidated -- rebind the result over `{expr}` "
+                    f"or drop the donation",
+                    qualname=mod.qualname(call)))
+        return out
+
+    def _first_access_after(self, mod: Module, stmt: ast.stmt,
+                            expr: str) -> ast.expr_context | None:
+        """ctx of the first Load/Store of `expr` after `stmt` in the
+        enclosing function (lexical line order), or None."""
+        enclosing = mod.enclosing_defs(stmt)
+        scope = enclosing[0] if enclosing else mod.tree
+        first: tuple[int, int, ast.expr_context] | None = None
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Name):
+                name, nctx = node.id, node.ctx
+            elif isinstance(node, ast.Attribute):
+                name, nctx = dotted_name(node), node.ctx
+            else:
+                continue
+            if name != expr or node.lineno <= (stmt.end_lineno or stmt.lineno):
+                continue
+            pos = (node.lineno, node.col_offset)
+            if first is None or pos < first[:2]:
+                first = (*pos, nctx)
+        return first[2] if first else None
+
+
+# -- R4: host-data contract -------------------------------------------------
+
+class HostDataContract:
+    rule_id = "R4"
+    title = "host-data contract"
+    rationale = (
+        "page tables, slot positions, and sentinel metadata must flow "
+        "into jitted closures as ARGUMENTS (sentinel-padded jnp arrays), "
+        "never be captured from enclosing scope -- a captured Python "
+        "value bakes one request's host state into the compiled "
+        "artifact, so every remap recompiles (or worse, silently "
+        "serves a stale table)")
+
+    SCOPE = ("src/repro/serve/",)
+    HOST_PAT = re.compile(r"ptab|page|pool|slots|table")
+    _BUILTINS = frozenset(dir(builtins))
+
+    def check(self, mod: Module, ctx: Context) -> list[Finding]:
+        if not mod.rel.startswith(self.SCOPE):
+            return []
+        module_names = mod.module_names()
+        out = []
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and is_jit_call(node)):
+                continue
+            target = jit_target(node)
+            fn = self._resolve_local_def(mod, node, target)
+            if fn is None:
+                continue
+            out += self._check_closure(mod, node, fn, module_names)
+        return out
+
+    @staticmethod
+    def _resolve_local_def(mod, call, target):
+        """The FunctionDef/Lambda being jitted, when it is a closure
+        defined in the same enclosing function as the jit call."""
+        if isinstance(target, ast.Lambda):
+            return target
+        if not isinstance(target, ast.Name):
+            return None
+        for scope in mod.enclosing_defs(call):
+            for stmt in ast.walk(scope):
+                if (isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and stmt.name == target.id):
+                    return stmt
+        return None
+
+    def _check_closure(self, mod, call, fn, module_names) -> list[Finding]:
+        args = fn.args
+        bound = {a.arg for a in (args.posonlyargs + args.args
+                                 + args.kwonlyargs)}
+        if args.vararg:
+            bound.add(args.vararg.arg)
+        if args.kwarg:
+            bound.add(args.kwarg.arg)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        loaded: dict[str, ast.Name] = {}
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name):
+                    if isinstance(node.ctx, ast.Store):
+                        bound.add(node.id)
+                    elif node.id not in loaded:
+                        loaded[node.id] = node
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    bound.add(node.name)
+        name = getattr(fn, "name", "<lambda>")
+        out = []
+        for var, node in loaded.items():
+            if var in bound or var in self._BUILTINS:
+                continue
+            if var == "self":
+                out.append(Finding(
+                    self.rule_id, mod.rel, node.lineno, node.col_offset,
+                    f"jitted closure `{name}` captures scheduler state via "
+                    f"`self`; per-request host data must be passed as an "
+                    f"argument so the compiled artifact stays "
+                    f"request-independent", qualname=mod.qualname(call)))
+            elif var not in module_names and self.HOST_PAT.search(var):
+                out.append(Finding(
+                    self.rule_id, mod.rel, node.lineno, node.col_offset,
+                    f"jitted closure `{name}` captures host-side `{var}` "
+                    f"from enclosing scope; pass page tables / slot "
+                    f"metadata as (sentinel-padded) array arguments so "
+                    f"remaps never recompile", qualname=mod.qualname(call)))
+        return out
+
+
+RULES = (JitSiteRegistry(), StaticMetadataHygiene(), DonationDiscipline(),
+         HostDataContract())
+RULE_IDS = tuple(r.rule_id for r in RULES)

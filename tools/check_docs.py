@@ -12,6 +12,10 @@ Two guards, zero dependencies:
 3. BENCH section coverage: every top-level SECTION (dict-valued key) of
    the committed BENCH_serve.json must appear in docs/serving.md's
    field guide, so a new benchmark section cannot land undocumented.
+4. Contract-rule coverage: every matlint rule id (tools.analysis.RULES)
+   must have a `## R<n> --` entry in docs/contracts.md, and every rule
+   heading there must name a rule the analyzer still implements -- the
+   invariant catalogue and the enforcer cannot drift apart.
 
 Exits non-zero listing every failure (not just the first).
 """
@@ -94,8 +98,27 @@ def check_bench_sections() -> list[str]:
     return errors
 
 
+RULE_HEADING_RE = re.compile(r"^## (R\d+)\b", re.MULTILINE)
+
+
+def check_contract_rules() -> list[str]:
+    contracts = ROOT / "docs" / "contracts.md"
+    if not contracts.exists():
+        return ["missing docs/contracts.md (matlint invariant catalogue)"]
+    sys.path.insert(0, str(ROOT))
+    from tools.analysis import RULE_IDS     # stdlib-only, no jax
+    documented = set(RULE_HEADING_RE.findall(contracts.read_text()))
+    errors = [f"docs/contracts.md: no `## {rid} --` entry for matlint "
+              f"rule {rid}" for rid in RULE_IDS if rid not in documented]
+    errors += [f"docs/contracts.md: `## {rid}` documents a rule the "
+               f"analyzer does not implement (tools/analysis/rules.py)"
+               for rid in sorted(documented - set(RULE_IDS))]
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_serve_flags() + check_bench_sections()
+    errors = (check_links() + check_serve_flags() + check_bench_sections()
+              + check_contract_rules())
     for e in errors:
         print(f"docs check FAILED: {e}")
     if not errors:
