@@ -4,7 +4,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast test-shard bench-serve analyze lint
+.PHONY: test test-fast test-shard test-fleet bench-serve analyze lint
 
 test:
 	python -m pytest -x -q
@@ -22,6 +22,13 @@ test-shard:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" JAX_PLATFORMS=cpu \
 	    python -m pytest -x -q tests/test_serve_tp_packed.py \
 	    tests/test_specdecode.py::test_spec_decode_token_exact_on_mesh
+
+# replica-fleet serving on a forced 8-device CPU host, so
+# make_replica_meshes hands each replica a real disjoint device
+# subset (the module also runs single-device under plain `make test`)
+test-fleet:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" JAX_PLATFORMS=cpu \
+	    python -m pytest -x -q tests/test_fleet.py
 
 bench-serve:
 	python benchmarks/serve_throughput.py --reduced --out BENCH_serve.json

@@ -41,7 +41,16 @@ Runs reported side by side on the SAME trace:
     device count before jax initializes): every rung's measured
     per-device plane bytes are exactly packed_nbytes / model_parallel
     and the per-device staircase stays strictly decreasing -- the
-    tensor-parallel memory claim as a reported number.
+    tensor-parallel memory claim as a reported number;
+  * replica-fleet A/B -- the SAME trace through `serve.fleet.Fleet` at
+    1/2/4 data-parallel replicas on the forced host mesh (`fleet_ab`,
+    one subprocess per replica count, same XLA_FLAGS idiom as the TP
+    children): throughput per fleet size with token-exact outputs vs
+    the single replica, a load-spike segment where the global
+    FleetRouter downgrades SOME replicas while the pinned one keeps
+    serving high-precision (`per_replica_downgrade`), and a
+    kill-one-replica segment whose drain/requeue path reports
+    `requests_lost: 0` with `token_exact_vs_single_replica: true`.
 
 Reduced runs serve 4 layers (`--layers`) so the Mix'n'Match tier lands
 at 3.5 effective bits -- strictly between int4 and the int2+ep rung's
@@ -371,6 +380,199 @@ def run_tp_ab(args) -> dict:
     return out
 
 
+def run_fleet_child(args):
+    """`--fleet-child R` mode: one fleet segment on a forced host mesh,
+    run in a SUBPROCESS (same XLA_FLAGS idiom as the TP children) so
+    every replica owns a disjoint device subset. Segments:
+
+      * throughput -- the shared trace, tiers pinned at int8;
+      * spike      -- the default threshold ramp under the same burst,
+        so the global router downgrades SOME replicas;
+      * kill       -- tiers pinned, one replica hard-killed mid-replay
+        to exercise the drain/requeue path.
+
+    Writes the fragment (summary + per-request tokens, so the parent
+    can check token-exactness across fleet sizes) to --out."""
+    from repro.serve import FleetMetrics
+    from repro.serve.fleet import build_fleet
+    from repro.serve.router import default_tiers
+
+    num_replicas = args.fleet_child
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().replace(num_layers=args.layers)
+    params = api.init(jax.random.PRNGKey(args.seed), cfg)
+    tiers = default_tiers(cfg.num_layers)
+    steps = num_replicas * (len(tiers) - 1)
+    thresholds = (tuple(4.0 * (s + 1) for s in range(steps))
+                  if args.fleet_segment == "spike"
+                  else (float("inf"),) * steps)
+    fleet = build_fleet(params, cfg, replicas=num_replicas,
+                        num_slots=args.num_slots,
+                        max_len=args.prompt_len + args.gen_tokens,
+                        tiers=tiers, thresholds=thresholds,
+                        cooldown=args.cooldown, pinned=(0,))
+    trace = poisson_trace(cfg, requests=args.fleet_requests,
+                          prompt_len=args.prompt_len,
+                          gen_tokens=args.gen_tokens,
+                          rate=args.arrival_rate, seed=args.seed)
+    # warm every replica's closures directly (bypassing the global
+    # queue, so fleet metrics stay clean); the spike segment visits
+    # every tier so mid-replay downgrades are cache hits
+    tier_range = (range(len(tiers)) if args.fleet_segment == "spike"
+                  else (0,))
+    for rep in fleet.replicas:
+        for idx in tier_range:
+            rep.set_tier(idx)
+            for rows in _row_buckets(args.num_slots):
+                for j in range(min(rows, args.num_slots)):
+                    rep.submit(Request(
+                        uid=f"_warm{rep.rid}_{idx}_{rows}_{j}",
+                        prompt=trace[0][1].prompt, max_new_tokens=2))
+                while rep.inflight():
+                    rep.step()
+        rep.set_tier(0)
+    fleet.results = {}
+    fleet.metrics = FleetMetrics()
+    fleet.router.reset()
+    fleet._applied = [0] * num_replicas
+
+    killed = []
+
+    def on_step(f, step_index):
+        if (args.fleet_segment == "kill" and not killed
+                and step_index == args.fleet_kill_step):
+            f.kill(num_replicas - 1)       # an unpinned replica
+            killed.append(step_index)
+
+    t0 = time.perf_counter()
+    results = fleet.run_trace(trace, on_step=on_step)
+    wall = time.perf_counter() - t0
+    assert len(results) == args.fleet_requests, (len(results),
+                                                 args.fleet_requests)
+    summary = fleet.metrics.summary()
+    compile_counts = {}
+    for rep in fleet.replicas:
+        expect = None if rep.engine.packed else {None}
+        compile_counts[f"replica{rep.rid}"] = assert_no_recompiles(
+            rep.sched, expect_keys=expect)
+    fleet.close()
+    fragment = {
+        "replicas": num_replicas,
+        "segment": args.fleet_segment,
+        "devices": len(jax.devices()),
+        "wall_s": wall,
+        "throughput_tok_s": summary["throughput_tok_s"],
+        "requests_lost": summary["requests_lost"],
+        "summary": summary,
+        "tokens": {str(uid): [int(t) for t in toks]
+                   for uid, toks in results.items()},
+        "compile_counts": compile_counts,
+    }
+    if args.fleet_segment == "spike":
+        occ = {rid: info["tier_occupancy"]
+               for rid, info in summary["per_replica"].items()}
+        downgraded = sum(1 for o in occ.values()
+                         if any(t != tiers[0].name for t in o))
+        fragment["tier_occupancy_by_replica"] = occ
+        fragment["downgraded_replicas"] = downgraded
+        # the fleet-policy claim: a load spike costs SOME replicas
+        # precision, never the whole fleet
+        fragment["per_replica_downgrade"] = 0 < downgraded < num_replicas
+    if args.fleet_segment == "kill":
+        fragment["requeued_requests"] = summary["requeued_requests"]
+        fragment["replica_failures"] = summary["replica_failures"]
+    with open(args.out, "w") as f:
+        json.dump(fragment, f, indent=2)
+    return fragment
+
+
+def run_fleet_ab(args) -> dict:
+    """`fleet_ab`: the replica-fleet study -- one subprocess per
+    (replica count, segment) on a forced `--fleet-devices` host mesh,
+    fragments merged parent-side (token-exactness across fleet sizes is
+    checked HERE, where every fragment's tokens are in hand)."""
+    import subprocess
+    import sys
+    import tempfile
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+
+    def child(num_replicas, segment, frag_path):
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count="
+                            f"{args.fleet_devices}").strip()
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--fleet-child", str(num_replicas),
+               "--fleet-segment", segment,
+               "--fleet-requests", str(args.fleet_requests),
+               "--fleet-kill-step", str(args.fleet_kill_step),
+               "--arch", args.arch, "--layers", str(args.layers),
+               "--prompt-len", str(args.prompt_len),
+               "--gen-tokens", str(args.gen_tokens),
+               "--arrival-rate", str(args.arrival_rate),
+               "--num-slots", str(args.num_slots),
+               "--cooldown", str(args.cooldown),
+               "--seed", str(args.seed), "--out", frag_path]
+        if args.reduced:
+            cmd.append("--reduced")
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"fleet_ab child (replicas={num_replicas}, {segment}) "
+                f"failed:\n" + proc.stderr[-2000:])
+        with open(frag_path) as f:
+            return json.load(f)
+
+    out = {"devices_forced": args.fleet_devices}
+    with tempfile.TemporaryDirectory() as tmp_dir:
+        frags = {}
+        for num_replicas in args.fleet_replicas:
+            frags[num_replicas] = child(
+                num_replicas, "throughput",
+                os.path.join(tmp_dir, f"fleet{num_replicas}.json"))
+        base = frags.get(1)
+        out["throughput"] = {
+            f"r{n}": {
+                "replicas": n,
+                "throughput_tok_s": frag["throughput_tok_s"],
+                "wall_s": frag["wall_s"],
+                "requests_lost": frag["requests_lost"],
+                "compile_counts": frag["compile_counts"],
+                **({"token_exact_vs_single_replica":
+                    frag["tokens"] == base["tokens"]} if base else {}),
+            }
+            for n, frag in frags.items()
+        }
+        spike = child(max(args.fleet_replicas), "spike",
+                      os.path.join(tmp_dir, "fleet_spike.json"))
+        out["load_spike"] = {
+            "replicas": spike["replicas"],
+            "requests_lost": spike["requests_lost"],
+            "tier_occupancy_by_replica": spike["tier_occupancy_by_replica"],
+            "downgraded_replicas": spike["downgraded_replicas"],
+            "per_replica_downgrade": spike["per_replica_downgrade"],
+            "mean_effective_bits_min":
+                spike["summary"]["mean_effective_bits_min"],
+            "tier_switches": spike["summary"]["tier_switches"],
+        }
+        kill = child(2, "kill", os.path.join(tmp_dir, "fleet_kill.json"))
+        out["kill_one_replica"] = {
+            "replicas": 2,
+            "requests_lost": kill["requests_lost"],
+            "requeued_requests": kill["requeued_requests"],
+            "replica_failures": kill["replica_failures"],
+            "throughput_tok_s": kill["throughput_tok_s"],
+            **({"token_exact_vs_single_replica":
+                kill["tokens"] == base["tokens"]} if base else {}),
+        }
+    return out
+
+
 def _warm_and_replay(engine, args, trace, section: str | None = None):
     """Fixed-tier scheduler over one paged engine: warm the closures on
     every admission row bucket, then replay `trace` timed."""
@@ -540,12 +742,34 @@ def main(argv=None):
                          "(intN / intN+ep; empty skips it)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="k, draft tokens per verify step (specdecode_ab)")
+    ap.add_argument("--fleet-replicas", type=int, nargs="*", default=(1, 2, 4),
+                    help="fleet sizes for the fleet_ab throughput segment "
+                         "(one subprocess each on a forced --fleet-devices "
+                         "host mesh; empty skips the section)")
+    ap.add_argument("--fleet-devices", type=int, default=8,
+                    help="host device count forced (via XLA_FLAGS, in a "
+                         "subprocess) for the fleet_ab section")
+    ap.add_argument("--fleet-requests", type=int, default=10,
+                    help="trace length for each fleet_ab replay "
+                         "(forced-host CPU meshes simulate slowly)")
+    ap.add_argument("--fleet-kill-step", type=int, default=3,
+                    help="fleet step at which the fleet_ab kill segment "
+                         "hard-kills its victim replica")
+    ap.add_argument("--skip-fleet-ab", action="store_true",
+                    help="skip the replica-fleet A/B section")
     ap.add_argument("--tp-child", type=int, default=0, help=argparse.SUPPRESS)
+    ap.add_argument("--fleet-child", type=int, default=0,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--fleet-segment", default="throughput",
+                    choices=("throughput", "spike", "kill"),
+                    help=argparse.SUPPRESS)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
     if args.tp_child:
         return run_tp_child(args)
+    if args.fleet_child:
+        return run_fleet_child(args)
 
     COMPILE_COUNTS.clear()
     cfg = get_config(args.arch)
@@ -678,6 +902,24 @@ def main(argv=None):
                   f"staircase strictly decreasing: "
                   f"{frag['per_device_plane_bytes_strictly_decreasing']}")
 
+    fleet_ab = None
+    if not args.skip_fleet_ab and args.fleet_replicas:
+        print(f"== replica-fleet A/B ({args.fleet_devices}-device host "
+              f"mesh, replicas={list(args.fleet_replicas)}) ==")
+        fleet_ab = run_fleet_ab(args)
+        for key, info in fleet_ab["throughput"].items():
+            print(f"  {key}: tok/s={info['throughput_tok_s']:.1f} "
+                  f"lost={info['requests_lost']} "
+                  f"token_exact={info.get('token_exact_vs_single_replica')}")
+        spike = fleet_ab["load_spike"]
+        print(f"  spike: downgraded {spike['downgraded_replicas']}/"
+              f"{spike['replicas']} replicas "
+              f"(per_replica_downgrade={spike['per_replica_downgrade']})")
+        kill = fleet_ab["kill_one_replica"]
+        print(f"  kill-one: lost={kill['requests_lost']} "
+              f"requeued={kill['requeued_requests']} "
+              f"token_exact={kill.get('token_exact_vs_single_replica')}")
+
     report = {
         "bench": "serve_throughput",
         "arch": args.arch + (" (reduced)" if args.reduced else ""),
@@ -694,6 +936,7 @@ def main(argv=None):
         "specdecode_ab": specdecode_ab,
         "kv_ab": kv_ab,
         "packed_ab_tp": packed_ab_tp,
+        "fleet_ab": fleet_ab,
         # per-section closure trace counts, each verified by
         # compile_guard.assert_no_recompiles (docs/contracts.md) -- a
         # diff here is a compile-count regression

@@ -35,3 +35,40 @@ def make_host_mesh(model_parallel: int = 1):
             f"(set it in the environment BEFORE jax is imported; "
             f"`make test-shard` does this for the sharded serving tests).")
     return make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def make_replica_meshes(num_replicas: int, model_parallel: int = 1):
+    """Split the local devices into `num_replicas` disjoint (data, model)
+    meshes -- one per fleet replica (serve/fleet.py).
+
+    With fewer devices than replicas (e.g. the plain single-CPU test
+    environment), replicas SHARE devices round-robin over degenerate
+    1-device meshes instead of failing: the fleet is then correct but
+    not parallel, which is exactly what the device-count-agnostic
+    tests want. Under the forced-host idiom
+    (XLA_FLAGS=--xla_force_host_platform_device_count=8) every replica
+    gets its own device subset and steps overlap via async dispatch.
+    """
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+
+    if num_replicas < 1:
+        raise ValueError("make_replica_meshes: num_replicas must be >= 1")
+    devs = jax.devices()
+    n = len(devs)
+    if n < num_replicas * model_parallel:
+        if model_parallel > 1:
+            raise ValueError(
+                f"make_replica_meshes: {n} device(s) cannot give "
+                f"{num_replicas} replicas model_parallel={model_parallel} "
+                f"each (need {num_replicas * model_parallel})")
+        return [Mesh(np.array([devs[i % n]]).reshape(1, 1),
+                     ("data", "model"))
+                for i in range(num_replicas)]
+    per = n // num_replicas
+    per -= per % model_parallel          # whole TP groups per replica
+    return [Mesh(np.array(devs[i * per:(i + 1) * per]).reshape(
+                     per // model_parallel, model_parallel),
+                 ("data", "model"))
+            for i in range(num_replicas)]

@@ -16,6 +16,11 @@ BENCH_serve.json).
   # fixed tier, legacy fixed-batch loop
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --reduced \
       --bits 2 --legacy --requests 8 --prompt-len 32 --gen-tokens 16
+
+  # 4-replica fleet behind one global elastic router
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --reduced \
+      --replicas 4 --requests 32 --arrival-rate 16
 """
 
 from __future__ import annotations
@@ -146,6 +151,24 @@ def main(argv=None):
     ap.add_argument("--elastic", action="store_true",
                     help="load-adaptive precision tiers (int8 -> int4 -> "
                          "Mix'n'Match -> int2+ep -> int2)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve a FLEET of this many in-process data-"
+                         "parallel replicas behind one global admission "
+                         "queue (serve/fleet.py): each replica is its own "
+                         "engine + managed scheduler over a disjoint device "
+                         "subset, and the global FleetRouter downgrades the "
+                         "least-loaded replicas first under load. 0 "
+                         "(default) keeps the single-scheduler path; on "
+                         "CPU, force devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N so "
+                         "replicas do not share one device")
+    ap.add_argument("--fleet-policy", default="pin-high",
+                    choices=["pin-high", "uniform"],
+                    help="fleet tier policy: 'pin-high' (default) pins "
+                         "replica 0 at int4-or-better so priority/deadline "
+                         "requests always have a high-bit home; 'uniform' "
+                         "lets every replica downgrade to int2 under "
+                         "sufficient load")
     ap.add_argument("--spec-decode", action="store_true",
                     help="Matryoshka self-speculative decoding: the "
                          "--draft-tier slice of the SAME resident parent "
@@ -195,6 +218,32 @@ def main(argv=None):
               f"in {dt:.2f}s ({tok_s:.1f} tok/s)")
         print("first continuations:", out[:2].tolist())
         return out
+
+    if args.replicas:
+        if args.legacy or spec is not None:
+            raise SystemExit("--replicas drives managed slot schedulers; "
+                             "drop --legacy/--spec-decode")
+        from repro.serve.fleet import build_fleet
+        params = engine._parent_params
+        if params is None:
+            raise SystemExit("--replicas needs the parent checkpoint "
+                             "(keep_parent)")
+        fleet = build_fleet(
+            params, cfg, replicas=args.replicas,
+            num_slots=args.num_slots,
+            max_len=args.prompt_len + args.gen_tokens,
+            pinned=(0,) if args.fleet_policy == "pin-high" else (),
+            clock=time.perf_counter)
+        trace = build_trace(args, cfg)
+        print(f"replaying {len(trace)} Poisson arrivals "
+              f"(rate {args.arrival_rate}/s) through {args.replicas} "
+              f"replicas ({args.fleet_policy} policy), "
+              f"{args.num_slots} slots each")
+        results = fleet.run_trace(trace)
+        print(json.dumps(fleet.metrics.summary(), indent=2))
+        first = {k: results[k].tolist() for k in sorted(results)[:2]}
+        print("first continuations:", first)
+        return results
 
     sched = engine.scheduler(elastic=args.elastic,
                              packed=args.packed if args.elastic else None,

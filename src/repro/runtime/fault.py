@@ -7,9 +7,13 @@ different topology. The pieces here cover all three:
 
 * `StepMonitor` -- EMA step timer; flags steps slower than k x EMA and
   invokes a pluggable callback (on a fleet: report to the scheduler /
-  trigger within-job rebalance; here: log + count, unit-tested).
+  trigger within-job rebalance; serve/fleet.py wires it as a replica
+  health signal).
 * `Heartbeat` -- step/timestamp file an external watchdog can poll to
-  detect a hung process and SIGKILL->relaunch it.
+  detect a hung process and SIGKILL->relaunch it. `stale()` is that
+  watchdog check: serve/fleet.py polls it per fleet step to decide
+  when a replica (in-process or subprocess) stopped making progress
+  and must be drained.
 * `run_resilient` -- wraps a step function with crash-restore-retry
   against a CheckpointManager; elastic restore happens naturally since
   restore() reshards onto whatever mesh the relaunch built.
@@ -46,7 +50,12 @@ class StepMonitor:
         """Feed one step's wall time; returns True if flagged straggler."""
         self._seen += 1
         flagged = False
-        if self.ema is not None and self._seen > self.warmup_steps:
+        # `self.ema > 0` guards the degenerate baseline: under a virtual
+        # clock (or a first step faster than the timer resolution) the
+        # EMA seeds at 0.0 and EVERY later step would flag -- a zero
+        # baseline carries no straggler information.
+        if (self.ema is not None and self.ema > 0
+                and self._seen > self.warmup_steps):
             if step_time > self.threshold * self.ema:
                 ev = StragglerEvent(step, step_time, self.ema)
                 self.events.append(ev)
@@ -61,20 +70,44 @@ class StepMonitor:
 
 
 class Heartbeat:
-    def __init__(self, path: str):
+    """Atomic step/timestamp file plus the watchdog-side staleness check.
+
+    `clock` is injectable (tests drive a virtual clock); it must be the
+    SAME time base on the beating and the watching side -- the fleet
+    passes one clock to both.
+    """
+
+    def __init__(self, path: str, clock: Callable[[], float] = time.time):
         self.path = path
+        self.clock = clock
 
     def beat(self, step: int):
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"step": step, "time": time.time()}, f)
+            json.dump({"step": step, "time": self.clock()}, f)
         os.replace(tmp, self.path)
 
     def read(self):
-        if not os.path.exists(self.path):
+        """Last beat dict, or None if absent/unreadable. A torn or
+        truncated file (the writer was SIGKILLed; an external tool
+        clobbered it) reads as None rather than raising -- to a
+        watchdog an unreadable heartbeat IS a missing heartbeat."""
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
             return None
-        with open(self.path) as f:
-            return json.load(f)
+
+    def stale(self, timeout: float, now: float | None = None) -> bool:
+        """True when the last beat is older than `timeout` seconds (or
+        was never written / cannot be read): the process behind this
+        file has stopped making progress and should be treated as dead.
+        """
+        last = self.read()
+        if last is None or "time" not in last:
+            return True
+        now = self.clock() if now is None else now
+        return (now - float(last["time"])) > timeout
 
 
 def run_resilient(

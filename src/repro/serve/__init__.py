@@ -7,11 +7,14 @@ from repro.serve.engine import (Engine, ServeConfig,  # noqa: F401
                                 served_param_shardings,
                                 served_plane_nbytes_per_device,
                                 served_weight_nbytes)
+from repro.serve.fleet import (Fleet, Replica,  # noqa: F401
+                               SubprocessReplica, build_fleet)
 from repro.serve.kv_cache import (KVCacheConfig, PagedPool,  # noqa: F401
                                   PagePool)
-from repro.serve.metrics import ServeMetrics  # noqa: F401
-from repro.serve.router import (ElasticPrecisionRouter, PrecisionTier,  # noqa: F401
-                                TierCache, TierEntry, default_tiers)
+from repro.serve.metrics import FleetMetrics, ServeMetrics  # noqa: F401
+from repro.serve.router import (ElasticPrecisionRouter, FleetRouter,  # noqa: F401
+                                PrecisionTier, TierCache, TierEntry,
+                                default_tiers)
 from repro.serve.scheduler import (ContinuousBatchingScheduler,  # noqa: F401
                                    Request)
 from repro.serve.specdecode import (SpecDecodeConfig,  # noqa: F401

@@ -628,6 +628,7 @@ class Engine:
 
     def scheduler(self, *, num_slots: int | None = None,
                   max_len: int | None = None, elastic: bool = False,
+                  managed: bool = False,
                   tiers=None, thresholds=None, cooldown: int = 4,
                   total_pages: int | None = None, clock=None,
                   packed: bool | None = None, spec_decode=None):
@@ -636,6 +637,13 @@ class Engine:
         elastic=True serves load-adaptive precision from the parent
         checkpoint (router + per-tier cache); otherwise the scheduler
         serves this engine's fixed tier (packed or dequantized).
+
+        managed=True builds the SAME elastic tier cache but no local
+        router: the scheduler starts at tiers[0] and an external policy
+        owns every switch through `set_tier` -- the mode one fleet
+        replica runs in, where serve/fleet.py's global FleetRouter
+        assigns per-replica tiers (`thresholds`/`cooldown` are router
+        parameters and are rejected here).
 
         `packed` (elastic only; defaults to this engine's use_packed
         resolution) materializes every tier as packed r-bit planes -- a
@@ -669,7 +677,14 @@ class Engine:
             kw["draft_source"] = self._parent_params
         if clock is not None:
             kw["clock"] = clock
-        if elastic:
+        if elastic and managed:
+            raise ValueError("elastic (self-routed) and managed "
+                             "(fleet-routed) are mutually exclusive")
+        if managed and (thresholds is not None or cooldown != 4):
+            raise ValueError("managed schedulers have no local router; "
+                             "thresholds/cooldown belong to the fleet's "
+                             "FleetRouter")
+        if elastic or managed:
             if self._parent_params is None:
                 raise ValueError("elastic tiers re-materialize from the "
                                  "parent checkpoint, which this engine was "
@@ -698,6 +713,9 @@ class Engine:
                 if packed == self.packed:
                     cache.seed(tier, self.params,
                                packed_bits=self._packed_key)
+            if managed:
+                return sched_mod.ContinuousBatchingScheduler(
+                    None, self.cfg, tier_cache=cache, tier=tiers[0], **kw)
             return sched_mod.ContinuousBatchingScheduler(
                 None, self.cfg,
                 router=router_mod.ElasticPrecisionRouter(

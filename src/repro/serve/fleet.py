@@ -1,0 +1,651 @@
+"""Replica fleet serving: N data-parallel replicas, one global router.
+
+One MatQuant parent checkpoint serves every precision; PRs 1-8 built a
+single elastic replica. This module scales the deployment axis: a
+`Fleet` owns N `Engine` replicas behind ONE global admission queue,
+and the elastic policy goes global -- `serve.router.FleetRouter` maps
+one fleet-wide load signal to a PER-REPLICA tier assignment, so a load
+spike downgrades the least-loaded replicas first while >= 1 pinned
+replica stays at int4-or-better for priority traffic. Each replica
+runs a fleet-managed scheduler (`Engine.scheduler(managed=True)`):
+same tier cache, same one-compile-per-representation-key closures, but
+the tier knob is driven from outside through `set_tier`.
+
+Two replica transports, one interface:
+
+  * `Replica` -- in-process: an Engine + managed scheduler over its own
+    device-subset mesh (`launch.mesh.make_replica_meshes`; under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 every replica
+    owns real devices, on a bare single-device host they share one
+    degenerate mesh). This is the default and what the benchmarks
+    replay on.
+  * `SubprocessReplica` -- true multi-process validation: a worker
+    process (`python -m repro.serve.fleet --worker`) builds its own
+    engine and speaks a JSON-lines protocol on stdin/stdout, beating a
+    `runtime.fault.Heartbeat` file per step. SIGKILLing the worker is
+    a REAL process death, which is what the kill/requeue tests
+    exercise end to end.
+
+Failure semantics (the zero-request-loss contract): every request a
+replica holds is also tracked fleet-side, so when a replica fails --
+its process exited, its heartbeat went stale
+(`Heartbeat.stale(timeout)`), or its `StepMonitor` flagged it as a
+chronic straggler -- the fleet drains it and requeues the ORIGINAL
+requests (full prompt, full budget) onto survivors. Partial
+generations are discarded on purpose: greedy decode is deterministic,
+so the replay reproduces token-identical outputs, and `FleetMetrics.
+summary()["requests_lost"]` stays 0.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from repro.runtime.fault import Heartbeat, StepMonitor
+from repro.serve.metrics import FleetMetrics
+from repro.serve.router import FleetRouter, default_tiers
+from repro.serve.scheduler import Request
+
+__all__ = ["Fleet", "Replica", "SubprocessReplica", "ReplicaFailed",
+           "build_fleet"]
+
+
+class ReplicaFailed(RuntimeError):
+    """A replica transport died mid-operation (process exit / EOF)."""
+
+
+class Replica:
+    """In-process fleet replica: one Engine + one managed scheduler.
+
+    The fleet never reaches into the scheduler directly; this wrapper
+    tracks every submitted-but-unfinished Request (`inflight`) so a
+    kill can requeue without trusting the dead scheduler's state, and
+    harvests finished results inside `step` so no completed output is
+    ever stranded between a step and a failure check.
+    """
+
+    def __init__(self, rid: int, engine, tiers, *, num_slots=None,
+                 max_len=None, clock=time.perf_counter, heartbeat=None,
+                 monitor: StepMonitor | None = None):
+        self.rid = rid
+        self.engine = engine
+        self.tiers = tuple(tiers)
+        self.sched = engine.scheduler(managed=True, tiers=self.tiers,
+                                      num_slots=num_slots, max_len=max_len,
+                                      clock=clock)
+        self.clock = clock
+        self.heartbeat = heartbeat
+        self.monitor = monitor
+        self.alive = True
+        self.killed = False
+        self.wedged = False      # test hook: hung-but-not-dead process
+        self._inflight: dict[object, Request] = {}
+        self._steps = 0
+        if self.heartbeat is not None:
+            self.heartbeat.beat(0)   # baseline: never-beaten reads stale
+
+    @property
+    def tier_name(self) -> str:
+        return self.sched.tier_name
+
+    def load(self) -> float:
+        return self.sched.load_signal() + len(self.sched.active)
+
+    def submit(self, req: Request, now: float | None = None):
+        self._inflight[req.uid] = req
+        self.sched.submit(req, now=now)
+
+    def set_tier(self, index: int):
+        self.sched.set_tier(self.tiers[index])
+
+    def step(self, now: float | None = None) -> dict:
+        """One scheduler step; returns {uid: np.ndarray} finished now."""
+        if self.killed or self.wedged or not self.alive:
+            return {}
+        self._steps += 1
+        self.sched.step(now=now)
+        if self.heartbeat is not None:
+            self.heartbeat.beat(self._steps)
+        finished = self.sched.results
+        self.sched.results = {}
+        for uid in finished:
+            self._inflight.pop(uid, None)
+        return finished
+
+    def inflight(self) -> list[Request]:
+        return list(self._inflight.values())
+
+    def drain(self) -> list[Request]:
+        """Evacuate for requeue. A live replica frees its slots/pages
+        via the scheduler; a killed one is abandoned wholesale and the
+        fleet-side inflight copy is the source of truth."""
+        if not self.killed:
+            self.sched.drain_requests()
+        out = list(self._inflight.values())
+        self._inflight.clear()
+        return out
+
+    def kill(self):
+        """Simulate abrupt death (the in-process stand-in for SIGKILL)."""
+        self.killed = True
+
+    def failure_reason(self, heartbeat_timeout=None, now=None):
+        if self.killed:
+            return "killed"
+        if (heartbeat_timeout is not None and self.heartbeat is not None
+                and self.heartbeat.stale(heartbeat_timeout, now=now)):
+            return "heartbeat-stale"
+        return None
+
+    def close(self):
+        self.alive = False
+
+
+class SubprocessReplica:
+    """Fleet replica living in its own OS process (true multi-process).
+
+    The worker (`_worker_main`) builds an engine from the SAME
+    (arch, seed) the parent used -- `models.api.init` is deterministic,
+    so both sides hold identical weights -- and serves a managed
+    scheduler over a JSON-lines pipe protocol:
+
+        {"cmd": "submit", "uid": .., "prompt": [..], "max_new_tokens": n,
+         "eos_id": .., "priority": false}
+        {"cmd": "step"}      -> {"worked": b, "finished": [[uid, [t..]]..],
+                                 "load": f, "tier": name}
+        {"cmd": "set_tier", "index": i}
+        {"cmd": "stop"}
+
+    Health is observed two ways: `proc.poll()` catches a dead process
+    (SIGKILL closes the pipe, so the next read sees EOF immediately),
+    and the worker's per-step `Heartbeat` file catches a hung-but-alive
+    one. Requests are mirrored parent-side; a finished result only
+    leaves `inflight` when its step response arrives, so a worker dying
+    between computing and reporting a result still requeues it -- the
+    deterministic replay makes that safe.
+    """
+
+    def __init__(self, rid: int, *, arch: str, seed: int = 0,
+                 reduced: bool = True, num_layers: int | None = None,
+                 num_slots: int = 4, max_len: int = 64,
+                 heartbeat_path: str | None = None,
+                 rpc_timeout: float = 600.0, env=None):
+        self.rid = rid
+        self.alive = True
+        self.killed = False
+        self.monitor: StepMonitor | None = None
+        self._inflight: dict[object, Request] = {}
+        self._last_load = 0.0
+        self._pending = 0
+        self._tier = "int8"
+        self.rpc_timeout = rpc_timeout
+        self.heartbeat = (Heartbeat(heartbeat_path)
+                          if heartbeat_path else None)
+        # a -c entry, not `-m repro.serve.fleet`: the package __init__
+        # imports this module, so runpy would warn about the double
+        # import before executing it as __main__
+        cmd = [sys.executable, "-c",
+               "import sys; from repro.serve.fleet import _worker_main; "
+               "sys.exit(_worker_main(sys.argv[1:]))",
+               "--worker", "--arch", arch, "--seed", str(seed),
+               "--num-slots", str(num_slots), "--max-len", str(max_len)]
+        if reduced:
+            cmd.append("--reduced")
+        if num_layers:
+            cmd += ["--layers", str(num_layers)]
+        if heartbeat_path:
+            cmd += ["--heartbeat", heartbeat_path]
+        wenv = dict(os.environ if env is None else env)
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))))), "src")
+        wenv["PYTHONPATH"] = src + os.pathsep + wenv.get("PYTHONPATH", "")
+        wenv.setdefault("JAX_PLATFORMS", "cpu")
+        # one plain CPU device per worker: DP parallelism comes from the
+        # processes themselves, not from a forced in-process device count
+        wenv.pop("XLA_FLAGS", None)
+        self.proc = subprocess.Popen(cmd, stdin=subprocess.PIPE,
+                                     stdout=subprocess.PIPE, env=wenv,
+                                     text=True, bufsize=1)
+        ready = self._read(self.rpc_timeout)
+        if not ready or not ready.get("ready"):
+            raise ReplicaFailed(f"replica {rid}: worker failed to start")
+
+    # -- transport ---------------------------------------------------------
+
+    def _read(self, timeout: float):
+        import select
+        r, _, _ = select.select([self.proc.stdout], [], [], timeout)
+        if not r:
+            raise ReplicaFailed(f"replica {self.rid}: rpc timeout")
+        line = self.proc.stdout.readline()
+        if not line:                     # EOF: the worker died
+            raise ReplicaFailed(f"replica {self.rid}: worker EOF")
+        return json.loads(line)
+
+    def _rpc(self, cmd: dict) -> dict:
+        try:
+            self.proc.stdin.write(json.dumps(cmd) + "\n")
+            self.proc.stdin.flush()
+            return self._read(self.rpc_timeout)
+        except (BrokenPipeError, OSError, ReplicaFailed):
+            self.killed = True
+            raise ReplicaFailed(f"replica {self.rid}: worker gone")
+
+    # -- replica interface -------------------------------------------------
+
+    @property
+    def tier_name(self) -> str:
+        return self._tier
+
+    def load(self) -> float:
+        return self._last_load + self._pending
+
+    def submit(self, req: Request, now: float | None = None):
+        self._inflight[req.uid] = req
+        self._pending += 1
+        self._rpc({"cmd": "submit", "uid": req.uid,
+                   "prompt": [int(t) for t in req.prompt],
+                   "max_new_tokens": req.max_new_tokens,
+                   "eos_id": req.eos_id, "priority": req.priority})
+
+    def set_tier(self, index: int):
+        self._tier = self._rpc({"cmd": "set_tier",
+                                "index": int(index)})["tier"]
+
+    def step(self, now: float | None = None) -> dict:
+        if self.killed or not self.alive:
+            return {}
+        resp = self._rpc({"cmd": "step"})
+        self._last_load = float(resp["load"])
+        self._pending = 0
+        self._tier = resp["tier"]
+        finished = {}
+        for uid, toks in resp["finished"]:
+            key = next((k for k in self._inflight if k == uid), uid)
+            finished[key] = np.asarray(toks, np.int32)
+            self._inflight.pop(key, None)
+        return finished
+
+    def inflight(self) -> list[Request]:
+        return list(self._inflight.values())
+
+    def drain(self) -> list[Request]:
+        out = list(self._inflight.values())
+        self._inflight.clear()
+        return out
+
+    def kill(self):
+        self.killed = True
+        self.proc.kill()
+        try:
+            self.proc.wait(timeout=5)
+        except subprocess.TimeoutExpired:
+            pass
+
+    def failure_reason(self, heartbeat_timeout=None, now=None):
+        if self.killed or self.proc.poll() is not None:
+            return "exited"
+        if (heartbeat_timeout is not None and self.heartbeat is not None
+                and self.heartbeat.stale(heartbeat_timeout)):
+            return "heartbeat-stale"
+        return None
+
+    def close(self):
+        self.alive = False
+        if self.proc.poll() is None:
+            try:
+                self.proc.stdin.write(json.dumps({"cmd": "stop"}) + "\n")
+                self.proc.stdin.flush()
+            except (BrokenPipeError, OSError):
+                pass
+            try:
+                self.proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+
+
+class Fleet:
+    """N replicas behind one global admission queue + FleetRouter.
+
+    Per `step()`:
+
+      1. HEALTH -- poll each live replica (`failure_reason`: killed /
+         exited / stale heartbeat / chronic straggler); failed replicas
+         are drained, their in-flight requests requeued to the FRONT of
+         the global queue, and retired from dispatch.
+      2. ROUTE -- global load (queue depth + every live replica's load
+         signal) feeds `FleetRouter.observe`; changed per-replica
+         assignments are pushed down via `set_tier` (a cache lookup +
+         jit-cache hit after each representation's first visit).
+      3. DISPATCH -- drain the global queue: priority requests go to
+         the least-loaded PINNED replica (never below the router's
+         int4 pin floor), everything else to the least-loaded live
+         replica.
+      4. STEP -- one scheduler step per live replica; finished results
+         are harvested into `self.results` immediately, and each step's
+         wall duration feeds the replica's `StepMonitor`.
+
+    `straggler_retire` (off by default) turns the StepMonitor signal
+    into the same drain-and-requeue path a kill takes: a replica
+    flagged that many times is treated as failed.
+    """
+
+    def __init__(self, replicas, tiers, *, thresholds=None,
+                 cooldown: int = 4, pinned=(0,), pin_floor: int = 1,
+                 heartbeat_timeout: float | None = None,
+                 straggler_retire: int = 0,
+                 clock=time.perf_counter):
+        self.replicas = list(replicas)
+        assert self.replicas
+        self.tiers = tuple(tiers)
+        self.router = FleetRouter(self.tiers, len(self.replicas),
+                                  thresholds=thresholds, cooldown=cooldown,
+                                  pinned=pinned, pin_floor=pin_floor)
+        self.heartbeat_timeout = heartbeat_timeout
+        self.straggler_retire = straggler_retire
+        self.clock = clock
+        self.queue: collections.deque[Request] = collections.deque()
+        self.results: dict[object, np.ndarray] = {}
+        self.metrics = FleetMetrics()
+        self._applied = [0] * len(self.replicas)
+        self._straggles = [0] * len(self.replicas)
+        self._step_no = 0
+        for rep in self.replicas:
+            if rep.monitor is None and isinstance(rep, Replica):
+                rep.monitor = StepMonitor()
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(self, req: Request, now: float | None = None):
+        now = self.clock() if now is None else now
+        self.metrics.on_submit(req.uid, now, req.prompt.size,
+                               priority=req.priority)
+        self.queue.append(req)
+
+    def live(self) -> list:
+        return [r for r in self.replicas if r.alive]
+
+    def load_signal(self) -> float:
+        return len(self.queue) + sum(r.load() for r in self.live())
+
+    # -- failure handling --------------------------------------------------
+
+    def _retire(self, rep, reason: str, now: float):
+        requeued = rep.drain()
+        rep.alive = False
+        # hard-kill, not graceful stop: a hung worker (stale heartbeat)
+        # would never answer a stop command
+        rep.kill()
+        self.metrics.on_replica_failure(rep.rid, reason, now)
+        if requeued:
+            self.metrics.on_requeue([r.uid for r in requeued],
+                                    rep.rid, now)
+            # front of the queue: evacuated requests were admitted first
+            self.queue.extendleft(reversed(requeued))
+
+    def _check_health(self, now: float):
+        for i, rep in enumerate(self.replicas):
+            if not rep.alive:
+                continue
+            reason = rep.failure_reason(self.heartbeat_timeout, now=now)
+            if reason is None and (self.straggler_retire
+                                   and self._straggles[i]
+                                   >= self.straggler_retire):
+                reason = "straggler"
+            if reason is not None:
+                self._retire(rep, reason, now)
+
+    def kill(self, rid: int):
+        """Hard-kill one replica (bench/test hook); the next step's
+        health phase drains and requeues it."""
+        self.replicas[rid].kill()
+
+    # -- routing + dispatch ------------------------------------------------
+
+    def _route(self):
+        loads = [r.load() if r.alive else float("inf")
+                 for r in self.replicas]
+        self.router.observe(self.load_signal(), loads)
+        for i, rep in enumerate(self.replicas):
+            want = self.router.indices[i]
+            if rep.alive and want != self._applied[i]:
+                rep.set_tier(want)
+                self._applied[i] = want
+
+    def _pick(self, candidates):
+        return min(candidates, key=lambda r: (r.load(), r.rid))
+
+    def _dispatch(self, now: float):
+        live = self.live()
+        if not live:
+            if self.queue:
+                raise RuntimeError("fleet has no live replicas left but "
+                                   f"{len(self.queue)} queued request(s)")
+            return 0
+        pinned_live = [r for r in live if r.rid in self.router.pinned]
+        n = 0
+        while self.queue:
+            req = self.queue.popleft()
+            if req.priority and pinned_live:
+                rep = self._pick(pinned_live)
+            elif req.priority:
+                # every pinned replica is gone: best-bits fallback keeps
+                # priority traffic as high-precision as the fleet can
+                rep = min(live, key=lambda r: (self.router.indices[r.rid],
+                                               r.load(), r.rid))
+            else:
+                rep = self._pick(live)
+            rep.submit(req, now=now)
+            self.metrics.on_dispatch(req.uid, rep.rid,
+                                     self.router.indices[rep.rid], now)
+            n += 1
+        return n
+
+    # -- the loop ----------------------------------------------------------
+
+    def step(self, now: float | None = None) -> bool:
+        now = self.clock() if now is None else now
+        self._step_no += 1
+        self._check_health(now)
+        self._route()
+        dispatched = self._dispatch(now)
+        finished_any = 0
+        worked = False
+        for i, rep in enumerate(self.replicas):
+            if not rep.alive:
+                continue
+            t0 = self.clock()
+            finished = rep.step(now=now)
+            dt = self.clock() - t0
+            monitor = getattr(rep, "monitor", None)
+            if monitor is not None and monitor.record(self._step_no, dt):
+                self._straggles[i] += 1
+                self.metrics.on_straggler(rep.rid)
+            worked = worked or bool(finished) or bool(rep.inflight())
+            t_fin = self.clock()
+            for uid, toks in finished.items():
+                self.results[uid] = toks
+                self.metrics.on_finish(uid, t_fin, int(len(toks)))
+                finished_any += 1
+        alive = {r.rid: r for r in self.live()}
+        self.metrics.on_step(
+            {rid: r.tier_name for rid, r in alive.items()},
+            {rid: self.router.indices[rid] for rid in alive},
+            self.router.mean_effective_bits(), len(self.queue))
+        return bool(dispatched or finished_any or worked)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r.inflight() for r in self.live())
+
+    def run_until_idle(self, max_steps: int = 100_000):
+        steps = 0
+        while self.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("fleet did not drain")
+        return self.results
+
+    def run_trace(self, trace, max_steps: int = 1_000_000,
+                  on_step=None):
+        """Replay (offset_seconds, Request) arrivals through the fleet
+        (open loop; same virtual-clock fallback as the scheduler's
+        `run_trace`). `on_step(fleet, step_index)` is a bench hook --
+        e.g. kill a replica at a fixed point in the replay."""
+        trace = sorted(trace, key=lambda it: it[0])
+        t0 = self.clock()
+        i = 0
+        steps = 0
+        virtual = False
+        while i < len(trace) or self.has_work():
+            now = self.clock()
+            while i < len(trace) and t0 + trace[i][0] <= now:
+                self.submit(trace[i][1], now=t0 + trace[i][0])
+                i += 1
+            if not self.step() and i < len(trace):
+                wait = t0 + trace[i][0] - self.clock()
+                if wait > 0:
+                    if not virtual:
+                        time.sleep(min(wait, 0.05))
+                        virtual = self.clock() <= now
+                    if virtual:
+                        self.submit(trace[i][1], now=self.clock())
+                        i += 1
+            if on_step is not None:
+                on_step(self, steps)
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("fleet trace replay did not drain")
+        return self.results
+
+    def close(self):
+        for rep in self.replicas:
+            rep.close()
+
+
+def build_fleet(params, cfg, *, replicas: int, num_slots: int = 4,
+                max_len: int = 64, tiers=None, thresholds=None,
+                cooldown: int = 4, pinned=(0,), pin_floor: int = 1,
+                heartbeat_dir: str | None = None,
+                heartbeat_timeout: float | None = None,
+                straggler_retire: int = 0, clock=time.perf_counter,
+                engine_kwargs=None) -> Fleet:
+    """Build an in-process fleet: one Engine per replica over disjoint
+    device subsets (`launch.mesh.make_replica_meshes`; on a bare
+    single-device host all replicas share the default device)."""
+    import jax
+
+    from repro.launch.mesh import make_replica_meshes
+    from repro.serve.engine import Engine, ServeConfig
+
+    tiers = tuple(tiers) if tiers else default_tiers(cfg.num_layers)
+    meshes = (make_replica_meshes(replicas)
+              if len(jax.devices()) > 1 else [None] * replicas)
+    reps = []
+    for rid in range(replicas):
+        engine = Engine(params, cfg,
+                        ServeConfig(bits=8, max_len=max_len,
+                                    num_slots=num_slots,
+                                    **(engine_kwargs or {})),
+                        mesh=meshes[rid])
+        hb = None
+        if heartbeat_dir is not None:
+            hb = Heartbeat(os.path.join(heartbeat_dir,
+                                        f"replica-{rid}.json"), clock=clock)
+        reps.append(Replica(rid, engine, tiers, num_slots=num_slots,
+                            max_len=max_len, clock=clock, heartbeat=hb))
+    return Fleet(reps, tiers, thresholds=thresholds, cooldown=cooldown,
+                 pinned=pinned, pin_floor=pin_floor,
+                 heartbeat_timeout=heartbeat_timeout,
+                 straggler_retire=straggler_retire, clock=clock)
+
+
+# -- subprocess worker -------------------------------------------------------
+
+def _worker_main(argv=None) -> int:
+    """`python -m repro.serve.fleet --worker`: one replica, JSON-lines
+    protocol on stdin/stdout (see SubprocessReplica). stdout carries
+    ONLY protocol lines; jax warnings go to stderr."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true", required=True)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--heartbeat", default=None)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.layers:
+        cfg = cfg.replace(num_layers=args.layers)
+    params = api.init(jax.random.PRNGKey(args.seed), cfg)
+    engine = Engine(params, cfg, ServeConfig(bits=8, max_len=args.max_len,
+                                             num_slots=args.num_slots))
+    tiers = default_tiers(cfg.num_layers)
+    sched = engine.scheduler(managed=True, tiers=tiers)
+    hb = Heartbeat(args.heartbeat) if args.heartbeat else None
+    if hb is not None:
+        hb.beat(0)
+    steps = 0
+
+    def reply(obj):
+        sys.stdout.write(json.dumps(obj) + "\n")
+        sys.stdout.flush()
+
+    reply({"ready": True, "tier": sched.tier_name})
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        cmd = json.loads(line)
+        op = cmd.get("cmd")
+        if op == "submit":
+            sched.submit(Request(uid=cmd["uid"],
+                                 prompt=np.asarray(cmd["prompt"], np.int32),
+                                 max_new_tokens=int(cmd["max_new_tokens"]),
+                                 eos_id=cmd.get("eos_id"),
+                                 priority=bool(cmd.get("priority"))))
+            reply({"ok": True})
+        elif op == "step":
+            steps += 1
+            worked = sched.step()
+            if hb is not None:
+                hb.beat(steps)
+            finished = [[uid, [int(t) for t in toks]]
+                        for uid, toks in sched.results.items()]
+            sched.results = {}
+            reply({"worked": bool(worked), "finished": finished,
+                   "load": sched.load_signal() + len(sched.active),
+                   "tier": sched.tier_name})
+        elif op == "set_tier":
+            sched.set_tier(tiers[int(cmd["index"])])
+            reply({"ok": True, "tier": sched.tier_name})
+        elif op == "stop":
+            reply({"ok": True})
+            break
+        else:
+            reply({"error": f"unknown cmd {op!r}"})
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_worker_main())

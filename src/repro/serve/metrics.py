@@ -4,7 +4,9 @@ The scheduler feeds this with explicit timestamps (a `clock()` float,
 wall time in the live driver, a virtual clock in tests), so the module
 is deterministic under test. `summary()` flattens everything into a
 plain dict of floats/ints that the benchmarks serialize as
-BENCH_serve.json.
+BENCH_serve.json. `FleetMetrics` is the N-replica twin: per-replica
+tier occupancy, requeue/failure counters, and the zero-request-loss
+accounting the fleet benchmarks report (serve/fleet.py).
 """
 
 from __future__ import annotations
@@ -13,12 +15,20 @@ import dataclasses
 
 
 def _percentile(values: list[float], q: float) -> float:
-    """Linear-interpolation percentile (numpy's default), q in [0, 100]."""
+    """Linear-interpolation percentile (numpy's default), q in [0, 100].
+
+    Empty windows report 0.0 (a metric, not an error); a single sample
+    IS every percentile of its window. q is clamped into [0, 100]: the
+    unclamped rank formula extrapolates outside the sorted range for
+    out-of-range q (int() truncates a negative rank toward zero, so
+    q < 0 used to yield `vs[0] - eps * (vs[1] - vs[0])`, below the
+    window minimum)."""
     if not values:
         return 0.0
     vs = sorted(values)
     if len(vs) == 1:
         return float(vs[0])
+    q = min(max(float(q), 0.0), 100.0)
     rank = (len(vs) - 1) * q / 100.0
     lo = int(rank)
     hi = min(lo + 1, len(vs) - 1)
@@ -286,4 +296,133 @@ class ServeMetrics:
             "verify_steps_per_token": (self.spec_rounds / self.spec_emitted
                                        if self.spec_emitted else 0.0),
             "tier_rounds": dict(sorted(self.spec_tier_rounds.items())),
+        }
+
+
+class FleetMetrics:
+    """Fleet-level accounting over N replicas (serve/fleet.py).
+
+    Request lifecycle is tracked at the FLEET boundary (submit ->
+    dispatch -> finish), independent of which replica -- or how many,
+    after requeues -- a request visits, so `requests_lost` is an
+    end-to-end number: submitted minus completed after the fleet
+    drains. Per-replica tier occupancy is sampled once per fleet step
+    from each replica's live tier, which works identically for
+    in-process and subprocess replicas (the latter report their tier in
+    every step response).
+    """
+
+    def __init__(self):
+        self.requests: dict[object, RequestRecord] = {}
+        self.dispatch_replica: dict[object, int] = {}    # last dispatch
+        self.dispatch_tier_index: dict[object, int] = {}
+        self.priority_uids: set = set()
+        self.steps = 0
+        self.replica_tier_steps: dict[int, dict[str, int]] = {}
+        self.queue_depth_samples: list[int] = []
+        self.mean_bits_samples: list[float] = []
+        self.tier_switches = 0
+        self._last_indices: tuple | None = None
+        self.requeued_requests = 0
+        self.replica_failures: list[dict] = []
+        self.straggler_events: dict[int, int] = {}
+
+    # -- request lifecycle -------------------------------------------------
+
+    def on_submit(self, uid, now: float, prompt_tokens: int,
+                  priority: bool = False):
+        self.requests[uid] = RequestRecord(
+            uid=uid, arrival=now, prompt_tokens=prompt_tokens)
+        if priority:
+            self.priority_uids.add(uid)
+
+    def on_dispatch(self, uid, replica: int, tier_index: int, now: float):
+        rec = self.requests[uid]
+        if rec.admitted is None:
+            rec.admitted = now
+        self.dispatch_replica[uid] = int(replica)
+        self.dispatch_tier_index[uid] = int(tier_index)
+
+    def on_finish(self, uid, now: float, generated_tokens: int):
+        rec = self.requests[uid]
+        rec.finished = now
+        rec.generated_tokens = generated_tokens
+
+    def on_requeue(self, uids, replica: int, now: float):
+        self.requeued_requests += len(list(uids))
+
+    def on_replica_failure(self, replica: int, reason: str, now: float):
+        self.replica_failures.append(
+            {"replica": int(replica), "reason": reason, "time": float(now)})
+
+    def on_straggler(self, replica: int):
+        self.straggler_events[replica] = (
+            self.straggler_events.get(replica, 0) + 1)
+
+    # -- per-step counters -------------------------------------------------
+
+    def on_step(self, tier_names, tier_indices, mean_effective_bits: float,
+                queue_depth: int):
+        """One fleet step: each ALIVE replica's current tier name/index
+        (dead replicas are skipped by the caller) plus the global queue
+        depth and the router's fleet-wide mean effective bits."""
+        self.steps += 1
+        for rid, name in tier_names.items():
+            per = self.replica_tier_steps.setdefault(rid, {})
+            per[name] = per.get(name, 0) + 1
+        self.queue_depth_samples.append(int(queue_depth))
+        self.mean_bits_samples.append(float(mean_effective_bits))
+        idx = tuple(sorted(tier_indices.items()))
+        if self._last_indices is not None and idx != self._last_indices:
+            self.tier_switches += sum(
+                1 for (r, i), (r2, i2) in zip(idx, self._last_indices)
+                if r == r2 and i != i2)
+        self._last_indices = idx
+
+    # -- aggregation -------------------------------------------------------
+
+    def summary(self) -> dict:
+        done = [r for r in self.requests.values() if r.finished is not None]
+        lats = [r.latency for r in done if r.latency is not None]
+        gen = sum(r.generated_tokens for r in done)
+        span = 0.0
+        if done:
+            t0 = min(r.arrival for r in done)
+            t1 = max(r.finished for r in done)
+            span = max(t1 - t0, 1e-9)
+        per_replica = {}
+        for rid, steps in sorted(self.replica_tier_steps.items()):
+            total = max(sum(steps.values()), 1)
+            per_replica[str(rid)] = {
+                "steps": sum(steps.values()),
+                "tier_occupancy": {t: n / total
+                                   for t, n in sorted(steps.items())},
+                "requests": sum(1 for u, r in self.dispatch_replica.items()
+                                if r == rid),
+                "straggler_events": self.straggler_events.get(rid, 0),
+            }
+        return {
+            "requests_submitted": len(self.requests),
+            "requests_completed": len(done),
+            "requests_lost": len(self.requests) - len(done),
+            "requeued_requests": self.requeued_requests,
+            "replica_failures": self.replica_failures,
+            "priority_requests": len(self.priority_uids),
+            "generated_tokens": gen,
+            "throughput_tok_s": gen / span if done else 0.0,
+            "mean_latency_s": sum(lats) / len(lats) if lats else 0.0,
+            "p50_latency_s": _percentile(lats, 50.0),
+            "p95_latency_s": _percentile(lats, 95.0),
+            "fleet_steps": self.steps,
+            "tier_switches": self.tier_switches,
+            "mean_queue_depth": (sum(self.queue_depth_samples)
+                                 / len(self.queue_depth_samples)
+                                 if self.queue_depth_samples else 0.0),
+            "max_queue_depth": max(self.queue_depth_samples, default=0),
+            "mean_effective_bits_mean": (sum(self.mean_bits_samples)
+                                         / len(self.mean_bits_samples)
+                                         if self.mean_bits_samples else 0.0),
+            "mean_effective_bits_min": min(self.mean_bits_samples,
+                                           default=0.0),
+            "per_replica": per_replica,
         }

@@ -17,6 +17,12 @@ upgrades require the measured load to sit below the lower tier's
 threshold for `cooldown` consecutive observations (hysteresis, so the
 scheduler does not thrash across a threshold).
 
+`FleetRouter` lifts the same ladder + hysteresis to N data-parallel
+replicas (serve/fleet.py): one global load signal buys a budget of
+downgrade steps spent concentrate-first on the least-loaded replicas,
+with >= 1 pinned replica never dropping below int4 so priority traffic
+keeps a high-bit home.
+
 `TierCache` owns the parent params and materializes each tier's served
 weights on first use; afterwards a switch is a dict lookup (O(1)), so
 the scheduler can flip tiers between two decode steps. Two layouts:
@@ -156,6 +162,129 @@ class ElasticPrecisionRouter:
         else:
             self._calm_steps = 0
         return self.tiers[self.index]
+
+
+class FleetRouter:
+    """Per-replica tier assignment for N data-parallel replicas.
+
+    The single-replica router downgrades EVERYONE when load crosses a
+    threshold; at fleet scale that is the wrong shape -- shedding load
+    should cost quality on the replicas that can spare it, not on every
+    request in flight. This router maps one global load signal to a
+    BUDGET of downgrade steps (`thresholds[s]` is the load above which
+    the fleet owes s+1 steps, so the budget is monotone in load) and
+    spends the budget concentrate-first: the replica earliest in fill
+    order absorbs rungs down to its floor before the next replica gives
+    up anything, so moderate overload degrades SOME replicas while the
+    rest keep serving int8.
+
+    Fill order is computed per observation: already-downgraded replicas
+    first (deepest first -- assignments are sticky, so a shifting
+    least-loaded ordering does not bounce the downgrade between
+    replicas), then colder replicas before hotter ones ("downgrade the
+    least-loaded first": the busy replicas are the ones serving the
+    latency-sensitive bulk). Pinned replicas fill LAST and never drop
+    below `pin_floor` (default tier index 1 = int4), so priority /
+    deadline traffic dispatched to them never lands on a sub-int4
+    replica no matter the load.
+
+    Recovery reuses the single-router hysteresis semantics per replica:
+    a downgrade applies immediately, an upgrade needs `cooldown`
+    consecutive calm observations and then climbs ONE rung at a time --
+    a replica recovering from int2 always passes through int2+ep.
+    """
+
+    def __init__(self, tiers, num_replicas: int, thresholds=None,
+                 cooldown: int = 4, pinned=(0,), pin_floor: int = 1):
+        assert num_replicas >= 1
+        self.tiers = tuple(tiers)
+        self.num_replicas = num_replicas
+        steps = num_replicas * (len(self.tiers) - 1)
+        if thresholds is None:
+            # linear ramp: each additional `base` units of global load
+            # buys one more downgrade step somewhere in the fleet
+            thresholds = tuple(4.0 * (s + 1) for s in range(steps))
+        assert len(thresholds) == steps
+        assert list(thresholds) == sorted(thresholds)
+        self.thresholds = tuple(float(t) for t in thresholds)
+        self.cooldown = cooldown
+        self.pinned = frozenset(int(r) for r in pinned)
+        assert all(0 <= r < num_replicas for r in self.pinned)
+        self.pin_floor = int(pin_floor)
+        self.indices = [0] * num_replicas
+        self._calm = [0] * num_replicas
+
+    @property
+    def tier_by_replica(self) -> tuple[PrecisionTier, ...]:
+        return tuple(self.tiers[i] for i in self.indices)
+
+    def reset(self):
+        self.indices = [0] * self.num_replicas
+        self._calm = [0] * self.num_replicas
+
+    def floor(self, replica: int) -> int:
+        """Deepest tier index replica may reach (pin caps the drop)."""
+        if replica in self.pinned:
+            return min(self.pin_floor, len(self.tiers) - 1)
+        return len(self.tiers) - 1
+
+    def desired_steps(self, load: float) -> int:
+        """Total downgrade-step budget owed at `load` (monotone)."""
+        s = 0
+        for thr in self.thresholds:
+            if load > thr:
+                s += 1
+        return s
+
+    def desired_indices(self, load: float, order=None) -> tuple[int, ...]:
+        """Budget spent concentrate-first along `order` (default: replica
+        id order). For ANY fixed order this is pointwise monotone in
+        `load`: a larger budget only ever extends the fill prefix."""
+        if order is None:
+            order = range(self.num_replicas)
+        budget = self.desired_steps(load)
+        out = [0] * self.num_replicas
+        for r in order:
+            take = min(budget, self.floor(r))
+            out[r] = take
+            budget -= take
+            if budget <= 0:
+                break
+        return tuple(out)
+
+    def _fill_order(self, replica_loads) -> list[int]:
+        """Sticky concentrate order: deepest-downgraded first, then
+        least-loaded, pinned replicas always at the tail."""
+        def key(r):
+            return (-self.indices[r], float(replica_loads[r]), r)
+        unpinned = [r for r in range(self.num_replicas)
+                    if r not in self.pinned]
+        return sorted(unpinned, key=key) + sorted(self.pinned, key=key)
+
+    def observe(self, load: float, replica_loads) -> tuple[PrecisionTier, ...]:
+        """Feed one global load + per-replica loads; returns the tier
+        each replica serves NOW."""
+        assert len(replica_loads) == self.num_replicas
+        desired = self.desired_indices(load, self._fill_order(replica_loads))
+        for r in range(self.num_replicas):
+            if desired[r] > self.indices[r]:   # overload: drop immediately
+                self.indices[r] = desired[r]
+                self._calm[r] = 0
+            elif desired[r] < self.indices[r]:  # calm: hysteresis recovery
+                self._calm[r] += 1
+                if self._calm[r] >= self.cooldown:
+                    self.indices[r] -= 1        # one rung at a time
+                    self._calm[r] = 0
+            else:
+                self._calm[r] = 0
+        return self.tier_by_replica
+
+    def mean_effective_bits(self) -> float:
+        """Fleet-wide mean of the served tiers' nominal effective bits
+        (strictly decreasing down the ladder, so pointwise-deeper
+        assignments always push this down)."""
+        return (sum(self.tiers[i].effective_bits for i in self.indices)
+                / self.num_replicas)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -99,11 +99,18 @@ def _row_bucket(n: int) -> int:
 
 @dataclasses.dataclass
 class Request:
-    """One generation request."""
+    """One generation request.
+
+    priority: deadline-sensitive traffic. A single scheduler treats it
+    like any other request; the fleet dispatcher (serve/fleet.py)
+    routes priority requests to a pinned high-bit replica so they never
+    decode below int4.
+    """
     uid: object
     prompt: np.ndarray                  # (S,) int32 token ids
     max_new_tokens: int
     eos_id: int | None = None
+    priority: bool = False
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -190,6 +197,7 @@ class ContinuousBatchingScheduler:
                  kv: kv_cache.KVCacheConfig | None = None,
                  router: ElasticPrecisionRouter | None = None,
                  tier_cache: TierCache | None = None,
+                 tier=None,
                  packed_bits=None,
                  spec_decode: specdecode.SpecDecodeConfig | None = None,
                  draft_source=None,
@@ -252,6 +260,12 @@ class ContinuousBatchingScheduler:
                                         # per admission burst, not O(N))
         if router is not None:
             self._set_tier(router.tier)
+        elif tier_cache is not None:
+            # fleet-managed elastic mode: no local router -- an external
+            # policy (serve/fleet.py's FleetRouter) owns the tier and
+            # drives it through `set_tier`; `tier` seeds the initial one
+            assert tier is not None, "tier_cache without router needs tier="
+            self._set_tier(tier)
         else:
             assert params is not None
             self.tier = None
@@ -562,6 +576,41 @@ class ContinuousBatchingScheduler:
             weight_nbytes=entry.weight_nbytes,
             effective_bits=entry.effective_bits,
             per_device_plane_nbytes=entry.per_device_plane_nbytes)
+
+    def set_tier(self, tier):
+        """Externally swap the served tier (fleet-managed elastic mode).
+
+        The cache lookup + param swap is `_set_tier`; this public entry
+        exists for callers OUTSIDE the scheduler's own routing loop --
+        the fleet's global router assigns each replica its tier and
+        pushes it here between two steps. No-op when the tier is
+        already serving (revisits stay dict lookups + jit-cache hits).
+        """
+        if self.tier_cache is None:
+            raise ValueError("set_tier needs elastic serving (tier_cache); "
+                             "this scheduler serves a fixed tier")
+        if self.tier is None or tier.name != self.tier.name:
+            self._set_tier(tier)
+
+    def drain_requests(self) -> list[Request]:
+        """Evacuate every queued AND in-flight request for requeueing.
+
+        The fleet calls this when a replica must stop serving (it is
+        being retired, or a sibling's failure handling rehearses on a
+        live scheduler): slots and pages are freed, and the ORIGINAL
+        Request objects come back -- partial generations are discarded,
+        which is safe because greedy decode is deterministic, so a
+        fresh replay on a survivor reproduces the identical tokens.
+        Finished results already harvested are untouched.
+        """
+        out = [self.active[slot].req for slot in sorted(self.active)]
+        for slot in list(self.active):
+            self.active.pop(slot)
+            self.pool.free(slot)
+            self.pos[slot] = 0
+        out += list(self.queue)
+        self.queue.clear()
+        return out
 
     def reset(self):
         """Clear all requests/bookkeeping but keep the compiled closures.

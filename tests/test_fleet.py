@@ -1,0 +1,689 @@
+"""Replica fleet serving tests (serve/fleet.py + FleetRouter).
+
+Covers the fleet acceptance surface: per-replica tier assignment under
+load (downgrade some-not-all, pin floor for priority traffic),
+hysteresis recovery that never skips a rung, zero-request-loss
+kill/requeue with token-identical replays, heartbeat/straggler health
+signals driving the same drain path, the fleet-managed scheduler mode,
+the one-compile-per-representation-key contract per replica, and the
+multi-process transport (a SIGKILLed worker is a REAL process death).
+
+Device-count agnostic: on a bare single-device host the in-process
+replicas share one device; the `fleet` CI lane reruns this module
+under XLA_FLAGS=--xla_force_host_platform_device_count=8 so each
+replica owns a disjoint device subset.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models import api
+from repro.runtime.compile_guard import assert_no_recompiles
+from repro.runtime.fault import Heartbeat, StepMonitor
+from repro.serve import (Engine, Fleet, FleetRouter, Request, ServeConfig,
+                         SubprocessReplica, default_tiers)
+from repro.serve.fleet import build_fleet
+from repro.serve.metrics import _percentile
+
+KEY = jax.random.PRNGKey(0)
+ARCH = "qwen3_1_7b"
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _pinned_thresholds(tiers, replicas):
+    """Hold every replica at int8: no load ever crosses a threshold."""
+    return (float("inf"),) * (replicas * (len(tiers) - 1))
+
+
+def _requests(cfg, n, *, prompt_len=8, gen=4, priority=()):
+    rng = np.random.default_rng(0)
+    return [Request(uid=f"r{i}",
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=prompt_len).astype(np.int32),
+                    max_new_tokens=gen, priority=(i in priority))
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config(ARCH).reduced()
+    params = api.init(KEY, cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def single_results(served):
+    """Token baseline: the same requests through a 1-replica fleet."""
+    cfg, params = served
+    tiers = default_tiers(cfg.num_layers)
+    fleet = build_fleet(params, cfg, replicas=1, num_slots=2, max_len=32,
+                        thresholds=_pinned_thresholds(tiers, 1))
+    for req in _requests(cfg, 6):
+        fleet.submit(req)
+    results = fleet.run_until_idle()
+    fleet.close()
+    assert fleet.metrics.summary()["requests_lost"] == 0
+    return {uid: np.asarray(toks) for uid, toks in results.items()}
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter policy (no model required)
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_router_downgrades_some_not_all():
+    tiers = default_tiers(4)
+    router = FleetRouter(tiers, 4, pinned=(0,))
+    # budget of 5 steps at load 22 (thresholds 4, 8, 12, 16, 20, 24, ...)
+    router.observe(22.0, [1.0, 5.0, 3.0, 2.0])
+    assert router.indices == [0, 0, 1, 4]
+    # some replicas downgraded, some untouched -- never the whole fleet
+    assert any(i == 0 for i in router.indices)
+    assert any(i > 0 for i in router.indices)
+
+
+def test_fleet_router_desired_indices_monotone():
+    tiers = default_tiers(4)
+    router = FleetRouter(tiers, 3, pinned=(0,))
+    prev = router.desired_indices(0.0)
+    for load in range(0, 200, 3):
+        cur = router.desired_indices(float(load))
+        assert all(c >= p for c, p in zip(cur, prev)), (load, prev, cur)
+        prev = cur
+
+
+def test_fleet_router_pin_floor_holds_at_any_load():
+    tiers = default_tiers(4)
+    router = FleetRouter(tiers, 4, pinned=(0,), pin_floor=1)
+    router.observe(1e9, [1.0] * 4)
+    assert router.indices == [1, 4, 4, 4]
+    # the pinned replica's tier keeps >= int4 precision
+    assert tiers[router.indices[0]].effective_bits >= 4.0
+
+
+def test_fleet_router_recovery_never_skips_a_rung():
+    tiers = default_tiers(4)
+    router = FleetRouter(tiers, 2, pinned=(), cooldown=2)
+    router.observe(1e9, [1.0, 1.0])
+    assert router.indices == [4, 4]
+    seen = [list(router.indices)]
+    for _ in range(40):
+        router.observe(0.0, [0.0, 0.0])
+        if list(router.indices) != seen[-1]:
+            seen.append(list(router.indices))
+    assert seen[-1] == [0, 0]
+    for prev, cur in zip(seen, seen[1:]):
+        for p, c in zip(prev, cur):
+            assert p - c in (0, 1), (prev, cur)   # one rung at a time
+    # int2 -> int8 recovery passed through every rung incl. int2+ep
+    r0_path = [s[0] for s in seen]
+    assert 3 in r0_path and 2 in r0_path and 1 in r0_path
+
+
+def test_fleet_router_hysteresis_no_thrash():
+    tiers = default_tiers(4)
+    router = FleetRouter(tiers, 2, pinned=(), cooldown=4)
+    changes = 0
+    last = tuple(router.indices)
+    for i in range(40):
+        load = 5.0 if i % 2 == 0 else 3.0   # oscillate around the 4.0 bar
+        router.observe(load, [load / 2] * 2)
+        if tuple(router.indices) != last:
+            changes += 1
+            last = tuple(router.indices)
+    # one initial downgrade; the oscillation never completes a cooldown,
+    # so the assignment holds instead of flapping
+    assert changes == 1
+    assert last.count(1) == 1 and last.count(0) == 1
+
+
+def test_fleet_router_assignment_sticky_when_loads_reorder():
+    tiers = default_tiers(4)
+    router = FleetRouter(tiers, 3, pinned=())
+    router.observe(9.0, [1.0, 2.0, 3.0])      # budget 2 -> r0 absorbs both
+    assert router.indices == [2, 0, 0]
+    # r0 becomes the hottest replica; the downgrade must NOT bounce to
+    # the now-coldest one (sticky fill order: already-downgraded first)
+    router.observe(9.0, [50.0, 1.0, 1.0])
+    assert router.indices == [2, 0, 0]
+
+
+def test_fleet_router_validates_thresholds():
+    tiers = default_tiers(4)
+    with pytest.raises(AssertionError):
+        FleetRouter(tiers, 2, thresholds=(1.0, 2.0))      # wrong length
+    with pytest.raises(AssertionError):
+        FleetRouter(tiers, 1, thresholds=(4.0, 3.0, 2.0, 1.0))  # unsorted
+
+
+# ---------------------------------------------------------------------------
+# fleet logic over stub replicas (dispatch, health, stragglers)
+# ---------------------------------------------------------------------------
+
+
+class StubReplica:
+    """Pure-python replica: finishes one request per step."""
+
+    def __init__(self, rid, tiers, *, clock=None, heartbeat=None):
+        self.rid = rid
+        self.tiers = tuple(tiers)
+        self.index = 0
+        self.alive = True
+        self.killed = False
+        self.wedged = False
+        self.monitor = None
+        self.heartbeat = heartbeat
+        self.clock = clock
+        self.step_cost = 0.0          # FakeClock seconds per step
+        self.dispatched = []
+        self._inflight = {}
+        self._order = []
+        if heartbeat is not None:
+            heartbeat.beat(0)
+
+    @property
+    def tier_name(self):
+        return self.tiers[self.index].name
+
+    def load(self):
+        return float(len(self._inflight))
+
+    def submit(self, req, now=None):
+        self._inflight[req.uid] = req
+        self._order.append(req.uid)
+        self.dispatched.append(req.uid)
+
+    def set_tier(self, index):
+        self.index = int(index)
+
+    def step(self, now=None):
+        if self.killed or not self.alive:
+            return {}
+        if self.clock is not None:
+            self.clock.t += self.step_cost
+        if self.wedged:
+            return {}
+        if self.heartbeat is not None:
+            self.heartbeat.beat(0)
+        if not self._order:
+            return {}
+        uid = self._order.pop(0)
+        req = self._inflight.pop(uid)
+        return {uid: np.arange(req.max_new_tokens, dtype=np.int32)}
+
+    def inflight(self):
+        return list(self._inflight.values())
+
+    def drain(self):
+        out = list(self._inflight.values())
+        self._inflight.clear()
+        self._order.clear()
+        return out
+
+    def kill(self):
+        self.killed = True
+
+    def failure_reason(self, heartbeat_timeout=None, now=None):
+        if self.killed:
+            return "killed"
+        if (heartbeat_timeout is not None and self.heartbeat is not None
+                and self.heartbeat.stale(heartbeat_timeout, now=now)):
+            return "heartbeat-stale"
+        return None
+
+    def close(self):
+        self.alive = False
+
+
+def _stub_fleet(n, *, tiers=None, clock=None, **kw):
+    tiers = tiers or default_tiers(4)
+    reps = [StubReplica(i, tiers, clock=clock) for i in range(n)]
+    fleet = Fleet(reps, tiers, clock=clock or FakeClock(), **kw)
+    return fleet, reps
+
+
+def test_fleet_dispatches_least_loaded(served):
+    cfg, _ = served
+    tiers = default_tiers(4)
+    fleet, reps = _stub_fleet(3, tiers=tiers,
+                              thresholds=_pinned_thresholds(tiers, 3))
+    # pre-load r0 (inflight only, so the fleet never sees it finish)
+    reps[0]._inflight["pre0"] = Request(uid="pre0",
+                                        prompt=np.zeros(4, np.int32),
+                                        max_new_tokens=1)
+    for req in _requests(cfg, 4):
+        fleet.submit(req)
+    fleet.step()
+    # r0 started loaded, so the queue drains onto r1/r2 first and only
+    # returns to r0 once the loads equalize
+    assert len(reps[1].dispatched) == 2 or len(reps[2].dispatched) == 2
+    assert len(reps[0].dispatched) <= 1
+
+
+def test_fleet_priority_lands_on_pinned_replica_under_overload(served):
+    cfg, _ = served
+    tiers = default_tiers(4)
+    steps = 3 * (len(tiers) - 1)
+    fleet, reps = _stub_fleet(3, tiers=tiers,
+                              thresholds=(0.5,) * steps, pinned=(0,))
+    reqs = _requests(cfg, 12, priority=(2, 7, 11))
+    for req in reqs:
+        fleet.submit(req)
+    fleet.step()
+    # the overload drove every unpinned replica to the ladder bottom
+    assert fleet.router.indices[1] == fleet.router.indices[2] == 4
+    assert fleet.router.indices[0] == 1           # pin floor: int4
+    for req in reqs:
+        if req.priority:
+            assert fleet.metrics.dispatch_replica[req.uid] == 0
+            # priority traffic never serves below the int4 pin floor
+            assert fleet.metrics.dispatch_tier_index[req.uid] <= 1
+    assert any(fleet.metrics.dispatch_replica[r.uid] != 0 for r in reqs
+               if not r.priority)
+    fleet.run_until_idle()
+    assert fleet.metrics.summary()["requests_lost"] == 0
+
+
+def test_fleet_priority_falls_back_when_pinned_replica_dies(served):
+    cfg, _ = served
+    tiers = default_tiers(4)
+    fleet, reps = _stub_fleet(3, tiers=tiers,
+                              thresholds=_pinned_thresholds(tiers, 3),
+                              pinned=(0,))
+    fleet.kill(0)
+    fleet.step()                                   # retires the pinned one
+    assert not reps[0].alive
+    # r1 busier but serving a better rung than r2
+    reps[1].submit(Request(uid="busy", prompt=np.zeros(4, np.int32),
+                           max_new_tokens=1))
+    fleet.router.indices = [0, 2, 4]
+    fleet.submit(Request(uid="pri", prompt=np.zeros(4, np.int32),
+                         max_new_tokens=1, priority=True))
+    fleet._dispatch(now=0.0)
+    # best-bits fallback: priority prefers precision over load
+    assert fleet.metrics.dispatch_replica["pri"] == 1
+
+
+def test_fleet_no_live_replicas_raises(served):
+    cfg, _ = served
+    tiers = default_tiers(4)
+    fleet, _ = _stub_fleet(2, tiers=tiers,
+                           thresholds=_pinned_thresholds(tiers, 2))
+    fleet.submit(_requests(cfg, 1)[0])
+    fleet.kill(0)
+    fleet.kill(1)
+    with pytest.raises(RuntimeError, match="no live replicas"):
+        fleet.step()
+
+
+def test_fleet_heartbeat_stale_drains_wedged_replica(served, tmp_path):
+    cfg, _ = served
+    clock = FakeClock()
+    tiers = default_tiers(4)
+    reps = [StubReplica(i, tiers, clock=clock,
+                        heartbeat=Heartbeat(str(tmp_path / f"hb{i}.json"),
+                                            clock=clock))
+            for i in range(2)]
+    fleet = Fleet(reps, tiers, thresholds=_pinned_thresholds(tiers, 2),
+                  heartbeat_timeout=5.0, clock=clock)
+    for req in _requests(cfg, 8):
+        fleet.submit(req)
+    fleet.step()
+    assert reps[1].inflight()
+    reps[1].wedged = True                 # hung but not dead: stops beating
+    for _ in range(4):
+        clock.t += 3.0
+        fleet.step()
+    assert not reps[1].alive
+    s = fleet.metrics.summary()
+    assert s["replica_failures"][0] == {"replica": 1,
+                                        "reason": "heartbeat-stale",
+                                        "time": pytest.approx(clock.t,
+                                                              abs=20.0)}
+    assert s["requeued_requests"] >= 1
+    fleet.run_until_idle()
+    assert fleet.metrics.summary()["requests_lost"] == 0
+
+
+def test_fleet_straggler_monitor_retires_replica(served):
+    cfg, _ = served
+    clock = FakeClock()
+    tiers = default_tiers(4)
+    fleet, reps = _stub_fleet(2, tiers=tiers, clock=clock,
+                              thresholds=_pinned_thresholds(tiers, 2),
+                              straggler_retire=1)
+    flagged = []
+    reps[1].monitor = StepMonitor(threshold=2.5, warmup_steps=2,
+                                  on_straggler=flagged.append)
+    reps[0].step_cost = reps[1].step_cost = 0.01
+    for req in _requests(cfg, 8):
+        fleet.submit(req)
+    for _ in range(4):                    # warm the EMA at healthy speed
+        fleet.step()
+    reps[1].step_cost = 1.0               # chronic straggler from here on
+    for i in range(4):
+        fleet.submit(Request(uid=f"late{i}", prompt=np.zeros(4, np.int32),
+                             max_new_tokens=1))
+    for _ in range(3):
+        fleet.step()
+    assert not reps[1].alive              # flagged then drained next step
+    assert flagged and flagged[0].step_time == pytest.approx(1.0)
+    s = fleet.metrics.summary()
+    assert s["replica_failures"][0]["reason"] == "straggler"
+    assert s["per_replica"]["1"]["straggler_events"] >= 1
+    fleet.run_until_idle()
+    assert fleet.metrics.summary()["requests_lost"] == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end fleets over real engines
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_two_replicas_token_identical_vs_single(served, single_results):
+    cfg, params = served
+    tiers = default_tiers(cfg.num_layers)
+    fleet = build_fleet(params, cfg, replicas=2, num_slots=2, max_len=32,
+                        thresholds=_pinned_thresholds(tiers, 2))
+    for req in _requests(cfg, 6):
+        fleet.submit(req)
+    results = fleet.run_until_idle()
+    fleet.close()
+    s = fleet.metrics.summary()
+    assert s["requests_lost"] == 0 and s["requests_completed"] == 6
+    # both replicas actually served traffic
+    assert all(s["per_replica"][rid]["requests"] > 0 for rid in ("0", "1"))
+    assert sorted(results) == sorted(single_results)
+    for uid in single_results:
+        np.testing.assert_array_equal(results[uid], single_results[uid])
+
+
+def test_fleet_kill_replica_requeues_with_zero_loss(served, single_results):
+    cfg, params = served
+    tiers = default_tiers(cfg.num_layers)
+    fleet = build_fleet(params, cfg, replicas=2, num_slots=2, max_len=32,
+                        thresholds=_pinned_thresholds(tiers, 2))
+    for req in _requests(cfg, 6):
+        fleet.submit(req)
+    fleet.step()
+    fleet.step()
+    victim_inflight = len(fleet.replicas[1].inflight())
+    assert victim_inflight > 0
+    fleet.kill(1)
+    results = fleet.run_until_idle()
+    fleet.close()
+    s = fleet.metrics.summary()
+    assert s["requests_lost"] == 0 and s["requests_completed"] == 6
+    assert s["requeued_requests"] == victim_inflight
+    assert s["replica_failures"][0]["reason"] == "killed"
+    # requeued requests replay from scratch on the survivor and the
+    # greedy decode reproduces the exact same tokens
+    for uid in single_results:
+        np.testing.assert_array_equal(results[uid], single_results[uid])
+
+
+@pytest.fixture(scope="module")
+def elastic_fleet_run(served):
+    """A 2-replica fleet under real load steps (tight thresholds force
+    mid-replay downgrades); shared by the occupancy + compile tests."""
+    cfg, params = served
+    tiers = default_tiers(cfg.num_layers)
+    steps = 2 * (len(tiers) - 1)
+    fleet = build_fleet(params, cfg, replicas=2, num_slots=2, max_len=32,
+                        thresholds=tuple(float(s + 1) for s in range(steps)),
+                        pinned=(0,), cooldown=2)
+    for req in _requests(cfg, 10):
+        fleet.submit(req)
+    fleet.run_until_idle()
+    yield fleet, tiers
+    fleet.close()
+
+
+def test_fleet_load_step_downgrades_some_replicas(elastic_fleet_run):
+    fleet, tiers = elastic_fleet_run
+    s = fleet.metrics.summary()
+    assert s["requests_lost"] == 0
+    low_tiers = {t.name for t in tiers[2:]}       # below int4
+    occ0 = s["per_replica"]["0"]["tier_occupancy"]
+    occ1 = s["per_replica"]["1"]["tier_occupancy"]
+    # the unpinned replica absorbed the downgrade budget...
+    assert set(occ1) & low_tiers
+    # ...while the pinned one never served below its int4 floor
+    assert set(occ0) <= {tiers[0].name, tiers[1].name}
+    assert s["tier_switches"] > 0
+    assert s["mean_effective_bits_min"] < 8.0
+
+
+def test_fleet_one_compile_per_representation_per_replica(elastic_fleet_run):
+    fleet, tiers = elastic_fleet_run
+    for rep in fleet.replicas:
+        if rep.engine.packed:
+            # packed tiers key per representation: the downgraded
+            # replica visited several, each compiled at most once
+            counts = assert_no_recompiles(rep.sched)
+        else:
+            # dequantized tiers share ONE closure (key None): every tier
+            # switch must stay a param swap, never a retrace
+            counts = assert_no_recompiles(rep.sched, expect_keys={None})
+        assert counts["total"] >= 1
+    if fleet.replicas[1].engine.packed:
+        assert len(fleet.replicas[1].sched._fns) >= 2
+
+
+# ---------------------------------------------------------------------------
+# fleet-managed scheduler mode
+# ---------------------------------------------------------------------------
+
+
+def test_managed_scheduler_external_set_tier(served):
+    cfg, params = served
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=2))
+    tiers = default_tiers(cfg.num_layers)
+    sched = eng.scheduler(managed=True, tiers=tiers)
+    assert sched.router is None and sched.tier_name == tiers[0].name
+    req = _requests(cfg, 1)[0]
+    sched.submit(req)
+    sched.run_until_idle()
+    assert req.uid in sched.results
+    sched.set_tier(tiers[1])
+    assert sched.tier_name == tiers[1].name
+    sched.set_tier(tiers[1])                      # revisit: no-op
+    assert sched.tier_name == tiers[1].name
+
+
+def test_managed_scheduler_rejects_router_knobs(served):
+    cfg, params = served
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=2))
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        eng.scheduler(managed=True, elastic=True)
+    with pytest.raises(ValueError, match="FleetRouter"):
+        eng.scheduler(managed=True, thresholds=(1.0, 2.0, 3.0, 4.0))
+
+
+def test_set_tier_requires_tier_cache(served):
+    cfg, params = served
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=2))
+    sched = eng.scheduler()                       # fixed tier
+    with pytest.raises(ValueError, match="fixed tier"):
+        sched.set_tier(default_tiers(cfg.num_layers)[1])
+
+
+def test_drain_requests_returns_originals_and_frees_slots(served):
+    cfg, params = served
+    eng = Engine(params, cfg, ServeConfig(bits=8, max_len=32, num_slots=2))
+    sched = eng.scheduler(managed=True, tiers=default_tiers(cfg.num_layers))
+    reqs = _requests(cfg, 4)
+    for req in reqs:
+        sched.submit(req)
+    sched.step()                                  # admit 2, queue 2
+    assert sched.active and sched.queue
+    drained = sched.drain_requests()
+    assert sorted(r.uid for r in drained) == sorted(r.uid for r in reqs)
+    assert all(d is r for d, r in zip(
+        sorted(drained, key=lambda r: r.uid),
+        sorted(reqs, key=lambda r: r.uid)))       # the ORIGINAL objects
+    assert not sched.active and not sched.queue
+    assert sched.pool.active_slots == []
+
+
+# ---------------------------------------------------------------------------
+# metrics + fault primitives (satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_edge_windows():
+    assert _percentile([], 50.0) == 0.0           # empty window: a metric
+    assert _percentile([], 95.0) == 0.0
+    for q in (0.0, 50.0, 95.0, 100.0):
+        assert _percentile([2.5], q) == 2.5       # single sample is every q
+    xs = [4.0, 1.0, 3.0, 2.0]
+    assert _percentile(xs, 0.0) == 1.0
+    assert _percentile(xs, 100.0) == 4.0
+    assert _percentile(xs, 50.0) == 2.5
+    # regression: negative q used to extrapolate BELOW the window min
+    assert _percentile(xs, -50.0) == 1.0
+    assert _percentile(xs, 400.0) == 4.0
+
+
+def test_serve_metrics_percentiles_on_empty_and_single_windows():
+    from repro.serve.metrics import ServeMetrics
+    m = ServeMetrics()
+    s = m.summary()
+    assert s["p50_ttft_s"] == 0.0 and s["p95_ttft_s"] == 0.0
+    m.on_submit("a", 1.0, 8)
+    m.on_admit("a", 1.5, "int8")
+    m.on_first_token("a", 2.0)
+    m.on_finish("a", 3.0, 4)
+    s = m.summary()
+    assert s["p50_ttft_s"] == pytest.approx(1.0)
+    assert s["p95_ttft_s"] == pytest.approx(1.0)  # == p50 for one sample
+
+
+def test_heartbeat_stale_and_torn_writes(tmp_path):
+    clock = FakeClock()
+    hb = Heartbeat(str(tmp_path / "hb.json"), clock=clock)
+    assert hb.stale(5.0)                          # never beaten
+    hb.beat(1)
+    assert not hb.stale(5.0)
+    clock.t = 10.0
+    assert hb.stale(5.0)                          # beat aged out
+    hb.beat(2)
+    assert not hb.stale(5.0)
+    assert hb.read()["step"] == 2
+    # torn write (the beater was SIGKILLed mid-write): unreadable IS stale
+    with open(hb.path, "w") as f:
+        f.write('{"step": 3, "ti')
+    assert hb.read() is None
+    assert hb.stale(5.0)
+
+
+def test_step_monitor_zero_ema_baseline_never_flags():
+    m = StepMonitor(warmup_steps=2)
+    # virtual-clock regime: every step measures 0.0s; a zero EMA carries
+    # no straggler information, so nothing may flag (regression: any
+    # positive duration after a zero baseline used to flag)
+    for i in range(5):
+        assert not m.record(i, 0.0)
+    assert not m.record(5, 1.0)
+
+
+def test_step_monitor_flags_and_invokes_callback():
+    events = []
+    m = StepMonitor(threshold=2.0, warmup_steps=2,
+                    on_straggler=events.append)
+    for i in range(4):
+        assert not m.record(i, 1.0)
+    assert m.record(4, 5.0)
+    assert len(events) == 1 and events[0].step == 4
+    assert events[0].ema == pytest.approx(1.0)
+    assert not m.record(5, 1.0)       # the straggler didn't poison the EMA
+
+
+def test_fleet_metrics_accounts_losses():
+    from repro.serve import FleetMetrics
+    m = FleetMetrics()
+    m.on_submit("a", 0.0, 8)
+    m.on_submit("b", 0.0, 8, priority=True)
+    m.on_dispatch("a", 0, 0, 0.1)
+    m.on_dispatch("b", 1, 1, 0.1)
+    m.on_requeue(["a"], 0, 0.5)
+    m.on_replica_failure(0, "killed", 0.5)
+    m.on_dispatch("a", 1, 1, 0.6)
+    m.on_finish("a", 1.0, 4)
+    m.on_step({1: "int4"}, {1: 1}, 6.0, 0)        # replica 0 already dead
+    s = m.summary()
+    assert s["requests_submitted"] == 2
+    assert s["requests_lost"] == 1                # "b" never finished
+    assert s["requeued_requests"] == 1
+    assert s["priority_requests"] == 1
+    assert s["replica_failures"][0]["reason"] == "killed"
+    assert s["per_replica"]["1"]["requests"] == 2  # a's requeue + b
+
+
+# ---------------------------------------------------------------------------
+# subprocess transport (true multi-process)
+# ---------------------------------------------------------------------------
+
+
+def test_subprocess_replica_roundtrip(served, single_results, tmp_path):
+    cfg, _ = served
+    rep = SubprocessReplica(0, arch=ARCH, reduced=True, num_slots=2,
+                            max_len=32,
+                            heartbeat_path=str(tmp_path / "hb.json"))
+    try:
+        reqs = _requests(cfg, 2)
+        for req in reqs:
+            rep.submit(req)
+        results = {}
+        for _ in range(200):
+            results.update(rep.step())
+            if len(results) == len(reqs):
+                break
+        assert sorted(results) == sorted(r.uid for r in reqs)
+        # the worker rebuilt identical weights from (arch, seed), so its
+        # greedy decode matches the in-process baseline token for token
+        for req in reqs:
+            np.testing.assert_array_equal(results[req.uid],
+                                          single_results[req.uid])
+        assert rep.failure_reason(heartbeat_timeout=600.0) is None
+        tiers = default_tiers(cfg.num_layers)
+        rep.set_tier(1)
+        assert rep.tier_name == tiers[1].name
+    finally:
+        rep.close()
+    assert rep.proc.poll() == 0                   # clean worker exit
+
+
+def test_subprocess_fleet_kill_zero_loss(served, single_results):
+    cfg, _ = served
+    tiers = default_tiers(cfg.num_layers)
+    reps = [SubprocessReplica(i, arch=ARCH, reduced=True, num_slots=2,
+                              max_len=32)
+            for i in range(2)]
+    fleet = Fleet(reps, tiers, thresholds=_pinned_thresholds(tiers, 2))
+    try:
+        for req in _requests(cfg, 6):
+            fleet.submit(req)
+        fleet.step()
+        fleet.step()
+        assert reps[1].inflight()
+        fleet.kill(1)                             # a REAL SIGKILL
+        results = fleet.run_until_idle()
+    finally:
+        fleet.close()
+    s = fleet.metrics.summary()
+    assert s["requests_lost"] == 0 and s["requests_completed"] == 6
+    assert s["requeued_requests"] >= 1
+    assert s["replica_failures"][0]["reason"] == "exited"
+    for uid in single_results:
+        np.testing.assert_array_equal(results[uid], single_results[uid])

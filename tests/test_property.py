@@ -114,3 +114,59 @@ def test_packed_linear_materialize_consistent(seed):
         expect = quant.quant_dequant(w, 8, r, axis=0)
         np.testing.assert_allclose(np.asarray(w_hat), np.asarray(expect),
                                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fleet router invariants (serve/fleet.py)
+# ---------------------------------------------------------------------------
+
+from repro.serve.router import FleetRouter, default_tiers  # noqa: E402
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+def test_fleet_assignments_monotone_in_load(seed, num_replicas):
+    """For any fixed fill order, rising load only deepens assignments."""
+    rng = np.random.default_rng(seed)
+    router = FleetRouter(default_tiers(4), num_replicas, pinned=(0,))
+    order = [int(r) for r in rng.permutation(num_replicas)]
+    prev = router.desired_indices(0.0, order)
+    for load in np.cumsum(rng.uniform(0.0, 7.0, size=30)):
+        cur = router.desired_indices(float(load), order)
+        assert all(c >= p for c, p in zip(cur, prev)), (load, prev, cur)
+        prev = cur
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.integers(2, 4), st.integers(1, 4))
+def test_fleet_recovery_never_skips_a_rung(seed, num_replicas, cooldown):
+    """Under ANY load sequence a replica recovers one rung at a time --
+    int2 always passes through int2+ep on the way back up."""
+    rng = np.random.default_rng(seed)
+    router = FleetRouter(default_tiers(4), num_replicas, pinned=(0,),
+                         cooldown=cooldown)
+    prev = list(router.indices)
+    for _ in range(120):
+        router.observe(float(rng.uniform(0.0, 60.0)),
+                       [float(x) for x in rng.uniform(0.0, 10.0,
+                                                      size=num_replicas)])
+        for p, c in zip(prev, router.indices):
+            assert c - p >= -1, (prev, router.indices)
+        prev = list(router.indices)
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_fleet_mean_bits_non_increasing_under_rising_load(seed,
+                                                          num_replicas):
+    """Monotone budget + sticky deepest-first fill order: while the
+    global load rises, the fleet-wide mean effective bits never rise."""
+    rng = np.random.default_rng(seed)
+    router = FleetRouter(default_tiers(4), num_replicas, pinned=(0,))
+    bits = []
+    for load in np.cumsum(rng.uniform(0.0, 5.0, size=40)):
+        router.observe(float(load),
+                       [float(x) for x in rng.uniform(0.0, 10.0,
+                                                      size=num_replicas)])
+        bits.append(router.mean_effective_bits())
+    assert all(b2 <= b1 + 1e-9 for b1, b2 in zip(bits, bits[1:])), bits
