@@ -35,6 +35,11 @@ Runs reported side by side on the SAME trace:
     the acceptance bookkeeping -- acceptance rate, mean accepted
     prefix length, verify-model steps vs emitted tokens -- is the
     reported speed story;
+  * fused-attend A/B -- the same trace replayed fused-vs-gather per KV
+    attend width (`attn_kernel_ab`): the fused Pallas kernel (in-tile
+    Matryoshka slice + online softmax off the int8 page store) stays
+    token-exact vs the gather+dequant fallback at every width while the
+    analytic per-token KV READ bytes walk the 8 > 4 > 2 staircase;
   * TP-sharded A/B  -- the same per-tier pinned packed replays on a
     forced 8-device `(data, model)` host mesh (`packed_ab_tp`, one
     subprocess per model-parallel degree so XLA_FLAGS can pin the
@@ -698,6 +703,71 @@ def run_kv_ab(params, cfg, args) -> dict:
     }
 
 
+def run_attn_kernel_ab(params, cfg, args) -> dict:
+    """`attn_kernel_ab`: fused Pallas paged attention vs the gather+
+    dequant fallback as reported numbers.
+
+    The SAME Poisson trace replays through two engines per attend width
+    (kv_bits in fp/8/4/2) differing ONLY in `--attn-kernel`: the fused
+    kernel attends straight off the int8 page store (in-tile Matryoshka
+    slice + online softmax, no bf16 cache view in HBM) while the gather
+    path materializes the dequantized slot view first. Reported per
+    width: decode tok/s for both kernels, `token_exact_vs_gather`
+    (the fused path is a pure performance knob -- checked per request),
+    and the analytic per-token KV READ bytes of the attend slice, which
+    must form the staircase int8 > int4 > int2 next to the constant
+    RESIDENT bytes (the fused kernel's whole point: attending at r bits
+    reads r-bit bytes while the parent store stays int8).
+    """
+    base = dict(bits=8, max_len=args.prompt_len + args.gen_tokens,
+                num_slots=args.num_slots, page_size=args.page_size)
+    trace = poisson_trace(cfg, requests=args.requests,
+                          prompt_len=args.prompt_len,
+                          gen_tokens=args.gen_tokens,
+                          rate=args.arrival_rate, seed=args.seed)
+    per_bits = {}
+    for kv_bits in ("fp", 8, 4, 2):
+        runs = {}
+        for kernel in ("fused", "gather"):
+            engine = Engine(params, cfg, ServeConfig(
+                **base, kv_bits=kv_bits, attn_kernel=kernel))
+            results, summary = _warm_and_replay(
+                engine, args, trace,
+                section=f"attn_kernel_ab.{kv_bits}.{kernel}")
+            assert len(results) == args.requests
+            runs[kernel] = (results, summary)
+        fused_res, fused_sum = runs["fused"]
+        gather_res, gather_sum = runs["gather"]
+        per_bits[str(kv_bits)] = {
+            "fused": {"throughput_tok_s": fused_sum["throughput_tok_s"],
+                      "mean_ttft_s": fused_sum["mean_ttft_s"],
+                      "wall_s": fused_sum["wall_s"]},
+            "gather": {"throughput_tok_s": gather_sum["throughput_tok_s"],
+                       "mean_ttft_s": gather_sum["mean_ttft_s"],
+                       "wall_s": gather_sum["wall_s"]},
+            "token_exact_vs_gather": all(
+                np.array_equal(fused_res[uid], gather_res[uid])
+                for uid in gather_res),
+            "kv_read_bytes_per_token": fused_sum["kv"]["bytes_read_per_token"],
+            "kv_resident_bytes_per_token":
+                fused_sum["kv"]["resident_bytes_per_token"],
+        }
+    read_stairs = [per_bits[b]["kv_read_bytes_per_token"]
+                   for b in ("8", "4", "2")]
+    assert all(a > b for a, b in zip(read_stairs, read_stairs[1:])), \
+        f"KV read-bytes staircase not strictly decreasing: {read_stairs}"
+    return {
+        "weights": "int8 (dequantized fixed tier)",
+        "per_bits": per_bits,
+        "kv_read_bytes_per_token": {b: per_bits[b]["kv_read_bytes_per_token"]
+                                    for b in ("fp", "8", "4", "2")},
+        "kv_read_bytes_strictly_decreasing": all(
+            a > b for a, b in zip(read_stairs, read_stairs[1:])),
+        "token_exact_all_widths": all(
+            info["token_exact_vs_gather"] for info in per_bits.values()),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_1_7b")
@@ -723,6 +793,9 @@ def main(argv=None):
     ap.add_argument("--skip-kv-ab", action="store_true",
                     help="skip the paged-KV A/B section (per-bits KV "
                          "replays + the prefix-cache on/off replay)")
+    ap.add_argument("--skip-attn-ab", action="store_true",
+                    help="skip the fused-vs-gather paged-attention A/B "
+                         "section (attn_kernel_ab)")
     ap.add_argument("--moe-arch", default="granite_moe_1b_a400m",
                     help="MoE config for the second packed A/B "
                          "('none' skips it)")
@@ -884,6 +957,21 @@ def main(argv=None):
               f"ttft_cold={on['mean_ttft_cold_s']:.3f}s "
               f"(off: ttft={off['mean_ttft_s']:.3f}s)")
 
+    attn_kernel_ab = None
+    if not args.skip_attn_ab:
+        print("== fused-vs-gather paged-attention A/B ==")
+        attn_kernel_ab = run_attn_kernel_ab(params, cfg, args)
+        for b, info in attn_kernel_ab["per_bits"].items():
+            print(f"  kv_bits {b:5s} "
+                  f"read_bytes/token={info['kv_read_bytes_per_token']:6d} "
+                  f"fused_tok/s={info['fused']['throughput_tok_s']:.1f} "
+                  f"gather_tok/s={info['gather']['throughput_tok_s']:.1f} "
+                  f"token_exact={info['token_exact_vs_gather']}")
+        print(f"  KV read-bytes staircase strictly decreasing: "
+              f"{attn_kernel_ab['kv_read_bytes_strictly_decreasing']}; "
+              f"token-exact at all widths: "
+              f"{attn_kernel_ab['token_exact_all_widths']}")
+
     packed_ab_tp = None
     if not args.skip_packed_ab and args.tp_model_parallel:
         print(f"== TP-sharded per-tier packed replays "
@@ -935,6 +1023,7 @@ def main(argv=None):
         "packed_ab_ep": packed_ab_ep,
         "specdecode_ab": specdecode_ab,
         "kv_ab": kv_ab,
+        "attn_kernel_ab": attn_kernel_ab,
         "packed_ab_tp": packed_ab_tp,
         "fleet_ab": fleet_ab,
         # per-section closure trace counts, each verified by

@@ -2,6 +2,8 @@
 
 quant_matmul  -- packed r-bit dequant matmul (serving/decode path)
 fused_quantize -- one-pass minmax + multi-precision slice (QAT path)
+paged_attend  -- fused paged decode attention: in-tile Matryoshka KV
+                 unpack/slice/FMA + online softmax off the page store
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper + dispatch), ref.py (pure-jnp oracle).
 """

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core import packing
 from repro.kernels import ref
 from repro.kernels.fused_quantize import fused_quantize_pallas
+from repro.kernels.paged_attention import paged_attend_pallas
 from repro.kernels.quant_matmul import (quant_matmul_experts_pallas,
                                         quant_matmul_pallas)
 
@@ -121,6 +122,30 @@ def quant_matmul_experts(x, words, alpha, beta, *, bits, overflow_words=None,
         overflow_words,
         bits=bits, block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
         slice_bits=slice_bits, slice_ep=slice_ep)
+
+
+def paged_attend(q, cache_l, ptab, pos, *, kv_bits=None,
+                 interpret: bool | None = None):
+    """Fused paged decode attention off one layer's page store.
+
+    The hot-path twin of `attention.gather_slot_view` +
+    `attention._grouped_attend`: instead of materializing the slot's
+    dequantized (B, cache_len, kh, hd) view in HBM, the Pallas kernel
+    unpacks, MSB-slices (static `kv_bits`), dequantizes, and folds each
+    page into an online softmax in-tile. q: (B, kh, G, hd) kv-head-major
+    query groups; cache_l one layer's page-store leaves (kp/vp [+
+    ks/kb/vs/vb]); ptab the sentinel-padded page table; pos (B,) slot
+    positions. Returns fp32 (B, kh, G, hd).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if "ks" in cache_l:
+        return paged_attend_pallas(
+            q, ptab, pos, cache_l["kp"], cache_l["vp"], cache_l["ks"],
+            cache_l["kb"], cache_l["vs"], cache_l["vb"],
+            kv_bits=kv_bits, interpret=interpret)
+    return paged_attend_pallas(q, ptab, pos, cache_l["kp"], cache_l["vp"],
+                               kv_bits=None, interpret=interpret)
 
 
 def _plane_fields(plane, bits):
@@ -242,4 +267,4 @@ def serve_linear(x, packed: packing.PackedLinear, bits: int,
 
 
 __all__ = ["quant_matmul", "quant_matmul_experts", "plane_matmul",
-           "fused_quantize", "serve_linear", "ref"]
+           "fused_quantize", "serve_linear", "paged_attend", "ref"]

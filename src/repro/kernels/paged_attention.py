@@ -1,0 +1,219 @@
+"""Pallas TPU kernel: fused Matryoshka paged decode attention.
+
+The decode hot path of the paged KV cache (PR 7) used to gather every
+page of a slot, dequantize the ENTIRE int8 store to a bf16 view in HBM
+(`attention.gather_slot_view` -> `dequant_kv_rows`), and only then run
+the grouped-einsum attend -- paying back the quantization byte saving
+(x2-4 amplified) in per-step read traffic. This kernel attends
+**directly from the page store**: per (slot, kv-head, page) tile it
+
+  1. DMAs one page of uint8 parent codes (+ per-row fp32 alpha/beta),
+     the physical page id resolved by the BLOCK INDEX MAP from the
+     scalar-prefetched page table (indirection is data: page remaps
+     never recompile, hole sentinels clamp to a masked dummy page),
+  2. MSB-slices the r-bit attend view at the closure-static `kv_bits`
+     on the parent grid (Eq. 4/6: int4/int2 read the SAME bytes -- the
+     Matryoshka contract applied in-register),
+  3. dequantizes with one alpha/beta FMA per (row, head) on the VPU,
+  4. accumulates a flash-style online softmax (running max + rescaled
+     sum in VMEM scratch) with per-slot length masking.
+
+The (B, cache_len, kh, hd) bf16 view is never materialized; page
+blocks past a slot's high-water position are skipped (`pl.when`), not
+attended-then-masked. Hole pages (page id == num_pages) are always
+past the high-water mark -- slots allocate pages contiguously -- so
+the skip covers them; the index-map clamp only keeps the dummy DMA in
+bounds. Grid order (slot, kv-head, page) keeps the page dim innermost
+and sequential, so the VMEM scratch accumulator carries across pages
+of one (slot, head) pair exactly like the K-innermost matmul grid.
+
+On a (data, model) mesh kv_heads shard over 'model', so every tile's
+page/scale reads stay shard-local and the kernel needs no cross-shard
+traffic (the grid's kv-head dim simply shrinks per shard).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# Pages always store 8-bit parent codes; the attend view is an MSB
+# slice (mirrors models.attention.KV_PARENT_BITS).
+KV_PARENT_BITS = 8
+
+
+def slice_dequant_tile(codes, alpha, beta, kv_bits: int):
+    """fp32 rows of one page tile: in-register Matryoshka slice + FMA.
+
+    codes: (page_size, hd) uint8 parent codes; alpha/beta: (page_size, 1)
+    fp32 per-(row, head) scale/offset. The r-bit MSB slice runs on the
+    PARENT grid -- `(2q + 2^(c-r)) >> (c-r+1)`, clamp, then `<< (c-r)`
+    -- exactly `core.quant.slice_bits`, so the r-independent beta
+    offsets apply unchanged and the result is bit-identical to
+    `attention.dequant_kv_rows` at fp32 (the kernel-vs-gather oracle
+    tests assert equality, not closeness).
+    """
+    q = codes.astype(jnp.int32)
+    c, r = KV_PARENT_BITS, kv_bits
+    if r != c:
+        q = (2 * q + (1 << (c - r))) >> (c - r + 1)
+        q = jnp.minimum(q, (1 << r) - 1)
+        q = q << (c - r)        # back to the parent grid (Eq. 4/6)
+    return alpha * q.astype(jnp.float32) - beta
+
+
+def _online_softmax_block(q, k, v, start, pos, acc_ref, m_ref, l_ref,
+                          scale):
+    """Fold one page of keys/values into the running softmax state.
+
+    q: (G, hd) fp32; k/v: (page_size, hd) fp32; start: first token
+    index of this page; pos: the slot's current position (rows > pos
+    masked). acc/m/l are VMEM scratch carried across the page grid dim:
+    m the running row max, l the rescaled exp-sum, acc the rescaled
+    weighted V accumulator -- the flash recurrence, finalized as acc/l.
+    """
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ki = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(ki <= pos, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _kernel_quant(ptab_ref, pos_ref, q_ref, kp_ref, ks_ref, kb_ref,
+                  vp_ref, vs_ref, vb_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, kv_bits, page_size, scale):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[b]
+
+    @pl.when(j * page_size <= pos)
+    def _attend():
+        k = slice_dequant_tile(kp_ref[0, :, 0, :], ks_ref[0], kb_ref[0],
+                               kv_bits)
+        v = slice_dequant_tile(vp_ref[0, :, 0, :], vs_ref[0], vb_ref[0],
+                               kv_bits)
+        _online_softmax_block(q_ref[0, 0].astype(jnp.float32), k, v,
+                              j * page_size, pos, acc_ref, m_ref, l_ref,
+                              scale)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        # l >= exp(0): row 0 of page 0 is always visible (pos >= 0).
+        o_ref[...] = (acc_ref[...] / l_ref[...]).reshape(o_ref.shape)
+
+
+def _kernel_fp(ptab_ref, pos_ref, q_ref, kp_ref, vp_ref, o_ref, acc_ref,
+               m_ref, l_ref, *, page_size, scale):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[b]
+
+    @pl.when(j * page_size <= pos)
+    def _attend():
+        k = kp_ref[0, :, 0, :].astype(jnp.float32)
+        v = vp_ref[0, :, 0, :].astype(jnp.float32)
+        _online_softmax_block(q_ref[0, 0].astype(jnp.float32), k, v,
+                              j * page_size, pos, acc_ref, m_ref, l_ref,
+                              scale)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / l_ref[...]).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_bits", "interpret"))
+def paged_attend_pallas(
+    q: jax.Array,                 # (B, kh, G, hd) queries, kv-head-major
+    ptab: jax.Array,              # (B, pages_per_slot) int32 page table
+    pos: jax.Array,               # (B,) int32 per-slot write position
+    kp: jax.Array,                # (P, page_size, kh, hd) codes / rows
+    vp: jax.Array,
+    ks: jax.Array | None = None,  # (P, page_size, kh) fp32 scale planes
+    kb: jax.Array | None = None,
+    vs: jax.Array | None = None,
+    vb: jax.Array | None = None,
+    *,
+    kv_bits: int | None = None,   # static attend width (None: fp pages)
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused paged decode attention straight off the page store.
+
+    Page id == P is the hole sentinel: the index map clamps it to P-1
+    and the `j * page_size <= pos` skip guarantees the dummy tile is
+    never folded in (holes only exist past the slot's high-water page).
+    Returns fp32 (B, kh, G, hd) -- reshape to (B, 1, kh*G*hd) for the
+    grouped-attend output layout of `attention._grouped_attend`.
+    """
+    B, kh, G, hd = q.shape
+    P, page_size = kp.shape[0], kp.shape[1]
+    pages_per_slot = ptab.shape[1]
+    scale = hd ** -0.5
+    quantized = ks is not None
+
+    def q_map(b, h, j, ptab_ref, pos_ref):
+        return (b, h, 0, 0)
+
+    def page_map(b, h, j, ptab_ref, pos_ref):
+        return (jnp.minimum(ptab_ref[b, j], P - 1), 0, h, 0)
+
+    def scale_map(b, h, j, ptab_ref, pos_ref):
+        return (jnp.minimum(ptab_ref[b, j], P - 1), 0, h)
+
+    kv_spec = pl.BlockSpec((1, page_size, 1, hd), page_map)
+    sc_spec = pl.BlockSpec((1, page_size, 1), scale_map)
+    if quantized:
+        in_specs = [pl.BlockSpec((1, 1, G, hd), q_map),
+                    kv_spec, sc_spec, sc_spec, kv_spec, sc_spec, sc_spec]
+        operands = (q, kp, ks, kb, vp, vs, vb)
+        body = functools.partial(
+            _kernel_quant,
+            kv_bits=KV_PARENT_BITS if kv_bits is None else kv_bits,
+            page_size=page_size, scale=scale)
+    else:
+        in_specs = [pl.BlockSpec((1, 1, G, hd), q_map), kv_spec, kv_spec]
+        operands = (q, kp, vp)
+        body = functools.partial(_kernel_fp, page_size=page_size,
+                                 scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, kh, pages_per_slot),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, hd), q_map),
+        scratch_shapes=[pltpu.VMEM((G, hd), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32)],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, kh, G, hd), jnp.float32),
+        interpret=interpret,
+    )(ptab.astype(jnp.int32), pos.astype(jnp.int32), *operands)

@@ -40,3 +40,43 @@ def fused_quantize_ref(w, *, bitwidths, parent_bits: int = 8,
                             extra_precision=extra_precision).astype(w.dtype)
         for r in bitwidths
     )
+
+
+def paged_attend_ref(q, ptab, pos, kp, vp, ks=None, kb=None, vs=None,
+                     vb=None, *, kv_bits=None):
+    """Dense oracle for the fused paged-attention kernel: gather every
+    page through the table (holes fill zeros), dequantize the r-bit MSB
+    view of the whole slot, and run a DENSE masked softmax -- the exact
+    math the online-softmax recurrence must reproduce. q: (B, kh, G,
+    hd); returns fp32 (B, kh, G, hd)."""
+    from repro.kernels.paged_attention import KV_PARENT_BITS, NEG_INF
+
+    B, kh, G, hd = q.shape
+    page_size = kp.shape[1]
+    rows = ptab.shape[1] * page_size
+
+    def gather(a):
+        g = jnp.take(a, ptab, axis=0, mode="fill", fill_value=0)
+        return g.reshape((B, rows) + a.shape[2:])
+
+    if ks is None:
+        k = gather(kp).astype(jnp.float32)
+        v = gather(vp).astype(jnp.float32)
+    else:
+        bits = KV_PARENT_BITS if kv_bits is None else kv_bits
+
+        def deq(codes, alpha, beta):
+            grid = quant.slice_bits(codes.astype(jnp.int32),
+                                    KV_PARENT_BITS, bits)
+            return (alpha[..., None] * grid.astype(jnp.float32)
+                    - beta[..., None])
+
+        k = deq(gather(kp), gather(ks), gather(kb))
+        v = deq(gather(vp), gather(vs), gather(vb))
+    s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32), k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    mask = jnp.arange(rows)[None, None, None, :] <= pos[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgk,bkhd->bhgd", p, v,
+                      preferred_element_type=jnp.float32)

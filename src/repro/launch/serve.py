@@ -80,7 +80,8 @@ def build_engine(args, cfg):
         extra_precision=args.extra_precision, use_packed=args.packed,
         num_slots=args.num_slots, page_size=args.page_size,
         kv_bits=kv_bits, kv_page_size=args.kv_page_size or None,
-        prefix_cache=args.prefix_cache), mesh=mesh)
+        prefix_cache=args.prefix_cache,
+        attn_kernel=args.attn_kernel), mesh=mesh)
 
 
 def build_trace(args, cfg):
@@ -139,6 +140,15 @@ def main(argv=None):
     ap.add_argument("--kv-page-size", type=int, default=0,
                     help="tokens per KV page in paged mode (defaults to "
                          "--page-size)")
+    ap.add_argument("--attn-kernel", default="fused",
+                    choices=["fused", "gather"],
+                    help="paged decode attend path: 'fused' (default) "
+                         "runs the Pallas paged-attention kernel straight "
+                         "off the int8 page store (in-tile Matryoshka "
+                         "unpack/slice/FMA + online softmax, no bf16 "
+                         "cache materialization); 'gather' keeps the "
+                         "materialize-then-attend fallback (the oracle "
+                         "path). Ignored outside paged mode")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix prompt-prefix reuse over the paged KV "
                          "store: admissions sharing a previously-served "

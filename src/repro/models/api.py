@@ -101,16 +101,18 @@ def decode_step(params, state, token, pos, cfg, *, bits=None):
 
 
 def decode_step_slots(params, state, token, pos, cfg, *, bits=None,
-                      ptab=None, kv_bits=None):
+                      ptab=None, kv_bits=None, attn_kernel: str = "fused"):
     """Slot-array decode step: pos is (B,) int32, one position per slot.
 
     The continuous-batching scheduler's inner step -- see
-    lm.decode_step_slots. Attention-cache families only.
+    lm.decode_step_slots (`attn_kernel` statically picks the paged
+    fused-kernel vs gather read path). Attention-cache families only.
     """
     if cfg.family == "encdec":
         raise NotImplementedError("slot-wise decode for encdec")
     return lm.decode_step_slots(params, state, token, pos, cfg, bits=bits,
-                                ptab=ptab, kv_bits=kv_bits)
+                                ptab=ptab, kv_bits=kv_bits,
+                                attn_kernel=attn_kernel)
 
 
 def verify_step_slots(params, state, tokens, pos, cfg, *, bits=None,

@@ -73,33 +73,45 @@ def _project_qkv(p, x, cfg, *, bits, qcfg, positions=None):
     return q, k, v
 
 
-def _sdpa(q, k, v, *, causal: bool, q_offset: int = 0):
-    """Attention on one (q-block, kv-prefix) pair, GROUPED einsum form.
+def _grouped_attend(q, k, v, mask):
+    """THE grouped-einsum attend: the single oracle every softmax
+    attention path in this module routes through (and the correctness
+    reference for the fused paged kernel's online softmax).
 
     K/V are never repeated across query groups: q is viewed as
-    (B, Sq, KH, G, D) and contracted against k (B, Sk, KH, D) directly.
+    (B, S, KH, G, D) and contracted against k (B, Sk, KH, D) directly.
     This matters under tensor parallelism -- repeating the KV tensor
     forces GSPMD to reshard (all-gather) the cache; the grouped einsum
     keeps the cache in its stored sharding and only psums the small
     partial logits when D is model-sharded. fp32 accumulation via
     preferred_element_type (inputs stay bf16 on the wire).
+
+    mask: broadcastable to the (B, KH, G, S, Sk) logits (True = keep)
+    or None. Returns fp32 (B, S, H, D).
     """
-    B, Sq, H, D = q.shape
+    B, S, H, D = q.shape
     KH = k.shape[2]
     G = H // KH
     scale = D**-0.5
-    qg = q.reshape(B, Sq, KH, G, D)
+    qg = q.reshape(B, S, KH, G, D)
     logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
                         preferred_element_type=jnp.float32) * scale
-    if causal:
-        qi = jnp.arange(Sq)[:, None] + q_offset
-        ki = jnp.arange(k.shape[1])[None, :]
-        logits = jnp.where(ki[None, None, None] <= qi[None, None, None],
-                           logits, NEG_INF)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
                    preferred_element_type=jnp.float32)
-    return o.reshape(B, Sq, H, D).astype(v.dtype)
+    return o.reshape(B, S, H, D)
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Attention on one (q-block, kv-prefix) pair."""
+    mask = None
+    if causal:
+        qi = jnp.arange(q.shape[1])[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        mask = (ki <= qi)[None, None, None]
+    return _grouped_attend(q, k, v, mask).astype(v.dtype)
 
 
 def causal_attention(q, k, v, chunk: int = 1024):
@@ -181,16 +193,9 @@ def _attend_slots(q, k_cache, v_cache, qpos, h, kh, hd):
     ki <= qpos[b, j]. Returns fp32 (B, T, h*hd).
     """
     B, T = q.shape[:2]
-    G = h // kh
-    qg = q.reshape(B, T, kh, G, hd)
-    scale = hd**-0.5
-    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(q.dtype),
-                        preferred_element_type=jnp.float32) * scale
     mask = jnp.arange(k_cache.shape[1])[None, None, :] <= qpos[:, :, None]
-    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
-    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache,
-                   preferred_element_type=jnp.float32)
+    o = _grouped_attend(q, k_cache.astype(q.dtype), v_cache,
+                        mask[:, None, None, :, :])
     return o.reshape(B, T, h * hd)
 
 
@@ -268,16 +273,8 @@ def decode_attention(
     )
     # grouped einsum: the cache is consumed in its stored sharding; no
     # head-repeat, no resharding, fp32 accumulation only.
-    G = h // kh
-    qg = q.reshape(B, 1, kh, G, hd)
-    scale = hd**-0.5
-    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(q.dtype),
-                        preferred_element_type=jnp.float32) * scale
     mask = (jnp.arange(k_cache.shape[1]) <= pos)[None, None, None, None, :]
-    logits = jnp.where(mask, logits, NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
-    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache,
-                   preferred_element_type=jnp.float32)
+    o = _grouped_attend(q, k_cache.astype(q.dtype), v_cache, mask)
     o = o.reshape(B, 1, h * hd)
     out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg, kind="attn")
     return out, {"k": k_cache, "v": v_cache}
@@ -350,10 +347,14 @@ def dequant_kv_rows(codes, alpha, beta, bits: int, dtype):
     """Dequantize the r-bit MSB view of stored 8-bit codes.
 
     `quant.slice_bits` re-scales the sliced codes to the parent grid,
-    so one fused multiply-add recovers the row at any r."""
+    so one fused multiply-add recovers the row at any r. The FMA runs
+    directly in the attend dtype (codes are integers <= 255, exact in
+    bf16): no fp32 intermediate of the full cache view is materialized
+    before the cast, and at dtype=float32 the result is bit-identical
+    to the old fp32-then-cast path."""
     grid = quant.slice_bits(codes.astype(jnp.int32), KV_PARENT_BITS, bits)
-    return (alpha[..., None] * grid.astype(jnp.float32)
-            - beta[..., None]).astype(dtype)
+    return (alpha[..., None].astype(dtype) * grid.astype(dtype)
+            - beta[..., None].astype(dtype))
 
 
 def _page_coords(ptab, positions, page_size: int):
@@ -417,15 +418,25 @@ def gather_slot_view(cache_l, ptab, *, kv_bits=None, dtype=jnp.bfloat16):
 
 def paged_decode_attention_slots(
     p, x, cache_l, ptab, pos, cfg, *, bits, qcfg: QuantConfig, kv_bits=None,
+    attn_kernel: str = "fused",
 ):
     """`decode_attention_slots` over one layer's paged cache.
 
     x: (B, 1, d); ptab: (B, pages_per_slot) page table rows of the
     slots being stepped; pos: (B,) per-slot write index. Writes the new
-    row through the page table, then attends against the gathered slot
-    view -- with pages_per_slot * page_size == cache_len the reduction
-    shape (and, in fp mode, every elementwise value) matches the dense
-    slot path exactly."""
+    row through the page table, then attends. `attn_kernel` (static)
+    picks the read path:
+
+    * "fused"  -- the Pallas kernel (`kernels.ops.paged_attend`)
+      attends straight off the int8 page store: per-page tiles unpack,
+      MSB-slice at `kv_bits`, FMA-dequantize in-register and fold into
+      an online softmax; the dequantized (B, cache_len, kh, hd) view is
+      never materialized.
+    * "gather" -- the original gather+dequant fallback
+      (`gather_slot_view` + `_grouped_attend`); with pages_per_slot *
+      page_size == cache_len the reduction shape (and, in fp mode,
+      every elementwise value) matches the dense slot path exactly.
+    """
     B = x.shape[0]
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     pos = pos.astype(jnp.int32)
@@ -437,9 +448,15 @@ def paged_decode_attention_slots(
     page_size = cache_l["kp"].shape[1]
     pids, rows = _page_coords(ptab, pos[:, None], page_size)
     cache_l = write_pages(cache_l, k_new, v_new, pids, rows)
-    k_view, v_view = gather_slot_view(cache_l, ptab, kv_bits=kv_bits,
-                                      dtype=x.dtype)
-    o = _attend_slots(q, k_view, v_view, pos[:, None], h, kh, hd)
+    if attn_kernel == "fused":
+        from repro.kernels import ops as _ops
+        qg = q[:, 0].reshape(B, kh, h // kh, hd)
+        o = _ops.paged_attend(qg, cache_l, ptab, pos,
+                              kv_bits=kv_bits).reshape(B, 1, h * hd)
+    else:
+        k_view, v_view = gather_slot_view(cache_l, ptab, kv_bits=kv_bits,
+                                          dtype=x.dtype)
+        o = _attend_slots(q, k_view, v_view, pos[:, None], h, kh, hd)
     out = cm.qlinear(p["wo"], o.astype(x.dtype), bits=bits, qcfg=qcfg,
                      kind="attn")
     return out, cache_l

@@ -481,7 +481,7 @@ def decode_step(params, state, token, pos, cfg, *, bits=None):
 
 
 def decode_step_slots(params, state, token, pos, cfg, *, bits=None,
-                      ptab=None, kv_bits=None):
+                      ptab=None, kv_bits=None, attn_kernel: str = "fused"):
     """One decode step over a SLOT ARRAY with per-slot positions.
 
     token: (B, 1) int32; pos: (B,) int32, each slot's current write
@@ -495,7 +495,9 @@ def decode_step_slots(params, state, token, pos, cfg, *, bits=None,
     PAGED cache from `init_paged_state`: each layer writes/attends
     through the page table instead of a dense per-slot array, and
     `kv_bits` picks the r-bit Matryoshka attend view of the stored int8
-    codes (None = full precision pages).
+    codes (None = full precision pages), and `attn_kernel` (static) the
+    paged read path -- "fused" attends straight off the page store via
+    the Pallas kernel, "gather" keeps the gather+dequant fallback.
 
     Supported for attention-cache families (dense / vlm / moe); the
     recurrent families keep the shared-position `decode_step` path.
@@ -521,7 +523,8 @@ def decode_step_slots(params, state, token, pos, cfg, *, bits=None,
         else:
             a, new_cache = attn.paged_decode_attention_slots(
                 lp["attn"], cm.rmsnorm(lp["norm1"], x), cache_l, ptab, pos,
-                cfg, bits=b, qcfg=qcfg, kv_bits=kv_bits)
+                cfg, bits=b, qcfg=qcfg, kv_bits=kv_bits,
+                attn_kernel=attn_kernel)
         x = x + a
         if is_moe:
             y, _ = ffn_mod.apply_moe(lp["moe"], cm.rmsnorm(lp["norm2"], x),

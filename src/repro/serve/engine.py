@@ -539,6 +539,9 @@ class ServeConfig:
     kv_bits: object = None
     kv_page_size: int | None = None  # defaults to page_size when paged
     prefix_cache: bool = False       # radix prompt-prefix page sharing
+    attn_kernel: str = "fused"       # paged decode attend: "fused" Pallas
+                                     # kernel off the page store, "gather"
+                                     # the materialize-then-attend fallback
 
     def kv_config(self):
         """`kv_cache.KVCacheConfig` for the paged path, or None."""
@@ -548,7 +551,8 @@ class ServeConfig:
         return KVCacheConfig(
             kv_bits=self.kv_bits if self.kv_bits is not None else "fp",
             page_size=self.kv_page_size or self.page_size,
-            prefix_cache=self.prefix_cache)
+            prefix_cache=self.prefix_cache,
+            attn_kernel=self.attn_kernel)
 
 
 def _packed_backend_ok() -> bool:

@@ -269,16 +269,25 @@ class KVCacheConfig:
     page_size: tokens per physical page (None -> ServeConfig.page_size).
     prefix_cache: hash prompt-prefix pages and share them read-only
       across requests (refcounts + copy-on-write on first divergence).
+    attn_kernel: paged decode attend path -- "fused" (default) runs the
+      Pallas kernel straight off the page store (in-tile unpack/slice/
+      FMA + online softmax), "gather" the materialize-then-attend
+      fallback. Engine-static: it never joins the step-closure key.
     """
 
     kv_bits: object = None
     page_size: int | None = None
     prefix_cache: bool = False
+    attn_kernel: str = "fused"
 
     def __post_init__(self):
         if self.kv_bits not in (None, "fp", 2, 4, 8, "auto"):
             raise ValueError(
                 f"kv_bits must be None/'fp'/8/4/2/'auto', got {self.kv_bits!r}")
+        if self.attn_kernel not in ("fused", "gather"):
+            raise ValueError(
+                f"attn_kernel must be 'fused' or 'gather', got "
+                f"{self.attn_kernel!r}")
 
     @property
     def quantized(self) -> bool:
@@ -295,13 +304,44 @@ class KVCacheConfig:
     def bytes_per_token(self, cfg) -> int:
         """KV bytes one attend step READS per cached token: k + v rows
         across layers at the sliced attend width (codes + fp32
-        scale/offset), or the full-precision row in fp mode."""
+        scale/offset), or the full-precision row in fp mode. Headline
+        number of the metrics `kv` section; `bytes_read_per_token` is
+        the same accounting parameterized by representation key, and
+        `resident_bytes_per_token` the width-independent storage cost."""
         kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         L = cfg.num_layers
         if not self.quantized:
             itemsize = 2 if cfg.param_dtype == "bfloat16" else 4
             return 2 * L * kh * hd * itemsize
         bits = 8 if self.kv_bits == "auto" else int(self.kv_bits)
+        return 2 * L * kh * (hd * bits // 8 + 8)
+
+    def resident_bytes_per_token(self, cfg) -> int:
+        """KV bytes one cached token OCCUPIES in the page store.
+
+        Quantized mode always stores the full 8-bit parent codes plus
+        the per-(row, head) fp32 alpha/beta -- the Matryoshka contract:
+        every attend width reads the SAME bytes, so residency is
+        attend-width-independent. fp mode has no code/scale split."""
+        kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        L = cfg.num_layers
+        if not self.quantized:
+            itemsize = 2 if cfg.param_dtype == "bfloat16" else 4
+            return 2 * L * kh * hd * itemsize
+        return 2 * L * kh * (hd + 8)
+
+    def bytes_read_per_token(self, cfg, rep_key=None) -> int:
+        """Analytic KV bytes one attend step consumes per cached token
+        at the attend width of `rep_key` (the fused kernel's payload:
+        r-bit sliced codes + fp32 scale/offset). Strictly decreasing in
+        the attend width 8 > 4 > 2 while residency stays constant --
+        the byte saving the in-tile slice actually banks."""
+        kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        L = cfg.num_layers
+        bits = self.attend_bits(rep_key)
+        if bits is None:
+            itemsize = 2 if cfg.param_dtype == "bfloat16" else 4
+            return 2 * L * kh * hd * itemsize
         return 2 * L * kh * (hd * bits // 8 + 8)
 
 

@@ -131,15 +131,29 @@ class ServeMetrics:
 
     # -- paged KV cache ----------------------------------------------------
 
-    def on_kv_config(self, *, bytes_per_token: int, kv_bits, prefix_cache):
+    def on_kv_config(self, *, bytes_per_token: int, kv_bits, prefix_cache,
+                     resident_bytes_per_token: int | None = None,
+                     bytes_read_per_token: int | None = None,
+                     attn_kernel: str | None = None):
         """Static paged-cache config (fed once at scheduler construction
-        and after reset): the per-token KV footprint claim is a computed
-        number, not a flag echo."""
+        and after reset): the per-token KV footprint claims are computed
+        numbers, not flag echoes. `resident_bytes_per_token` is what a
+        cached token occupies (parent int8 codes + scales, attend-width
+        independent); `bytes_read_per_token` the analytic per-step read
+        payload at the attend width -- the number the fused kernel's
+        in-tile slice shrinks while residency stays put."""
         self.kv_config = {
             "kv_bits": "fp" if kv_bits in (None, "fp") else kv_bits,
             "bytes_per_token": int(bytes_per_token),
             "prefix_cache": bool(prefix_cache),
         }
+        if resident_bytes_per_token is not None:
+            self.kv_config["resident_bytes_per_token"] = int(
+                resident_bytes_per_token)
+        if bytes_read_per_token is not None:
+            self.kv_config["bytes_read_per_token"] = int(bytes_read_per_token)
+        if attn_kernel is not None:
+            self.kv_config["attn_kernel"] = str(attn_kernel)
 
     def on_admit_kv(self, uid, prompt_tokens: int, shared_tokens: int):
         """Per-admission prefix-cache outcome: `shared_tokens` prompt

@@ -287,7 +287,10 @@ class ContinuousBatchingScheduler:
             self._copy_fn = jax.jit(kv_cache.copy_pages, donate_argnums=(0,))
             self.metrics.on_kv_config(
                 bytes_per_token=kv.bytes_per_token(cfg),
-                kv_bits=kv.kv_bits, prefix_cache=kv.prefix_cache)
+                kv_bits=kv.kv_bits, prefix_cache=kv.prefix_cache,
+                resident_bytes_per_token=kv.resident_bytes_per_token(cfg),
+                bytes_read_per_token=kv.bytes_read_per_token(cfg),
+                attn_kernel=kv.attn_kernel)
         if mesh is not None:
             from repro.runtime import sharding as shard_lib
             self._state_shardings = shard_lib.tree_shardings(
@@ -404,6 +407,10 @@ class ContinuousBatchingScheduler:
             return fns
         cfg = self._rep_cfg(key)
         state_shardings = self._state_shardings
+        # engine-static attend path: "fused" (Pallas off the page store)
+        # or "gather" -- never changes mid-engine, so it does NOT join
+        # fkey; the one-compile-per-(rep, "kv", kv_bits) contract holds.
+        ak = self.kv.attn_kernel
 
         def prefill(p, st, toks, ptab, lengths):
             logits, st = api.prefill_paged(
@@ -420,7 +427,7 @@ class ContinuousBatchingScheduler:
         def decode(p, st, tok, pos, ptab):
             logits, st = api.decode_step_slots(p, st, tok, pos, cfg,
                                                bits=None, ptab=ptab,
-                                               kv_bits=kvb)
+                                               kv_bits=kvb, attn_kernel=ak)
             return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
 
         if self.mesh is not None:
@@ -525,10 +532,12 @@ class ContinuousBatchingScheduler:
                                          seq_axes)
             return pred, m, st
 
+        ak = self.kv.attn_kernel if paged else None
+
         def draft_paged(p, st, tok, pos, ptab):
             logits, st = api.decode_step_slots(p, st, tok, pos, cfg,
                                                bits=None, ptab=ptab,
-                                               kv_bits=kvb)
+                                               kv_bits=kvb, attn_kernel=ak)
             return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
 
         def verify_paged(p, st, toks, pos, ptab):
@@ -638,7 +647,11 @@ class ContinuousBatchingScheduler:
         if self.kv is not None:
             self.metrics.on_kv_config(
                 bytes_per_token=self.kv.bytes_per_token(self.cfg),
-                kv_bits=self.kv.kv_bits, prefix_cache=self.kv.prefix_cache)
+                kv_bits=self.kv.kv_bits, prefix_cache=self.kv.prefix_cache,
+                resident_bytes_per_token=self.kv.resident_bytes_per_token(
+                    self.cfg),
+                bytes_read_per_token=self.kv.bytes_read_per_token(self.cfg),
+                attn_kernel=self.kv.attn_kernel)
         self.prefill_calls = 0
         if self.router is not None:
             self.router.reset()

@@ -113,7 +113,8 @@ class JitSiteRegistry:
         "explicitly allowlisted -- a stray per-request jit is a "
         "recompile bomb, not a style nit")
 
-    SCOPE = ("src/repro/serve/", "src/repro/models/")
+    SCOPE = ("src/repro/serve/", "src/repro/models/",
+             "src/repro/kernels/paged_attention.py")
     REGISTERED_BUILDERS = frozenset(
         {"_step_fns", "_paged_step_fns", "_spec_fns"})
 

@@ -72,7 +72,7 @@ def check_serve_flags() -> list[str]:
 # sections the field guide must document even when the committed
 # BENCH_serve.json predates them (e.g. regenerated with a --skip-*
 # flag): the dynamic dict-key scan below only sees what was committed
-REQUIRED_BENCH_SECTIONS = ("kv_ab", "fleet_ab")
+REQUIRED_BENCH_SECTIONS = ("kv_ab", "fleet_ab", "attn_kernel_ab")
 
 
 def check_bench_sections() -> list[str]:
